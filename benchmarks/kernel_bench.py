@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks: wall time of the XLA paths on CPU (what this
+container can measure) + the decode-cache byte model CLOVER targets.
+
+The Pallas kernels are TPU-targeted (validated in interpret mode by the
+test suite; interpret timings are meaningless).  What IS meaningful on
+CPU: (a) the XLA chunked fallbacks' relative scaling, (b) the decode
+bytes-per-token model at different CLOVER ranks — the paper's actual
+claim ("inference becomes memory-bound; pruning shrinks the cache").
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.parallel.hlo import HBM_BW
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(verbose: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # attention scaling in asymmetric width (the CLOVER shape class)
+    B, S, H, KV = 2, 256, 8, 4
+    for dq, dv in ((64, 64), (32, 64), (32, 32), (16, 16)):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, dq))
+        k = jax.random.normal(ks[1], (B, S, KV, dq))
+        v = jax.random.normal(ks[2], (B, S, KV, dv))
+        f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v))
+        us = _time(f, q, k, v)
+        rows.append(("attention", f"dq{dq}_dv{dv}", us))
+
+    # decode bytes/token at CLOVER ranks (the paper's KV-cache win)
+    T, KVh, d = 32768, 8, 128
+    for keep in (1.0, 0.75, 0.5, 0.25):
+        r = int(d * keep)
+        cache_bytes = T * KVh * (r + r) * 2          # bf16 K+V per seq
+        t_stream_us = cache_bytes / HBM_BW * 1e6     # one-token roofline
+        rows.append(("decode_cache", f"keep{keep:.2f}",
+                     round(t_stream_us, 2)))
+
+    # wkv6 chunked scaling in T
+    Hh, d = 4, 32
+    for T2 in (128, 512, 2048):
+        ks = jax.random.split(key, 5)
+        r = jax.random.normal(ks[0], (1, Hh, T2, d))
+        kk = jax.random.normal(ks[1], (1, Hh, T2, d)) * 0.5
+        vv = jax.random.normal(ks[2], (1, Hh, T2, d))
+        lw = -jnp.exp(jax.random.normal(ks[3], (1, Hh, T2, d)) * 0.5)
+        u = jax.random.normal(ks[4], (Hh, d)) * 0.1
+        from repro.models.rwkv import wkv6_chunked
+        s0 = jnp.zeros((1, Hh, d, d))
+        f = jax.jit(lambda *a: wkv6_chunked(*a))
+        us = _time(f, r, kk, vv, lw, u, s0)
+        rows.append(("wkv6", f"T{T2}", us))
+
+    if verbose:
+        print("name,case,us_per_call")
+        for n, c, us in rows:
+            print(f"{n},{c},{us:.1f}")
+    checks = {
+        # pruned-width attention is never slower than full width
+        "asym_attention_scales": rows[3][2] <= rows[0][2] * 1.1,
+        # decode roofline scales linearly with kept rank
+        "cache_bytes_linear": abs(rows[5][2] / rows[4][2] - 0.75) < 0.05,
+    }
+    return {"rows": rows, "checks": checks}
+
+
+if __name__ == "__main__":
+    print(run()["checks"])

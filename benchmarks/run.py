@@ -1,0 +1,41 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``          # all
+``PYTHONPATH=src python -m benchmarks.run table1``   # one
+Each module returns {..., "checks": {name: bool}}; the driver reports
+every check and exits non-zero if any reproduced claim fails.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = ("table1_pruning", "table2_peft", "fig2_spectrum",
+           "fig3_trainfree", "fig4_projection", "fig56_rank",
+           "kernel_bench")
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    selected = [m for m in MODULES
+                if not argv or any(a in m for a in argv)]
+    failures = []
+    for name in selected:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        print(f"\n=== {name} " + "=" * (60 - len(name)))
+        t0 = time.time()
+        out = mod.run(verbose=True)
+        dt = time.time() - t0
+        for check, ok in out["checks"].items():
+            status = "PASS" if ok else "FAIL"
+            print(f"  [{status}] {check}")
+            if not ok:
+                failures.append(f"{name}:{check}")
+        print(f"  ({dt:.1f}s)")
+    print("\n" + ("ALL CHECKS PASS" if not failures
+                  else f"FAILURES: {failures}"))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+"""Paper Table 2: CLOVER-S vs LoRA / DoRA / PiSSA at matched budgets.
+
+The paper fine-tunes LLaMA on 8 commonsense tasks; at CPU scale we
+fine-tune the pretrained tiny-GPT2 onto a SHIFTED synthetic task (new
+pattern library = new "domain") and compare adaptation quality (PPL on
+the new domain) at comparable trainable-parameter budgets.
+
+Reproduced claims:
+  1. CLOVER-S (full-rank update in every head) adapts better than
+     rank-r LoRA at the same (or fewer) trainable params;
+  2. PiSSA > LoRA (principal init), CLOVER >= PiSSA;
+  3. after merge-back, CLOVER's inference graph is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (data_for, perplexity, pretrain_base, train,
+                               tiny_gpt2)
+from repro.core import (clover_decompose, merge_clover, PeftConfig,
+                        init_adapters, materialize, pissa_residual,
+                        count_params, partition)
+from repro.data import SyntheticConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import forward
+from repro.optim import AdamWConfig
+from repro.train.step import TrainConfig, make_opt_state, make_train_step
+
+FT_STEPS = 80
+
+
+def _train_adapters(params, cfg, pcfg, data, *, steps, lr):
+    """Generic adapter-training loop (differentiates the adapter tree)."""
+    key = jax.random.PRNGKey(42)
+    adapters = init_adapters(params, pcfg, key)
+    frozen = (pissa_residual(params, adapters, pcfg)
+              if pcfg.method == "pissa" else params)
+
+    from repro.optim import adamw_init, adamw_update
+    opt = adamw_init(adapters)
+    ocfg = AdamWConfig(lr=lr, weight_decay=0.0)
+
+    def loss_fn(ad, tokens, labels):
+        eff = materialize(frozen, ad, pcfg)
+        logits, aux = forward(eff, cfg, tokens)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+        return jnp.mean(nll) + sum(aux.values())
+
+    @jax.jit
+    def step(ad, opt, tokens, labels):
+        l, g = jax.value_and_grad(loss_fn)(ad, tokens, labels)
+        ad, opt, _ = adamw_update(g, opt, ad, ocfg)
+        return ad, opt, l
+
+    for i in range(steps):
+        b = data.batch_at(i)
+        adapters, opt, l = step(adapters, opt, jnp.asarray(b["tokens"]),
+                                jnp.asarray(b["labels"]))
+    return materialize(frozen, adapters, pcfg), count_params(adapters)
+
+
+def run(verbose: bool = True):
+    params, cfg, _ = pretrain_base()
+    # the NEW domain: same family, different pattern library
+    new_data = data_for(cfg, seed=99)
+    before = perplexity(params, cfg, new_data)
+
+    results = {}
+    # --- LoRA / DoRA / PiSSA at the CLOVER-matched budget (paper A.2:
+    # equal trainable params; rank 16 here == H*d^2*2 + up blocks) ------
+    for method in ("lora", "dora", "pissa"):
+        pcfg = PeftConfig(method=method, rank=16,
+                          alpha=16.0 if method != "pissa" else 1.0)
+        lr = 2e-3 if method != "pissa" else 1e-4   # paper: PiSSA ~15x lower
+        eff, n_train = _train_adapters(params, cfg, pcfg, new_data,
+                                       steps=FT_STEPS, lr=lr)
+        results[method] = {"ppl": perplexity(eff, cfg, new_data),
+                           "trainable": n_train}
+
+    # --- CLOVER-S -------------------------------------------------------
+    p2, cfg2, _ = clover_decompose(params, cfg, peft=True)
+    tr, _ = partition(p2)
+    p2, _ = train(p2, cfg2, new_data, steps=FT_STEPS, lr=5e-3,
+                  peft_mode=True)
+    merged, cfg3 = merge_clover(p2, cfg2)
+    results["clover"] = {"ppl": perplexity(merged, cfg3, new_data),
+                         "trainable": count_params(tr)}
+
+    # --- full fine-tuning reference --------------------------------------
+    pf, _ = train(params, cfg, new_data, steps=FT_STEPS, lr=1e-3)
+    results["full_ft"] = {"ppl": perplexity(pf, cfg, new_data),
+                          "trainable": count_params(params)}
+
+    if verbose:
+        print(f"before adaptation: ppl={before:.2f}")
+        for k, v in results.items():
+            print(f"{k:8s} ppl={v['ppl']:8.2f} trainable={v['trainable']}")
+    checks = {
+        "all_adapt": all(v["ppl"] < before for v in results.values()),
+        "clover_beats_lora": results["clover"]["ppl"]
+        < results["lora"]["ppl"],
+        "budget_matched": results["clover"]["trainable"]
+        <= results["lora"]["trainable"],
+    }
+    return {"before": before, "results": results, "checks": checks}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(out["checks"])

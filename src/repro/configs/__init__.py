@@ -1,0 +1,39 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full assigned config; every config also
+exposes ``.reduced()`` for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, MoEConfig, CloverConfig  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeConfig, cell_applicable  # noqa: F401
+
+_MODULES = {
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    # the paper's own testbed (not in the assigned pool)
+    "gpt2-xl": "repro.configs.gpt2_xl",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "gpt2-xl"]
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {name: get_config(name) for name in _MODULES}

@@ -1,0 +1,282 @@
+"""Architecture configuration dataclasses.
+
+Every assigned architecture is expressed as an ``ArchConfig``.  The model
+zoo (``repro.models``) is entirely config-driven: a single decoder builder
+consumes these and produces init/apply functions, so CLOVER, sharding, and
+the launchers never special-case an architecture by name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# Mixer kinds a layer can use.
+MIXER_ATTN = "attn"
+MIXER_MAMBA = "mamba"
+MIXER_RWKV = "rwkv"
+
+# MLP kinds.
+MLP_DENSE = "dense"
+MLP_MOE = "moe"
+MLP_RWKV = "rwkv_ffn"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """GShard-style top-k mixture of experts."""
+
+    n_experts: int
+    top_k: int
+    n_shared: int = 0            # always-on shared experts (DeepSeek/Qwen style)
+    d_expert: int = 0            # per-expert FFN hidden size (0 -> cfg.d_ff)
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+    def padded_experts(self, ep: int) -> int:
+        """Experts padded up to a multiple of the expert-parallel degree."""
+        return ((self.n_experts + ep - 1) // ep) * ep
+
+
+@dataclass(frozen=True)
+class CloverConfig:
+    """CLOVER decomposition / pruning / fine-tuning switches.
+
+    ``qk_rank``/``vo_rank`` are the retained ranks after pruning
+    (0 = full head_dim, i.e. decomposed but unpruned).
+    """
+
+    enabled: bool = False
+    qk_rank: int = 0
+    vo_rank: int = 0
+    finetune_s: bool = False      # keep S as trainable per-head matrices
+    up_block: int = 64            # MLP.Up block size for intra-layer decomposition
+    # Rank snapping for TPU tiling (sublane multiple).
+    rank_multiple: int = 8
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+
+    # Positional encoding of the attention path.
+    rope: bool = True
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0      # fraction of head_dim that is rotated
+    learned_pos: bool = False    # GPT-2 style absolute positions
+    max_position: int = 524288
+
+    # Layer pattern: one (mixer, mlp) pair per position in the repeating
+    # period.  n_layers must be divisible by len(pattern).
+    pattern: Tuple[Tuple[str, str], ...] = ((MIXER_ATTN, MLP_DENSE),)
+
+    moe: Optional[MoEConfig] = None
+    clover: CloverConfig = field(default_factory=CloverConfig)
+
+    # Activation for dense MLPs: "swiglu" | "gelu" | "geglu"
+    mlp_act: str = "swiglu"
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    attn_logit_softcap: float = 0.0
+
+    # Mamba (hybrid archs).
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0       # 0 -> ceil(d_model / 16)
+
+    # RWKV6.
+    rwkv_head_dim: int = 64
+
+    # Modality frontend: "none" | "audio" | "vision".  Non-none frontends
+    # are stubs per the assignment: input_specs() provides precomputed
+    # frame/patch embeddings which are concatenated before the text tokens.
+    frontend: str = "none"
+    frontend_len: int = 0        # number of frontend embedding positions
+    frontend_dim: int = 0        # embedding dim delivered by the stub (== d_model)
+
+    # Numerics.
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    # KV-cache storage dtype ("" -> compute_dtype).  float8_e4m3fn halves
+    # decode HBM traffic on top of CLOVER rank pruning (beyond-paper; the
+    # paper names quantization-compose as future work).  Values are
+    # upcast to compute dtype at the attention einsum.
+    kv_cache_dtype: str = ""
+
+    # Token-mixing kernel implementation:
+    #   "xla"       — einsum / chunked-jnp paths (default; what the
+    #                 dry-run lowers, and fastest on CPU)
+    #   "pallas"    — Pallas TPU kernels (compiled; TPU runtime)
+    #   "interpret" — Pallas kernels in interpret mode (CPU validation)
+    kernel_impl: str = "xla"
+
+    # Unroll the layer stack (python loop) instead of lax.scan.  Used by
+    # the dry-run so cost_analysis counts every layer (XLA counts a
+    # `while` body ONCE, understating flops/collectives by ~n_blocks).
+    # Training keeps scan: O(period) HLO and compile time.
+    unroll_layers: bool = False
+
+    # Grouped activation checkpointing: save the residual-stream carry
+    # every `remat_group` blocks and recompute inside the group during
+    # backward.  Carry memory scales 1/g at ~(g-1)/g extra block
+    # recompute — the deep-model (62-layer deepseek) memory lever.
+    remat_group: int = 1
+
+    # Whether long_500k is runnable (sub-quadratic / state-space path).
+    supports_long_context: bool = False
+
+    # Pad the embedding/LM-head vocab dim up to this multiple so it
+    # shards on the model axis (49155- and 92553-sized vocabs would
+    # otherwise replicate the (B, S, V) logits on every device).  Padded
+    # ids are masked to -inf in the logits; labels never reference them.
+    pad_vocab_to: int = 1
+
+    # ---- derived helpers -------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        m = max(1, self.pad_vocab_to)
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.n_layers % self.period == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern period {self.period}")
+        return self.n_layers // self.period
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def mamba_dt_rank_(self) -> int:
+        return self.mamba_dt_rank if self.mamba_dt_rank else max(1, (self.d_model + 15) // 16)
+
+    @property
+    def rwkv_n_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def qk_dim(self) -> int:
+        """Per-head Q/K projection width (CLOVER-pruned rank or head_dim)."""
+        if self.clover.enabled and self.clover.qk_rank:
+            return self.clover.qk_rank
+        return self.head_dim_
+
+    @property
+    def vo_dim(self) -> int:
+        if self.clover.enabled and self.clover.vo_rank:
+            return self.clover.vo_rank
+        return self.head_dim_
+
+    @property
+    def rope_dims(self) -> int:
+        """Number of rotated dims per head (partial RoPE support)."""
+        if not self.rope:
+            return 0
+        r = int(self.head_dim_ * self.rotary_pct)
+        return (r // 2) * 2
+
+    def uses_mixer(self, kind: str) -> bool:
+        return any(m == kind for m, _ in self.pattern)
+
+    def n_params(self, active_only: bool = False) -> int:
+        """Approximate parameter count (used for MODEL_FLOPS roofline)."""
+        D, H, KV = self.d_model, self.n_heads, self.n_kv_heads
+        dq, dv = self.qk_dim, self.vo_dim
+        total = self.vocab_size * D  # embeddings
+        if not self.tie_embeddings:
+            total += self.vocab_size * D
+        per_pattern = []
+        for mixer, mlp in self.pattern:
+            p = 2 * D  # two norms
+            if mixer == MIXER_ATTN:
+                p += D * H * dq + D * KV * dq + D * KV * dv + H * dv * D
+            elif mixer == MIXER_MAMBA:
+                dI, dS = self.mamba_d_inner, self.mamba_d_state
+                dt = self.mamba_dt_rank_
+                p += D * 2 * dI + dI * self.mamba_d_conv
+                p += dI * (dt + 2 * dS) + dt * dI + dI * dS + dI + dI * D
+            elif mixer == MIXER_RWKV:
+                p += 4 * D * D + D * D  # r,k,v,g,out
+                p += 2 * 64 * D          # w lora (approx)
+            if mlp == MLP_DENSE:
+                mult = 3 if self.mlp_act in ("swiglu", "geglu") else 2
+                p += mult * D * self.d_ff
+            elif mlp == MLP_MOE:
+                de = self.moe.d_expert or self.d_ff
+                mult = 3 if self.mlp_act in ("swiglu", "geglu") else 2
+                if active_only:
+                    p += (self.moe.top_k + self.moe.n_shared) * mult * D * de
+                else:
+                    p += (self.moe.n_experts + self.moe.n_shared) * mult * D * de
+                p += D * self.moe.n_experts  # router
+            elif mlp == MLP_RWKV:
+                p += 2 * D * self.d_ff + D * D
+            per_pattern.append(p)
+        total += self.n_blocks * sum(per_pattern)
+        return total
+
+    # ---- reduced config for CPU smoke tests ------------------------------
+    def reduced(self, **overrides) -> "ArchConfig":
+        """Same family/topology, tiny sizes — runnable on 1 CPU core."""
+        moe = self.moe
+        if moe is not None:
+            moe = dataclasses.replace(
+                moe, n_experts=min(moe.n_experts, 4),
+                top_k=min(moe.top_k, 2), n_shared=min(moe.n_shared, 1),
+                d_expert=64 if moe.d_expert else 0)
+        small = dict(
+            n_layers=self.period * min(self.n_blocks, 2),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=max(1, 4 * self.n_kv_heads // self.n_heads),
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            max_position=1024,
+            moe=moe,
+            mamba_dt_rank=8,
+            rwkv_head_dim=32,
+            frontend_len=min(self.frontend_len, 8) if self.frontend_len else 0,
+            frontend_dim=128 if self.frontend != "none" else 0,
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+def jamba_pattern(attn_period: int = 8, attn_offset: int = 4,
+                  moe_period: int = 2, moe_offset: int = 1) -> Tuple[Tuple[str, str], ...]:
+    """Jamba's interleave: 1 attention layer per `attn_period`, MoE every
+    `moe_period` layers.  Returns one full period (lcm)."""
+    period = attn_period  # lcm(8, 2) == 8
+    pat = []
+    for i in range(period):
+        mixer = MIXER_ATTN if i % attn_period == attn_offset else MIXER_MAMBA
+        mlp = MLP_MOE if i % moe_period == moe_offset else MLP_DENSE
+        pat.append((mixer, mlp))
+    return tuple(pat)

@@ -1,0 +1,41 @@
+"""Assigned input shapes and (arch x shape) cell applicability.
+
+LM transformer shapes are seq_len x global_batch.  ``decode_*``/``long_*``
+lower ``serve_step`` (one new token against a KV cache of ``seq_len``),
+NOT ``train_step``.  ``long_500k`` requires a sub-quadratic token-mixing
+path and is only run for SSM/hybrid archs (see DESIGN.md §5); pure
+full-attention archs skip it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(arch_cfg, shape: ShapeConfig) -> bool:
+    """Whether (arch x shape) is a runnable cell.
+
+    long_500k needs sub-quadratic attention (SSM / hybrid with
+    sequence-sharded KV); skipped otherwise per the assignment, noted in
+    DESIGN.md.  All assigned archs are decoder-style so decode shapes
+    always apply otherwise.
+    """
+    if shape.name == "long_500k":
+        return arch_cfg.supports_long_context
+    return True

@@ -1,0 +1,129 @@
+"""Spectrum / projection analytics backing Figures 2, 4, 5, 6.
+
+All functions are pure JAX on host-resident weights; they power the
+benchmark scripts and the DESIGN.md claims:
+
+  * Fig 2  — CLOVER singular spectra vs vanilla per-dim L2 products:
+             the orthogonalized spectrum concentrates energy in few
+             directions (``energy_topk``, ``importance_curves``).
+  * Fig 4  — projection mass of data features onto LoRA-random /
+             PiSSA-top-r / CLOVER-all directions (``projection_mass``).
+  * Fig 5  — rank of the fine-tuning update ΔW (``delta_spectrum``).
+  * Fig 6  — intruder dimensions: top singular vectors of the tuned
+             weight with no counterpart in the base weight
+             (``intruder_dims``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.decompose import svd_lowrank_product
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2: importance curves
+# ---------------------------------------------------------------------------
+
+def qk_curves(attn: Params, G: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(clover, vanilla) importance per K dim, each (KV, d) sorted desc.
+
+    clover  = singular values of the grouped product (what CLOVER prunes on)
+    vanilla = grouped L2-norm products ||wq_i|| * ||wk_i|| (what magnitude
+              pruning prunes on), sorted for comparability.
+    """
+    wq, wk = attn["wq"], attn["wk"]
+    D, H, d = wq.shape
+    KV = wk.shape[1]
+    A = wq.transpose(1, 0, 2).reshape(KV, G * D, d)
+    B = wk.transpose(1, 0, 2)
+    _, S, _ = jax.vmap(svd_lowrank_product)(A, B)
+    nq = jnp.linalg.norm(wq, axis=0).reshape(KV, G, d).sum(1)
+    nk = jnp.linalg.norm(wk, axis=0)
+    vanilla = jnp.sort(nq * nk, axis=-1)[:, ::-1]
+    return S, vanilla
+
+
+def vo_curves(attn: Params, G: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    wv, wo = attn["wv"], attn["wo"]
+    D, KV, d = wv.shape
+    H = wo.shape[0]
+    A = wv.transpose(1, 0, 2)
+    Bt = wo.reshape(KV, G, d, -1).transpose(0, 1, 3, 2).reshape(KV, G * D, d)
+    _, S, _ = jax.vmap(svd_lowrank_product)(A, Bt)
+    nv = jnp.linalg.norm(wv, axis=0)
+    no = jnp.linalg.norm(wo, axis=2).reshape(KV, G, d).sum(1)
+    vanilla = jnp.sort(nv * no, axis=-1)[:, ::-1]
+    return S, vanilla
+
+
+def energy_topk(spectrum: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Fraction of squared mass in the top-k entries (already sorted)."""
+    sq = jnp.square(spectrum)
+    return jnp.sum(sq[..., :k], -1) / jnp.maximum(jnp.sum(sq, -1), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: projection of data features onto adapter directions
+# ---------------------------------------------------------------------------
+
+def projection_mass(X: jnp.ndarray, dirs: jnp.ndarray,
+                    weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Share of feature energy captured by each direction.
+
+    X: (n, D) activations; dirs: (D, r) columns (need not be complete);
+    weights: optional per-direction scaling (singular values — the
+    paper's point 2: the model amplifies large-singular-value directions).
+    Returns (r,) fractions of total projected energy.
+    """
+    proj = X.astype(jnp.float32) @ dirs.astype(jnp.float32)     # (n, r)
+    e = jnp.sum(jnp.square(proj), axis=0)
+    if weights is not None:
+        e = e * jnp.square(weights.astype(jnp.float32))
+    return e / jnp.maximum(jnp.sum(e), 1e-30)
+
+
+def coverage(X: jnp.ndarray, dirs: jnp.ndarray) -> float:
+    """Fraction of total feature energy lying INSIDE span(dirs) — the
+    quantity whose complement drives LoRA/PiSSA's zero-gradient risk."""
+    Q, _ = jnp.linalg.qr(dirs.astype(jnp.float32))
+    Xf = X.astype(jnp.float32)
+    inside = jnp.sum(jnp.square(Xf @ Q))
+    total = jnp.sum(jnp.square(Xf))
+    return float(inside / jnp.maximum(total, 1e-30))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5/6: update rank & intruder dimensions
+# ---------------------------------------------------------------------------
+
+def delta_spectrum(W0: jnp.ndarray, W1: jnp.ndarray) -> jnp.ndarray:
+    """Singular values of the update ΔW = W1 - W0 (2D-flattened)."""
+    d = (W1.astype(jnp.float32) - W0.astype(jnp.float32))
+    if d.ndim == 3:
+        d = d.reshape(d.shape[0], -1) if d.shape[0] > d.shape[2] \
+            else d.reshape(-1, d.shape[2])
+    return jnp.linalg.svd(d, compute_uv=False)
+
+
+def effective_rank(s: jnp.ndarray, tol: float = 1e-3) -> int:
+    """#singular values above tol * s_max."""
+    return int(jnp.sum(s > tol * jnp.max(s)))
+
+
+def intruder_dims(W0: jnp.ndarray, W1: jnp.ndarray, *, k: int = 16,
+                  tau: float = 0.6) -> int:
+    """Count of W1's top-k left singular vectors whose best cosine
+    similarity to ANY of W0's left singular vectors is < tau
+    (Shuttleworth et al., 2024).  LoRA injects such dimensions;
+    full FT and CLOVER do not."""
+    U0, _, _ = jnp.linalg.svd(W0.astype(jnp.float32), full_matrices=False)
+    U1, _, _ = jnp.linalg.svd(W1.astype(jnp.float32), full_matrices=False)
+    sims = jnp.abs(U1[:, :k].T @ U0)                       # (k, r0)
+    best = jnp.max(sims, axis=1)
+    return int(jnp.sum(best < tau))

@@ -1,0 +1,362 @@
+"""CLOVER cross-layer orthogonal decomposition (the paper's core).
+
+The Q-K and V-O pairs of each attention head are a low-rank factorization
+of two ``D x D`` matrices:
+
+    W_QK^h = W_Q^h (W_K^h)^T      rank <= d        (d = head_dim << D)
+    W_VO^h = W_V^h  W_O^h         rank <= d
+
+An SVD of each product re-expresses the pair in orthogonal bases whose
+importance is exactly the singular values — attention only ever consumes
+the *products*, so the re-expression is function-preserving.  We never
+materialize the ``D x D`` product: the QR trick reduces the SVD to a
+``d x d`` problem.
+
+GQA extension (beyond-paper, DESIGN.md §2): for a KV group with G query
+heads, the row-stack ``[W_QK^{h1}; ...; W_QK^{hG}]`` is still a rank-<=d
+product ``A B^T`` with ``A in R^{GD x d}`` (stacked queries) and
+``B = W_K^g in R^{D x d}``.  A joint SVD yields ONE shared set of
+orthogonal K directions per group (so pruning shrinks the *shared* K
+cache) plus per-query-head U blocks.  MHA is the G=1 special case and
+reduces exactly to the paper.
+
+RoPE fallback (paper §5): with a nonlinearity between Q and K the
+cross-layer merge is illegal; we instead orthogonalize ``W_K^g`` itself
+(intra-layer SVD) and expose the ``d x d`` transition ``diag(S) V^T`` as
+the trainable matrix.  Partial-RoPE models (stablelm, rotary_pct<1)
+get cross-layer treatment on the un-rotated (NoPE) block — beyond-paper.
+
+MLP.Up: consecutive ``up_block`` output dims are treated as a head and
+decomposed intra-layer, exactly the paper's U-D treatment.
+
+All transforms run host-side at init/conversion time (one-off cost), are
+vmapped over the stacked ``n_blocks`` axis of the scanned layer stack,
+and work in float32 regardless of the param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchConfig, CloverConfig, MIXER_ATTN,
+                                MLP_DENSE, MLP_RWKV)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# the QR-trick SVD of a low-rank product
+# ---------------------------------------------------------------------------
+
+def svd_lowrank_product(A: jnp.ndarray, B: jnp.ndarray):
+    """SVD of ``A @ B.T`` without materializing it.
+
+    A: (M, d), B: (N, d) with d << M, N.
+    Returns (U, S, Vt): U (M, d) col-orthonormal, S (d,) descending,
+    Vt (d, N) row-orthonormal, with  A @ B.T == (U * S) @ Vt.
+    """
+    A = A.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    Qa, Ra = jnp.linalg.qr(A)            # (M, d), (d, d)
+    Qb, Rb = jnp.linalg.qr(B)            # (N, d), (d, d)
+    Us, S, Vst = jnp.linalg.svd(Ra @ Rb.T)   # all (d, d) / (d,)
+    return Qa @ Us, S, Vst @ Qb.T
+
+
+def svd_tall(W: jnp.ndarray):
+    """Economic SVD of a tall matrix W (M, d), M >= d.
+    Returns (U (M, d), S (d,), Vt (d, d))."""
+    W = W.astype(jnp.float32)
+    Q, R = jnp.linalg.qr(W)
+    Us, S, Vt = jnp.linalg.svd(R)
+    return Q @ Us, S, Vt
+
+
+# ---------------------------------------------------------------------------
+# per-layer decompositions.  Weight layout (repro.models.layers):
+#   wq (D, H, dq)   wk (D, KV, dq)   wv (D, KV, dv)   wo (H, dv, D)
+# ---------------------------------------------------------------------------
+
+def _group_qk(wq: jnp.ndarray, wk: jnp.ndarray, G: int):
+    """Grouped cross-layer QK SVD.
+
+    wq: (D, H, d), wk: (D, KV, d), H == KV * G.
+    Returns (Uq (KV, G, D, d), S (KV, d), Vk (KV, D, d)) such that for
+    every query head h = g*G+j:   wq[:,h] @ wk[:,g].T == (Uq[g,j]*S[g]) @ Vk[g].T
+    """
+    D, H, d = wq.shape
+    KV = wk.shape[1]
+    # (KV, G*D, d): stack the group's query heads along rows
+    A = wq.transpose(1, 0, 2).reshape(KV, G, D, d).reshape(KV, G * D, d)
+    B = wk.transpose(1, 0, 2)                                  # (KV, D, d)
+    U, S, Vt = jax.vmap(svd_lowrank_product)(A, B)
+    Uq = U.reshape(KV, G, D, d)
+    Vk = jnp.swapaxes(Vt, -1, -2)                              # (KV, D, d)
+    return Uq, S, Vk
+
+
+def _group_vo(wv: jnp.ndarray, wo: jnp.ndarray, G: int):
+    """Grouped cross-layer VO SVD.
+
+    wv: (D, KV, d), wo: (H, d, D).
+    Returns (Uv (KV, D, d), S (KV, d), Vo (KV, G, d, D)) such that for
+    every query head h = g*G+j:   wv[:,g] @ wo[h] == (Uv[g]*S[g]) @ Vo[g,j]
+    """
+    D, KV, d = wv.shape
+    H = wo.shape[0]
+    A = wv.transpose(1, 0, 2)                                  # (KV, D, d)
+    # (KV, G*D, d): stack the group's output heads' columns
+    Bt = wo.reshape(KV, G, d, D).transpose(0, 1, 3, 2).reshape(KV, G * D, d)
+    U, S, Vt = jax.vmap(svd_lowrank_product)(A, Bt)
+    Vo = Vt.reshape(KV, d, G, D).transpose(0, 2, 1, 3)         # (KV, G, d, D)
+    return U, S, Vo
+
+
+def _intra_k(wk: jnp.ndarray):
+    """Intra-layer K orthogonalization (RoPE fallback).
+
+    wk: (D, KV, d).  Returns (Uk (KV, D, d), T (KV, d, d)) with
+    wk[:,g] == Uk[g] @ T[g]; Uk col-orthonormal, T = diag(S) Vt the
+    trainable transition.
+    """
+    U, S, Vt = jax.vmap(svd_tall)(wk.transpose(1, 0, 2))
+    T = S[..., None] * Vt
+    return U, T
+
+
+def _block_up(w_up: jnp.ndarray, block: int):
+    """Blockwise intra-layer decomposition of MLP.Up (paper's U-D pairs).
+
+    w_up: (D, F), F % block == 0.  Returns (Uu (D, nb, block),
+    T (nb, block, block)) with w_up[:, n*block:(n+1)*block] == Uu[:,n] @ T[n].
+    """
+    D, F = w_up.shape
+    nb = F // block
+    Wb = w_up.reshape(D, nb, block).transpose(1, 0, 2)         # (nb, D, block)
+    U, S, Vt = jax.vmap(svd_tall)(Wb)
+    T = S[..., None] * Vt                                      # (nb, block, block)
+    return U.transpose(1, 0, 2), T
+
+
+# ---------------------------------------------------------------------------
+# attention decomposition (one layer; vmapped over the block axis)
+# ---------------------------------------------------------------------------
+
+def qk_mode(cfg: ArchConfig) -> str:
+    """How the Q-K pair may be treated (DESIGN.md §5 applicability).
+
+    "cross"   — no positional nonlinearity between Q and K: full cross-layer.
+    "partial" — partial RoPE: cross-layer on the un-rotated (NoPE) block.
+    "intra"   — full RoPE: intra-layer K orthogonalization only (PEFT only).
+    """
+    if cfg.rope_dims == 0:
+        return "cross"
+    if cfg.rope_dims < cfg.head_dim_:
+        return "partial"
+    return "intra"
+
+
+def decompose_attention(attn: Params, cfg: ArchConfig, *,
+                        peft: bool) -> Tuple[Params, Params, Dict[str, jnp.ndarray]]:
+    """Orthogonalize one attention layer's Q-K and V-O pairs.
+
+    Returns (new_weights, trainables, spectra):
+      * ``peft=False`` (pruning mode): singular values are merged
+        sqrt-balanced into both factors; ``trainables`` is empty.
+      * ``peft=True``: factors are kept orthonormal and the singular
+        values become the trainable transitions
+        (s_qk (H,d,d) | k_t (KV,d,d), s_vo (H,d,d)).
+    spectra: {"qk": (KV, d) or None, "vo": (KV, d)} singular values.
+    """
+    D, H, dq = attn["wq"].shape
+    KV = attn["wk"].shape[1]
+    dv = attn["wv"].shape[2]
+    G = H // KV
+    dtype = attn["wq"].dtype
+    mode = qk_mode(cfg)
+    rot = cfg.rope_dims
+    new: Params = dict(attn)
+    train: Params = {}
+    spectra: Dict[str, Any] = {}
+
+    # ---- Q-K pair ---------------------------------------------------------
+    if mode == "cross":
+        Uq, S, Vk = _group_qk(attn["wq"], attn["wk"], G)
+        spectra["qk"] = S
+        if peft:
+            new["wq"] = Uq.transpose(2, 0, 1, 3).reshape(D, H, dq).astype(dtype)
+            new["wk"] = Vk.transpose(1, 0, 2).astype(dtype)
+            # per query head, init = diag(S of its group)
+            s = jnp.repeat(jax.vmap(jnp.diag)(S), G, axis=0)    # (H, d, d)
+            train["s_qk"] = s.astype(jnp.float32)
+        else:
+            r = jnp.sqrt(S)                                      # (KV, d)
+            wq = Uq * r[:, None, None, :]
+            new["wq"] = wq.transpose(2, 0, 1, 3).reshape(D, H, dq).astype(dtype)
+            new["wk"] = (Vk * r[:, None, :]).transpose(1, 0, 2).astype(dtype)
+    elif mode == "partial":
+        # cross-layer on the un-rotated tail block [rot:], identity on the
+        # rotated head block (beyond-paper, DESIGN.md §5 note †).
+        d_pass = dq - rot
+        Uq, S, Vk = _group_qk(attn["wq"][..., rot:], attn["wk"][..., rot:], G)
+        spectra["qk"] = S
+        if peft:
+            wq_pass = Uq.transpose(2, 0, 1, 3).reshape(D, H, d_pass)
+            new["wq"] = jnp.concatenate(
+                [attn["wq"][..., :rot], wq_pass.astype(dtype)], axis=-1)
+            new["wk"] = jnp.concatenate(
+                [attn["wk"][..., :rot],
+                 Vk.transpose(1, 0, 2).astype(dtype)], axis=-1)
+            eye = jnp.eye(rot, dtype=jnp.float32)
+            s_pass = jnp.repeat(jax.vmap(jnp.diag)(S), G, axis=0)
+            s = jax.vmap(lambda sp: jax.scipy.linalg.block_diag(eye, sp))(s_pass)
+            train["s_qk"] = s.astype(jnp.float32)
+        else:
+            r = jnp.sqrt(S)
+            wq_pass = (Uq * r[:, None, None, :]).transpose(2, 0, 1, 3)
+            new["wq"] = jnp.concatenate(
+                [attn["wq"][..., :rot],
+                 wq_pass.reshape(D, H, d_pass).astype(dtype)], axis=-1)
+            new["wk"] = jnp.concatenate(
+                [attn["wk"][..., :rot],
+                 (Vk * r[:, None, :]).transpose(1, 0, 2).astype(dtype)],
+                axis=-1)
+    else:  # intra: PEFT-only K orthogonalization; pruning illegal (paper §5)
+        spectra["qk"] = None
+        if peft:
+            Uk, T = _intra_k(attn["wk"])
+            new["wk"] = Uk.transpose(1, 0, 2).astype(dtype)
+            train["k_t"] = T.astype(jnp.float32)
+
+    # ---- V-O pair (no nonlinearity in any assigned arch: always legal) ----
+    Uv, Svo, Vo = _group_vo(attn["wv"], attn["wo"], G)
+    spectra["vo"] = Svo
+    if peft:
+        new["wv"] = Uv.transpose(1, 0, 2).astype(dtype)
+        new["wo"] = Vo.reshape(H, dv, D).astype(dtype)
+        train["s_vo"] = jnp.repeat(
+            jax.vmap(jnp.diag)(Svo), G, axis=0).astype(jnp.float32)
+    else:
+        r = jnp.sqrt(Svo)
+        new["wv"] = (Uv * r[:, None, :]).transpose(1, 0, 2).astype(dtype)
+        new["wo"] = (Vo * r[:, None, :, None]).reshape(H, dv, D).astype(dtype)
+    return new, train, spectra
+
+
+def decompose_up(mlp: Params, cfg: ArchConfig, *, key_name: str = "w_up",
+                 peft: bool = True) -> Tuple[Params, Params]:
+    """Blockwise Up decomposition (always intra-layer; PEFT-oriented).
+    Applies to dense-MLP ``w_up`` and rwkv channel-mix ``wk``."""
+    W = mlp[key_name]
+    block = min(cfg.clover.up_block, W.shape[1])
+    if W.shape[1] % block != 0:
+        return mlp, {}
+    Uu, T = _block_up(W, block)
+    new = dict(mlp)
+    del new[key_name]
+    new["up_u"] = Uu.astype(W.dtype)
+    train = {"up_t": T.astype(jnp.float32)}
+    if not peft:  # merged orthogonal form (rarely useful; kept for symmetry)
+        new["up_u"] = jnp.einsum("dnr,nrk->dnk", Uu, T).astype(W.dtype)
+        train = {}
+    return new, train
+
+
+# ---------------------------------------------------------------------------
+# whole-model driver
+# ---------------------------------------------------------------------------
+
+def _map_blocks(params: Params, cfg: ArchConfig, fn):
+    """Apply ``fn(layer_params, mixer, mlp) -> (new_layer, extras)`` to every
+    stacked pattern position (vmapped over the n_blocks axis)."""
+    new_blocks = []
+    extras = []
+    for j, (mixer, mlp) in enumerate(cfg.pattern):
+        stacked = params["blocks"][j]
+        out, ex = jax.vmap(lambda lp: fn(lp, mixer, mlp))(stacked)
+        new_blocks.append(out)
+        extras.append(ex)
+    out = dict(params)
+    out["blocks"] = tuple(new_blocks)
+    return out, extras
+
+
+def clover_decompose(params: Params, cfg: ArchConfig, *, peft: bool,
+                     include_up: bool = True,
+                     ) -> Tuple[Params, ArchConfig, list]:
+    """Orthogonalize every attention layer (and optionally MLP.Up blocks).
+
+    Returns (params', cfg', per-pattern-position extras) where extras[j] =
+    {"train": {...}, "spectra": {...}} stacked over the block axis.
+    In PEFT mode the trainable transitions are *inserted into the layer
+    param trees* (keys s_qk / k_t / s_vo / up_t) so the model hooks pick
+    them up; ``repro.core.peft.trainable_mask`` selects them for the
+    optimizer.
+    """
+    def fn(lp: Params, mixer: str, mlp: str):
+        lp = dict(lp)
+        extra: Dict[str, Any] = {"spectra": {}}
+        if mixer == MIXER_ATTN:
+            new_attn, train, spectra = decompose_attention(
+                lp["attn"], cfg, peft=peft)
+            new_attn.update(train)
+            lp["attn"] = new_attn
+            extra["spectra"] = {k: v for k, v in spectra.items()
+                                if v is not None}
+        if include_up and peft:
+            if mlp == MLP_DENSE:
+                new_mlp, train = decompose_up(lp["mlp"], cfg, key_name="w_up")
+                new_mlp.update(train)
+                lp["mlp"] = new_mlp
+            elif mlp == MLP_RWKV:
+                new_cm, train = decompose_up(lp["rwkv_chan"], cfg, key_name="wk")
+                new_cm.update(train)
+                lp["rwkv_chan"] = new_cm
+        return lp, extra
+
+    new_params, extras = _map_blocks(params, cfg, fn)
+    new_cfg = dataclasses.replace(
+        cfg, clover=dataclasses.replace(cfg.clover, enabled=True,
+                                        finetune_s=peft))
+    return new_params, new_cfg, extras
+
+
+def merge_clover(params: Params, cfg: ArchConfig) -> Tuple[Params, ArchConfig]:
+    """Fold the trainable transitions back into the weights (paper: 'these
+    values are reintegrated into the model without increasing its parameter
+    count').  Inverse of PEFT-mode decomposition; function-preserving."""
+    def fn(lp: Params, mixer: str, mlp: str):
+        lp = jax.tree.map(lambda a: a, lp)  # shallow-ish copy
+        if mixer == MIXER_ATTN:
+            attn = dict(lp["attn"])
+            if "s_qk" in attn:
+                attn["wq"] = jnp.einsum(
+                    "dhq,hqr->dhr", attn["wq"],
+                    attn.pop("s_qk").astype(attn["wq"].dtype))
+            if "k_t" in attn:
+                attn["wk"] = jnp.einsum(
+                    "dkq,kqr->dkr", attn["wk"],
+                    attn.pop("k_t").astype(attn["wk"].dtype))
+            if "s_vo" in attn:
+                attn["wo"] = jnp.einsum(
+                    "hvw,hwd->hvd", attn.pop("s_vo").astype(attn["wo"].dtype),
+                    attn["wo"])
+            lp["attn"] = attn
+        for name, wkey in (("mlp", "w_up"), ("rwkv_chan", "wk")):
+            if name in lp and "up_t" in lp[name]:
+                sub = dict(lp[name])
+                W = jnp.einsum("dnr,nrk->dnk", sub.pop("up_u"),
+                               sub.pop("up_t").astype(sub["w_down"].dtype
+                                                      if "w_down" in sub
+                                                      else jnp.float32))
+                sub[wkey] = W.reshape(W.shape[0], -1)
+                lp[name] = sub
+        return lp, {}
+
+    new_params, _ = _map_blocks(params, cfg, fn)
+    new_cfg = dataclasses.replace(
+        cfg, clover=dataclasses.replace(cfg.clover, finetune_s=False))
+    return new_params, new_cfg

@@ -1,0 +1,193 @@
+"""Parameter-efficient fine-tuning: CLOVER-S plus the paper's baselines.
+
+CLOVER (the paper's method): after ``clover_decompose(peft=True)`` the
+trainable transitions live INSIDE the param tree under the keys
+``s_qk / k_t / s_vo / up_t``.  ``partition`` splits the tree into
+(trainable, frozen) halves for the optimizer; ``merge_clover`` folds the
+transitions back afterwards (zero inference overhead).
+
+Baselines for Table 2 (LoRA / DoRA / PiSSA) are implemented as adapter
+trees over 2D-flattened target weights; ``materialize`` produces the
+effective params for the forward pass.  At benchmark scale the W + AB
+materialization per step is negligible; production CLOVER needs no
+materialization at all — which is exactly the paper's point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# Keys that clover_decompose(peft=True) marks trainable.
+CLOVER_TRAIN_KEYS = ("s_qk", "k_t", "s_vo", "up_t")
+
+# LoRA-family default targets (paper Table 3: Q, K, V, Up, Down).
+LORA_TARGETS = ("wq", "wk", "wv", "w_up", "w_down")
+
+
+# ---------------------------------------------------------------------------
+# partition / combine for CLOVER-S training
+# ---------------------------------------------------------------------------
+
+def _is_trainable_path(path) -> bool:
+    for p in path:
+        key = getattr(p, "key", None)
+        if key in CLOVER_TRAIN_KEYS:
+            return True
+    return False
+
+
+def partition(params: Params) -> Tuple[Params, Params]:
+    """Split into (trainable, frozen) trees of identical structure, with
+    ``None`` at the complementary positions."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    train_leaves, frozen_leaves = [], []
+    for path, leaf in flat:
+        if _is_trainable_path(path):
+            train_leaves.append(leaf)
+            frozen_leaves.append(None)
+        else:
+            train_leaves.append(None)
+            frozen_leaves.append(leaf)
+    return (jax.tree_util.tree_unflatten(treedef, train_leaves),
+            jax.tree_util.tree_unflatten(treedef, frozen_leaves))
+
+
+def combine(trainable: Params, frozen: Params) -> Params:
+    """Inverse of partition."""
+    return jax.tree.map(
+        lambda a, b: a if b is None else b, frozen, trainable,
+        is_leaf=lambda x: x is None)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree)
+               if x is not None)
+
+
+# ---------------------------------------------------------------------------
+# LoRA / DoRA / PiSSA baselines
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PeftConfig:
+    method: str = "lora"          # lora | dora | pissa
+    rank: int = 32
+    alpha: float = 32.0
+    targets: Tuple[str, ...] = LORA_TARGETS
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+def _flat2d(w: jnp.ndarray) -> jnp.ndarray:
+    """Flatten a stacked target weight to (n_blocks, in, out).
+
+    Block weights carry a leading ``n_blocks`` scan axis:
+      (nb, D, F)        -> unchanged                      (w_up / w_down)
+      (nb, D, H, d)     -> (nb, D, H*d)                   (wq / wk / wv)
+      (nb, H, d, D)     -> (nb, H*d, D)                   (wo)
+    """
+    if w.ndim == 3:
+        return w
+    if w.ndim == 4:
+        if w.shape[1] >= w.shape[3]:
+            return w.reshape(w.shape[0], w.shape[1], -1)
+        return w.reshape(w.shape[0], -1, w.shape[3])
+    raise ValueError(w.shape)
+
+
+def _targets(params: Params, pcfg: PeftConfig):
+    """Yield (path, leaf) for every adapter target leaf (block weights)."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = getattr(path[-1], "key", None)
+        if key in pcfg.targets and leaf.ndim >= 3:
+            yield path, leaf
+
+
+def init_adapters(params: Params, pcfg: PeftConfig, key) -> Params:
+    """Adapter tree keyed by flattened path string; one adapter per block
+    (leading ``nb`` axis throughout).
+
+    lora:  {a (nb, r, in), b (nb, out, r)}           b zero-init
+    dora:  lora + {m (nb, out)} column magnitudes
+    pissa: {a, b} = principal SVD factors; params must then be replaced
+           by ``pissa_residual`` so materialize == original at init.
+    """
+    adapters: Params = {}
+    leaves = list(_targets(params, pcfg))
+    keys = jax.random.split(key, max(1, len(leaves)))
+    for (path, leaf), k in zip(leaves, keys):
+        name = jax.tree_util.keystr(path)
+        W = _flat2d(leaf).astype(jnp.float32)                 # (nb, in, out)
+        nb, n_in, n_out = W.shape
+        r = min(pcfg.rank, min(n_in, n_out))
+        if pcfg.method in ("lora", "dora"):
+            a = jax.random.normal(k, (nb, r, n_in)) * (1.0 / jnp.sqrt(n_in))
+            b = jnp.zeros((nb, n_out, r), jnp.float32)
+            ad = {"a": a, "b": b}
+            if pcfg.method == "dora":
+                ad["m"] = jnp.linalg.norm(W, axis=1)          # (nb, out)
+        elif pcfg.method == "pissa":
+            # W (nb, in, out) = U S Vt with U (nb, in, k), Vt (nb, k, out).
+            U, S, Vt = jax.vmap(
+                lambda w: jnp.linalg.svd(w, full_matrices=False))(W)
+            sr = jnp.sqrt(S[:, :r])                           # (nb, r)
+            a = jnp.swapaxes(U[:, :, :r], 1, 2) * sr[:, :, None]   # (nb, r, in)
+            b = jnp.swapaxes(Vt[:, :r, :], 1, 2) * sr[:, None, :]  # (nb, out, r)
+            ad = {"a": a, "b": b}
+        else:
+            raise ValueError(pcfg.method)
+        adapters[name] = ad
+    return adapters
+
+
+def _delta(ad) -> jnp.ndarray:
+    """(nb, in, out) low-rank update."""
+    return jnp.einsum("nor,nri->nio", ad["b"], ad["a"])
+
+
+def materialize(params: Params, adapters: Params, pcfg: PeftConfig) -> Params:
+    """Effective params for the forward pass: W' = f(W, adapter)."""
+    def visit(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if name not in adapters:
+            return leaf
+        ad = adapters[name]
+        W = _flat2d(leaf).astype(jnp.float32)                 # (nb, in, out)
+        if pcfg.method == "pissa":
+            # params here are the RESIDUAL (see pissa_residual); training
+            # moves the principal component itself -> full-step updates.
+            Wp = W + _delta(ad)
+        elif pcfg.method == "dora":
+            V = W + pcfg.scale * _delta(ad)
+            norm = jnp.linalg.norm(V, axis=1, keepdims=True)
+            Wp = ad["m"][:, None, :] * V / jnp.maximum(norm, 1e-6)
+        else:
+            Wp = W + pcfg.scale * _delta(ad)
+        return Wp.reshape(leaf.shape).astype(leaf.dtype)
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def pissa_residual(params: Params, adapters: Params, pcfg: PeftConfig) -> Params:
+    """Subtract the initial principal component so that
+    materialize(residual, adapters) == original params at init."""
+    def visit(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if name not in adapters:
+            return leaf
+        W = _flat2d(leaf).astype(jnp.float32) - _delta(adapters[name])
+        return W.reshape(leaf.shape).astype(leaf.dtype)
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def merge_adapters(params: Params, adapters: Params, pcfg: PeftConfig) -> Params:
+    """Fold adapters into the weights (post-training)."""
+    return materialize(params, adapters, pcfg)

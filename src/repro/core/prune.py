@@ -1,0 +1,226 @@
+"""CLOVER pruning planner + vanilla baseline (paper Table 1, §4.4).
+
+After ``clover_decompose`` the per-head factors are sorted by singular
+value (descending), so structured pruning is a static slice ``[..., :r]``
+— the same rate across all layers (paper: "to maintain inference
+efficiency, we apply the same pruning rate across all layers").  The
+KV cache then stores K at rank ``r_qk`` and V at rank ``r_vo``: the
+decode memory win the paper targets.
+
+TPU adaptation (DESIGN.md §4): kept ranks are snapped UP to the sublane
+multiple (``cfg.clover.rank_multiple``) so MXU/VPU tiles stay aligned;
+the pruned weights never carry HBM zero-padding.
+
+Vanilla baseline: magnitude pruning of paired per-dim L2 norms
+(``||wq_i||*||wk_i||`` / ``||wv_i||*||wo_i||``) WITHOUT
+orthogonalization — per-head top-r gather.  For RoPE archs the rotated
+block is never pruned (pairing would break); this mirrors CLOVER's own
+applicability so comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MIXER_ATTN
+from repro.core.decompose import qk_mode
+
+Params = Dict[str, Any]
+
+
+def snap_rank(r: int, multiple: int, d: int) -> int:
+    """Snap a kept rank UP to the TPU sublane multiple, capped at d."""
+    if multiple <= 1:
+        return max(1, min(r, d))
+    return max(multiple, min(d, ((r + multiple - 1) // multiple) * multiple))
+
+
+def plan_ranks(cfg: ArchConfig, qk_ratio: float, vo_ratio: float
+               ) -> Tuple[int, int]:
+    """Kept per-head widths (qk_keep, vo_keep) for a pruning ratio.
+
+    In partial-RoPE mode only the NoPE tail is prunable: the ratio is
+    applied to the tail and the rotated block is always kept.
+    """
+    d = cfg.head_dim_
+    m = cfg.clover.rank_multiple
+    mode = qk_mode(cfg)
+    if mode == "cross":
+        qk_keep = snap_rank(round(d * (1.0 - qk_ratio)), m, d)
+    elif mode == "partial":
+        rot = cfg.rope_dims
+        tail = d - rot
+        qk_keep = rot + snap_rank(round(tail * (1.0 - qk_ratio)), m, tail)
+    else:  # intra (full RoPE): Q-K pruning illegal (paper §5)
+        qk_keep = d
+    vo_keep = snap_rank(round(d * (1.0 - vo_ratio)), m, d)
+    return qk_keep, vo_keep
+
+
+def _set_ranks(cfg: ArchConfig, qk_keep: int, vo_keep: int) -> ArchConfig:
+    d = cfg.head_dim_
+    return dataclasses.replace(
+        cfg, clover=dataclasses.replace(
+            cfg.clover, enabled=True,
+            qk_rank=0 if qk_keep == d else qk_keep,
+            vo_rank=0 if vo_keep == d else vo_keep))
+
+
+# ---------------------------------------------------------------------------
+# CLOVER pruning: static slices of the sorted factors
+# ---------------------------------------------------------------------------
+
+def _prune_attn_clover(attn: Params, cfg: ArchConfig,
+                       qk_keep: int, vo_keep: int) -> Params:
+    """Slice the sorted factors.  Works on stacked params (leading
+    ``n_blocks`` axis) via ellipsis indexing:
+        wq (..., D, H, dq)  wk (..., D, KV, dq)
+        wv (..., D, KV, dv) wo (..., H, dv, D)
+        s_qk/s_vo (..., H, d, d)  k_t (..., KV, d, d)."""
+    new = dict(attn)
+    d = cfg.head_dim_
+    if qk_keep < d and qk_mode(cfg) != "intra":
+        new["wq"] = attn["wq"][..., :qk_keep]
+        new["wk"] = attn["wk"][..., :qk_keep]
+        if "s_qk" in attn:   # CLOVER-dagger: keep S trainable post-prune
+            new["s_qk"] = attn["s_qk"][..., :qk_keep, :qk_keep]
+        if "k_t" in attn:
+            new["k_t"] = attn["k_t"][..., :qk_keep, :qk_keep]
+    if vo_keep < d:
+        new["wv"] = attn["wv"][..., :vo_keep]
+        new["wo"] = attn["wo"][..., :vo_keep, :]
+        if "s_vo" in attn:
+            new["s_vo"] = attn["s_vo"][..., :vo_keep, :vo_keep]
+    return new
+
+
+def clover_prune(params: Params, cfg: ArchConfig, *,
+                 qk_ratio: float = 0.0, vo_ratio: float = 0.0,
+                 ) -> Tuple[Params, ArchConfig]:
+    """Prune a CLOVER-decomposed model (either peft or merged mode).
+
+    ``params`` must come from ``clover_decompose`` (factors sorted by
+    singular value).  Returns (params', cfg') with cfg'.clover ranks set
+    so the model/KV-cache shapes shrink accordingly.
+    """
+    assert cfg.clover.enabled, "clover_prune requires a decomposed model"
+    qk_keep, vo_keep = plan_ranks(cfg, qk_ratio, vo_ratio)
+
+    new_blocks = []
+    for j, (mixer, mlp) in enumerate(cfg.pattern):
+        stacked = dict(params["blocks"][j])
+        if mixer == MIXER_ATTN:
+            stacked["attn"] = _prune_attn_clover(
+                stacked["attn"], cfg, qk_keep, vo_keep)
+        new_blocks.append(stacked)
+    out = dict(params)
+    out["blocks"] = tuple(new_blocks)
+    return out, _set_ranks(cfg, qk_keep, vo_keep)
+
+
+# ---------------------------------------------------------------------------
+# Vanilla magnitude pruning baseline (no orthogonalization)
+# ---------------------------------------------------------------------------
+
+def _prune_attn_vanilla(attn: Params, cfg: ArchConfig,
+                        qk_keep: int, vo_keep: int) -> Params:
+    """Per-head top-r magnitude pruning on the RAW weights.
+
+    wq (D,H,dq), wk (D,KV,dq), wv (D,KV,dv), wo (H,dv,D); GQA importance
+    for the shared K/V dims is summed over the group's query heads.
+    RoPE block ([:rot]) is always kept (see module docstring).
+    """
+    D, H, d = attn["wq"].shape
+    KV = attn["wk"].shape[1]
+    G = H // KV
+    rot = min(cfg.rope_dims, d)
+    new = dict(attn)
+
+    if qk_keep < d and qk_mode(cfg) != "intra":
+        nq = jnp.linalg.norm(attn["wq"], axis=0)              # (H, d)
+        nk = jnp.linalg.norm(attn["wk"], axis=0)              # (KV, d)
+        imp = (nq.reshape(KV, G, d) * nk[:, None, :]).sum(1)  # (KV, d)
+        tail_keep = qk_keep - rot
+        imp_t = imp[:, rot:]
+        _, idx = jax.lax.top_k(imp_t, tail_keep)
+        idx = jnp.sort(idx, axis=-1) + rot                    # (KV, tail_keep)
+        if rot:
+            idx = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(rot)[None], (KV, rot)), idx], -1)
+        # gather per KV group; query heads share the group's index set
+        idx_h = jnp.repeat(idx, G, axis=0)                    # (H, keep)
+        new["wq"] = jnp.take_along_axis(
+            attn["wq"], idx_h[None, :, :], axis=2)
+        new["wk"] = jnp.take_along_axis(
+            attn["wk"], idx[None, :, :], axis=2)
+
+    if vo_keep < d:
+        nv = jnp.linalg.norm(attn["wv"], axis=0)              # (KV, d)
+        no = jnp.linalg.norm(attn["wo"], axis=2)              # (H, d)
+        imp = (no.reshape(KV, G, d) * nv[:, None, :]).sum(1)  # (KV, d)
+        _, idx = jax.lax.top_k(imp, vo_keep)
+        idx = jnp.sort(idx, axis=-1)                          # (KV, keep)
+        idx_h = jnp.repeat(idx, G, axis=0)
+        new["wv"] = jnp.take_along_axis(attn["wv"], idx[None, :, :], axis=2)
+        new["wo"] = jnp.take_along_axis(
+            attn["wo"], idx_h[:, :, None], axis=1)
+    return new
+
+
+def vanilla_prune(params: Params, cfg: ArchConfig, *,
+                  qk_ratio: float = 0.0, vo_ratio: float = 0.0,
+                  ) -> Tuple[Params, ArchConfig]:
+    """Magnitude pruning WITHOUT CLOVER orthogonalization (the baseline)."""
+    qk_keep, vo_keep = plan_ranks(cfg, qk_ratio, vo_ratio)
+
+    new_blocks = []
+    for j, (mixer, mlp) in enumerate(cfg.pattern):
+        stacked = dict(params["blocks"][j])
+        if mixer == MIXER_ATTN:
+            stacked["attn"] = jax.vmap(
+                lambda a: _prune_attn_vanilla(a, cfg, qk_keep, vo_keep)
+            )(stacked["attn"])
+        new_blocks.append(stacked)
+    out = dict(params)
+    out["blocks"] = tuple(new_blocks)
+    return out, _set_ranks(cfg, qk_keep, vo_keep)
+
+
+# ---------------------------------------------------------------------------
+# Threshold planning (paper §4.4: training-free pruning by magnitude cutoff)
+# ---------------------------------------------------------------------------
+
+def threshold_ratios(extras, cfg: ArchConfig, *,
+                     qk_thresh: float, vo_thresh: float) -> Dict[str, float]:
+    """From decomposition spectra, the uniform kept rank implied by a
+    singular-value threshold: r = max over heads/layers of #{S >= t}
+    (max keeps every head lossless; uniformity keeps shapes static).
+
+    Returns achieved ratios + planned keeps; feed into clover_prune.
+    """
+    d = cfg.head_dim_
+    qk_keep, vo_keep = 0, 0
+    qk_total = vo_total = 0.0
+    for ex in extras:
+        sp = ex["spectra"] if "spectra" in ex else {}
+        if "qk" in sp:
+            s = sp["qk"]                      # (n_blocks, KV, d_eff)
+            qk_keep = max(qk_keep, int(jnp.max(jnp.sum(s >= qk_thresh, -1))))
+            qk_total += float(jnp.mean(jnp.sum(s >= qk_thresh, -1)))
+        if "vo" in sp:
+            s = sp["vo"]
+            vo_keep = max(vo_keep, int(jnp.max(jnp.sum(s >= vo_thresh, -1))))
+            vo_total += float(jnp.mean(jnp.sum(s >= vo_thresh, -1)))
+    m = cfg.clover.rank_multiple
+    mode = qk_mode(cfg)
+    d_qk = (d - cfg.rope_dims) if mode == "partial" else d
+    qk_keep = snap_rank(max(qk_keep, 1), m, d_qk) if mode != "intra" else d
+    vo_keep = snap_rank(max(vo_keep, 1), m, d)
+    return {
+        "qk_keep": qk_keep, "vo_keep": vo_keep,
+        "qk_ratio": 1.0 - qk_keep / d_qk if mode != "intra" else 0.0,
+        "vo_ratio": 1.0 - vo_keep / d,
+    }

@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic sharded token streams with savable state."""
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticConfig, SyntheticLM, make_global_batch)

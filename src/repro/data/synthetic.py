@@ -1,0 +1,90 @@
+"""Deterministic synthetic LM data with exactly-resumable iterator state.
+
+The stream is a counter-addressed PRNG: batch ``i`` is a pure function of
+(seed, i), so the iterator state is a single integer — checkpoints save
+it and restarts resume mid-epoch with zero drift, and ANY data-parallel
+rank can regenerate ANY shard (elastic resharding needs no data
+redistribution).
+
+The token distribution is a small induction-head-friendly Markov chain
+(repeating bigrams) rather than uniform noise so that recovery
+fine-tuning and PEFT benchmarks have actual signal to learn.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SyntheticConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_patterns: int = 64      # distinct bigram patterns
+    pattern_len: int = 8      # repeat period
+
+
+class SyntheticLM:
+    """Iterator over {tokens, labels} global batches.
+
+    State = {"step": int}.  ``batch_at(step)`` is pure; ``__next__``
+    advances the counter.
+    """
+
+    def __init__(self, cfg: SyntheticConfig):
+        self.cfg = cfg
+        self.step = 0
+        rng = np.random.default_rng(cfg.seed)
+        # fixed library of repeating patterns (the learnable structure)
+        self.patterns = rng.integers(
+            0, cfg.vocab_size, (cfg.n_patterns, cfg.pattern_len),
+            dtype=np.int32)
+
+    # -- state ----------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    def load_state_dict(self, st: Dict[str, Any]):
+        assert st["seed"] == self.cfg.seed, "stream identity mismatch"
+        self.step = int(st["step"])
+
+    # -- generation ------------------------------------------------------
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed << 20) ^ step)
+        B, S = cfg.global_batch, cfg.seq_len
+        pat = rng.integers(0, cfg.n_patterns, (B,))
+        base = self.patterns[pat]                       # (B, P)
+        reps = (S + cfg.pattern_len) // cfg.pattern_len + 1
+        seq = np.tile(base, (1, reps))[:, :S + 1]
+        # noise: corrupt 10% of positions so the task isn't trivial
+        noise = rng.random((B, S + 1)) < 0.10
+        rand = rng.integers(0, cfg.vocab_size, (B, S + 1), dtype=np.int32)
+        seq = np.where(noise, rand, seq).astype(np.int32)
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b
+
+
+def make_global_batch(batch_np: Dict[str, np.ndarray], mesh,
+                      spec) -> Dict[str, jax.Array]:
+    """Host numpy batch -> globally-sharded jax arrays.
+
+    Single-process: device_put with NamedSharding.  (Multi-host would use
+    make_array_from_process_local_data; the call-site contract is the
+    same.)"""
+    from jax.sharding import NamedSharding
+    sh = NamedSharding(mesh, spec)
+    return {k: jax.device_put(v, sh) for k, v in batch_np.items()}

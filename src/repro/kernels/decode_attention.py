@@ -1,0 +1,119 @@
+"""Flash-decoding: one new token's query against a long (CLOVER-rank) KV cache.
+
+The decode roofline is HBM-bound on streaming the cache (the paper's
+motivation).  Per (batch, kv-head) the kernel streams (block_t x r_qk)
+K-slabs and (block_t x r_vo) V-slabs once through VMEM — r_qk + r_vo
+bytes per cached position instead of 2*head_dim, so the HBM term shrinks
+exactly with the pruning ratio.
+
+All G query heads of a KV group ride in one tile: the (G, dq) query slab
+is resident in VMEM across the whole stream, turning the GQA group into
+an MXU-friendly (G x block_t) matmul instead of G vector dots.
+
+Grid (B, KV, n_t): n_t sequential with (m, l, acc) scratch; per-batch
+``lengths`` arrives via scalar prefetch so fully-masked tail blocks are
+skipped without host round-trips.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(-1e30)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_t: int, n_t: int):
+    b = pl.program_id(0)
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    to = it * block_t
+
+    @pl.when(to < length)
+    def _body():
+        q = q_ref[0]                                           # (G, dq)
+        k = k_ref[0, :, 0, :]                                  # (bt, dq)
+        v = v_ref[0, :, 0, :]                                  # (bt, dv)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (G, bt)
+        tj = to + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        logits = jnp.where(tj < length, logits, NEG_INF)
+        m_prev = m_scr[...]                                    # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, 1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, 1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(it == n_t - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 lengths: jnp.ndarray, *,
+                 scale: Optional[float] = None,
+                 block_t: int = 256,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, dq);  k: (B, T, KV, dq);  v: (B, T, KV, dv);
+    lengths: (B,) int32.  T % block_t == 0 (ops.py pads; padded positions
+    are masked by lengths).  -> (B, H, dv)
+    """
+    B, H, dq = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    assert T % block_t == 0, (T, block_t)
+    if scale is None:
+        scale = float(1.0 / (dq ** 0.5))
+    n_t = T // block_t
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_t=block_t, n_t=n_t)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, n_t),
+        in_specs=[
+            pl.BlockSpec((1, G, dq), lambda b, kv, it, lens: (b, kv, 0)),
+            pl.BlockSpec((1, block_t, 1, dq),
+                         lambda b, kv, it, lens: (b, it, kv, 0)),
+            pl.BlockSpec((1, block_t, 1, dv),
+                         lambda b, kv, it, lens: (b, it, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, dv), lambda b, kv, it, lens: (b, kv, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dv), jnp.float32),
+        ],
+    )
+
+    # H is laid out as KV groups of G consecutive query heads, so the
+    # (1, G, dq) block at index kv is exactly group kv's query slab.
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, dv), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)

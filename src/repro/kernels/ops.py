@@ -1,0 +1,125 @@
+"""Public kernel entry points: padding, backend dispatch, jit.
+
+On TPU the Pallas kernels compile natively; on CPU they run in interpret
+mode (Python-level execution of the kernel body) when ``interpret=True``
+is requested, otherwise the pure-jnp reference executes (XLA-fused, much
+faster on CPU — the default for model code so smoke tests stay quick).
+The dry-run never traces through these (model code calls them only under
+``attn_impl="pallas"``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.clover_attention import flash_attention as _flash
+from repro.kernels.decode_attention import flash_decode as _decode
+from repro.kernels.wkv6 import wkv6 as _wkv6
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int,
+            value: float = 0.0) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "impl"))
+def clover_attention(q, k, v, *, causal: bool = True,
+                     scale: Optional[float] = None,
+                     block_q: int = 128, block_k: int = 128,
+                     impl: str = "ref") -> jnp.ndarray:
+    """Asymmetric-head-width GQA attention.  impl: ref | pallas | interpret.
+
+    q (B,S,H,dq), k (B,T,KV,dq), v (B,T,KV,dv) -> (B,S,H,dv).
+    """
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    B, S, H, dq = q.shape
+    T = k.shape[1]
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, T))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    # padded K tail is masked only by causality -> require causal when padded
+    assert causal or (S % bq == 0 and T % bk == 0), \
+        "non-causal pallas path requires block-aligned shapes"
+    out = _flash(qp, kp, vp, causal=causal, scale=scale, block_q=bq,
+                 block_k=bk, interpret=(impl == "interpret"))
+    return out[:, :S]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_t", "impl"))
+def decode_attention(q, k, v, lengths, *, scale: Optional[float] = None,
+                     block_t: int = 256, impl: str = "ref") -> jnp.ndarray:
+    """Flash-decoding vs a (possibly CLOVER-rank) KV cache.
+
+    q (B,H,dq), k (B,T,KV,dq), v (B,T,KV,dv), lengths (B,) -> (B,H,dv).
+    """
+    if impl == "ref":
+        return _ref.decode_attention_ref(q, k, v, lengths, scale=scale)
+    T = k.shape[1]
+    bt = min(block_t, max(8, T))
+    kp = _pad_to(k, 1, bt)
+    vp = _pad_to(v, 1, bt)
+    return _decode(q, kp, vp, lengths, scale=scale, block_t=bt,
+                   interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "tile", "impl"))
+def mamba_scan(dt, A, Bmat, C, x, h0=None, *, chunk: int = 128,
+               tile: int = 512,
+               impl: str = "ref") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba-1 selective scan.  dt,x (B,S,dI); A (dI,dS); B,C (B,S,dS).
+
+    Padding is state-neutral: dt=0 on the tail gives decay exp(0)=1 and
+    zero input, so h_end is exact; padded outputs are sliced away."""
+    if impl == "ref":
+        return _ref.mamba_scan_ref(dt, A, Bmat, C, x, h0)
+    from repro.kernels.mamba_scan import mamba_scan as _pallas_scan
+    B, S, dI = x.shape
+    c = min(chunk, max(8, S))
+    dtp = _pad_to(dt, 1, c)
+    xp = _pad_to(x, 1, c)
+    Bp = _pad_to(Bmat, 1, c)
+    Cp = _pad_to(C, 1, c)
+    t = tile
+    while dI % t:
+        t //= 2
+    y, h_end = _pallas_scan(dtp, A, Bp, Cp, xp, h0, chunk=c,
+                            tile=max(1, t),
+                            interpret=(impl == "interpret"))
+    return y[:, :S], h_end
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def wkv6(r, k, v, logw, u, s0=None, *, chunk: int = 64,
+         impl: str = "ref") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV-6 wkv.  r,k,v,logw (B,H,T,d), u (H,d), s0 (B,H,d,d)|None.
+
+    Padding is state-neutral: logw=0 (decay 1) and k=0 (no update) on the
+    padded tail leave S_end exact; padded outputs are sliced away.
+    """
+    if impl == "ref":
+        return _ref.wkv6_ref(r, k, v, logw, u, s0)
+    B, H, T, d = r.shape
+    c = min(chunk, max(8, T))
+    rp = _pad_to(r, 2, c)
+    kp = _pad_to(k, 2, c)
+    vp = _pad_to(v, 2, c)
+    lwp = _pad_to(logw, 2, c)
+    out, s_end = _wkv6(rp, kp, vp, lwp, u, s0, chunk=c,
+                       interpret=(impl == "interpret"))
+    return out[:, :, :T], s_end

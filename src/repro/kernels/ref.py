@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+These are the semantics the kernels must reproduce bit-approximately;
+tests sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """GQA attention with asymmetric head widths (dq != dv allowed —
+    the shape class CLOVER pruning creates).
+
+    q: (B, S, H, dq);  k: (B, T, KV, dq);  v: (B, T, KV, dv)
+    -> (B, S, H, dv).  H % KV == 0.
+    """
+    B, S, H, dq = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(dq).astype(jnp.float32)
+    qg = q.reshape(B, S, KV, G, dq)
+    logits = jnp.einsum("bskgq,btkq->bkgst", qg, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(S)[:, None] + (T - S)   # align ends (prefill windows)
+        mask = qi >= jnp.arange(T)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkv->bskgv", p, v)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray, *,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token flash-decoding oracle.
+
+    q: (B, H, dq);  k: (B, T, KV, dq);  v: (B, T, KV, dv);
+    lengths: (B,) int32 — positions >= length are masked.
+    -> (B, H, dv)
+    """
+    B, H, dq = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(dq).astype(jnp.float32)
+    qg = q.reshape(B, KV, G, dq)
+    logits = jnp.einsum("bkgq,btkq->bkgt", qg, k).astype(jnp.float32) * scale
+    mask = jnp.arange(T)[None, :] < lengths[:, None]          # (B, T)
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgt,btkv->bkgv", p, v)
+    return out.reshape(B, H, v.shape[-1])
+
+
+def mamba_scan_ref(dt: jnp.ndarray, A: jnp.ndarray, Bmat: jnp.ndarray,
+                   C: jnp.ndarray, x: jnp.ndarray,
+                   h0: Optional[jnp.ndarray] = None,
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential Mamba-1 selective-scan oracle.
+
+    dt, x: (B, S, dI);  A: (dI, dS);  Bmat, C: (B, S, dS).
+    h_t = exp(dt_t * -A) * h_{t-1} + (dt_t * x_t) B_t;   y_t = h_t . C_t.
+    Returns (y (B,S,dI) f32, h_end (B,dI,dS) f32)."""
+    B, S, dI = x.shape
+    dS = A.shape[-1]
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h = (jnp.zeros((B, dI, dS), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, xs):
+        dt_t, x_t, b_t, c_t = xs                    # (B,dI),(B,dI),(B,dS)x2
+        a = jnp.exp(dt_t[..., None] * (-Af)[None])  # (B,dI,dS)
+        b = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = a * h + b
+        y = jnp.einsum("bns,bs->bn", h, c_t)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (dtf, xf, Bf, Cf))
+    h_end, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h_end
+
+
+def wkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             logw: jnp.ndarray, u: jnp.ndarray,
+             s0: Optional[jnp.ndarray] = None,
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential RWKV-6 wkv oracle.
+
+    r,k,v,logw: (B, H, T, d);  u: (H, d);  s0: (B, H, d, d) or None.
+    Per step: Sd = diag(exp(logw_t)) S;  o_t = r_t Sd + (r_t . (u*k_t)) v_t;
+              S' = Sd + k_t v_t^T.
+    Returns (out (B,H,T,d) f32, S_end (B,H,d,d) f32).
+    """
+    B, H, T, d = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = logw.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    S = (jnp.zeros((B, H, d, d), jnp.float32) if s0 is None
+         else s0.astype(jnp.float32))
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                                   # (B, H, d)
+        Sd = jnp.exp(wt)[..., None] * S                       # decay k-side
+        o = jnp.einsum("bhd,bhde->bhe", rt, Sd)
+        bonus = jnp.einsum("bhd,bhd->bh", rt, uf[None] * kt)
+        o = o + bonus[..., None] * vt
+        S = Sd + kt[..., None] * vt[..., None, :]
+        return S, o
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (rf, kf, vf, wf))
+    S_end, outs = jax.lax.scan(step, S, xs)
+    return jnp.moveaxis(outs, 0, 2), S_end

@@ -1,0 +1,47 @@
+"""Production mesh definitions.
+
+Meshes are built by FUNCTIONS (never at module import) so importing this
+module never touches jax device state — conftest.py and the smoke tests
+must keep seeing the single real CPU device.
+
+Axis semantics:
+  pod   — data-parallel replicas across pods (slow DCI links); gradients
+          cross this axis once per step (optionally int8-compressed).
+  data  — intra-pod data parallel + FSDP: the batch AND the d_model dim
+          of every weight shard here (MaxText-style "fsdp" axis).
+  model — tensor/expert parallel: heads, ff, experts, vocab.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh (tests, small deployments, pipeline experiments)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(data: Optional[int] = None, model: int = 1):
+    """Mesh over whatever devices exist (CPU tests: usually (1, 1))."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,3 @@
+"""Config-driven model zoo covering all assigned architectures."""
+from repro.models.transformer import (  # noqa: F401
+    init_lm_params, forward, prefill, decode_step, init_decode_state)

@@ -1,0 +1,372 @@
+"""Core layers: norms, rotary embeddings, GQA attention (optionally
+CLOVER-factored), dense MLPs.
+
+Attention weight layout (CLOVER-ready):
+    wq : (D, H,  dq)     dq = head_dim, or the CLOVER-pruned Q-K rank
+    wk : (D, KV, dq)
+    wv : (D, KV, dv)     dv = head_dim, or the CLOVER-pruned V-O rank
+    wo : (H, dv, D)
+Optional CLOVER fine-tuning matrices (present only while unmerged):
+    s_qk : (H,  dq, dq)  transition between Q and K (applied on the Q side)
+    k_t  : (KV, dq, dq)  intra-layer K transition (RoPE fallback, pre-RoPE)
+    s_vo : (H,  dv, dv)  transition between attention-context and O
+Attention only ever consumes the cross-layer *products*, which is exactly
+the invariance CLOVER exploits.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers / norms
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_norm(cfg, dtype) -> Params:
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (partial-RoPE aware)
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jnp.ndarray, rot_dims: int, theta: float):
+    """positions: (..., S) int32 -> cos/sin of shape (..., S, rot_dims//2)."""
+    half = rot_dims // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               rot_dims: int) -> jnp.ndarray:
+    """x: (B, S, N, dq). Rotates the first `rot_dims` dims (half-split
+    convention), passes the rest through (partial RoPE / NoPE block)."""
+    if rot_dims == 0:
+        return x
+    half = rot_dims // 2
+    x_rot, x_pass = x[..., :rot_dims], x[..., rot_dims:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    return jnp.concatenate([r1, r2, x_pass], axis=-1)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    half = d_model // 2
+    freqs = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+# q-block size for the chunked XLA attention path (peak logits slab is
+# (B, H, ATTN_CHUNK, S) instead of (B, H, S, S)).
+ATTN_CHUNK = 512
+
+
+def _pick_block(S: int, target: int) -> int:
+    """Largest divisor of S that is <= target (>= 1)."""
+    b = min(S, target)
+    while S % b:
+        b -= 1
+    return b
+
+
+def _heads_shardable(H: int) -> bool:
+    """Do the query heads divide the ambient model axis?"""
+    from repro.parallel.sharding import ambient_mesh
+    mesh = ambient_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return True
+    return H % mesh.shape["model"] == 0
+
+
+def _causal_attention_chunked(q, k, v, scale, *, softcap: float = 0.0,
+                              q_offset=0, heads_shardable: bool = True,
+                              unroll: bool = False):
+    """Memory-bounded causal attention: lax.scan over query blocks, each
+    block rematerialized (recompute probs in backward — XLA flash).
+
+    q (B,S,H,dq), k (B,T,KV,dq), v (B,T,KV,dv) -> (B,S,H,dv).
+    Query i sits at global position ``q_offset + i`` (traced OK); key t at
+    position t.  T >= S; zero-filled cache tail is masked by causality.
+
+    Sharding: when the head count divides the model axis the logits slab
+    shards over heads; otherwise (phi3 40H, deepseek 56H, minitron 24H on
+    a 16-way axis) the Q-SEQUENCE dim shards over "model" instead —
+    Megatron-style context parallelism.  K/V are per-kv-head small (GQA)
+    and replicate across the model axis in that mode.
+    """
+    from repro.parallel.sharding import constrain, BATCH, HEADS, KV_SEQ
+    B, S, H, dq = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    dv = v.shape[-1]
+    bq = _pick_block(S, ATTN_CHUNK)
+    n = S // bq
+    qc = q.reshape(B, n, bq, KV, G, dq)
+    kpos = jnp.arange(T, dtype=jnp.int32)
+    seq_par = not heads_shardable
+    if seq_par:
+        qc = constrain(qc, (BATCH, None, KV_SEQ, None, None, None))
+
+    def block(carry, xs):
+        qb, i = xs                                  # (B,bq,KV,G,dq), scalar
+        if seq_par:
+            qb = constrain(qb, (BATCH, KV_SEQ, None, None, None))
+        logits = jnp.einsum("bskgq,btkq->bkgst", qb, k).astype(jnp.float32)
+        logits = logits * scale
+        if softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        qpos = q_offset + i * bq + jnp.arange(bq, dtype=jnp.int32)
+        mask = qpos[:, None] >= kpos[None, :]       # (bq, T)
+        logits = jnp.where(mask[None, None, None], logits,
+                           jnp.finfo(jnp.float32).min)
+        p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        ob = jnp.einsum("bkgst,btkv->bskgv", p, v)  # (B,bq,KV,G,dv)
+        if seq_par:
+            ob = constrain(ob, (BATCH, KV_SEQ, None, None, None))
+        return carry, ob
+
+    if unroll:  # exact-cost mode: python loop, every chunk in the HLO
+        outs = [block(None, (qc[:, i], jnp.int32(i)))[1] for i in range(n)]
+        out = jnp.stack(outs, axis=1)
+    else:
+        _, out = jax.lax.scan(jax.checkpoint(block), None,
+                              (jnp.moveaxis(qc, 1, 0),
+                               jnp.arange(n, dtype=jnp.int32)))
+        out = jnp.moveaxis(out, 0, 1)
+    return out.reshape(B, S, H, dv)
+
+
+def init_attention(key, cfg, dtype) -> Params:
+    D, H, KV = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dq, dv = cfg.qk_dim, cfg.vo_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H, dq), D, dtype),
+        "wk": dense_init(ks[1], (D, KV, dq), D, dtype),
+        "wv": dense_init(ks[2], (D, KV, dv), D, dtype),
+        "wo": dense_init(ks[3], (H, dv, D), H * dv, dtype),
+    }
+    return p
+
+
+def _merge_transitions(params: Params, q, k, ctx):
+    """Apply the (optional) CLOVER trainable matrices."""
+    if "s_qk" in params:
+        q = jnp.einsum("bshq,hqr->bshr", q, params["s_qk"].astype(q.dtype))
+    if ctx is not None and "s_vo" in params:
+        ctx = jnp.einsum("bshv,hvw->bshw", ctx, params["s_vo"].astype(ctx.dtype))
+    return q, ctx
+
+
+def attention(params: Params, cfg, x: jnp.ndarray, *,
+              positions: jnp.ndarray,
+              kv_cache: Optional[Params] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              attn_impl: str = "xla",
+              ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """GQA attention.
+
+    Full-sequence (train/prefill): ``kv_cache is None`` -> causal mask.
+    Decode: ``kv_cache`` holds {"k": (B, Smax, KV, dq), "v": (B, Smax, KV, dv)}
+    and ``cache_index`` is the write position (scalar int32); x has S==1.
+    """
+    B, S, D = x.shape
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = cfg.q_per_kv
+    dq, dv = cfg.qk_dim, cfg.vo_dim
+    # CLOVER-pruned heads approximate the ORIGINAL product Q K^T, so the
+    # softmax scale stays 1/sqrt(original head_dim) regardless of rank.
+    scale = 1.0 / math.sqrt(cfg.head_dim_)
+
+    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dkq->bskq", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dkv->bskv", x, params["wv"].astype(x.dtype))
+
+    if "k_t" in params:  # intra-layer K transition (RoPE-safe CLOVER PEFT)
+        k = jnp.einsum("bskq,kqr->bskr", k, params["k_t"].astype(k.dtype))
+    if "s_qk" in params:
+        q = jnp.einsum("bshq,hqr->bshr", q, params["s_qk"].astype(q.dtype))
+
+    # Partial-RoPE pruning keeps the rotated block intact at the front, so
+    # RoPE always applies to the first rope_dims (<= dq) dims.
+    rot = min(cfg.rope_dims, dq)
+    if rot:
+        cos, sin = rope_tables(positions, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+
+    use_pallas = (attn_impl in ("pallas", "interpret")
+                  and cfg.attn_logit_softcap == 0)
+
+    new_cache = None
+    if kv_cache is not None:
+        # cache_index: scalar (whole batch at one position — prefill and
+        # lockstep decode) or (B,) vector (per-slot positions — the
+        # serving engine's continuous batching).
+        per_slot = jnp.ndim(cache_index) == 1
+        if per_slot:
+            assert S == 1, "per-slot cache index is decode-only"
+            upd = jax.vmap(
+                lambda c, kn, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, kn, i, axis=0))
+            ck = upd(kv_cache["k"], k.astype(kv_cache["k"].dtype),
+                     cache_index)
+            cv = upd(kv_cache["v"], v.astype(kv_cache["v"].dtype),
+                     cache_index)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), cache_index,
+                axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), cache_index,
+                axis=1)
+        new_cache = {"k": ck, "v": cv}
+        if use_pallas and S == 1:  # flash-decoding against the cache
+            from repro.kernels import ops as kops
+            lengths = jnp.broadcast_to(cache_index + 1, (B,)).astype(jnp.int32)
+            ctx = kops.decode_attention(
+                q[:, 0], ck.astype(x.dtype), cv.astype(x.dtype), lengths,
+                scale=scale, impl=attn_impl)[:, None]          # (B,1,H,dv)
+            if "s_vo" in params:
+                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
+                                 params["s_vo"].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+            return y, new_cache
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+        if S > ATTN_CHUNK:
+            # long cached prefill: chunked flash path
+            ctx = _causal_attention_chunked(
+                q, k, v, scale, softcap=cfg.attn_logit_softcap,
+                q_offset=cache_index,
+                heads_shardable=_heads_shardable(H),
+                unroll=cfg.unroll_layers)
+            if "s_vo" in params:
+                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
+                                 params["s_vo"].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+            return y, new_cache
+        T = k.shape[1]
+        kv_pos = jnp.arange(T, dtype=jnp.int32)[None, :]
+        ci = jnp.broadcast_to(jnp.atleast_1d(cache_index), (B,))
+        valid = kv_pos <= (ci[:, None] + S - 1)        # (B, T)
+        mask = jnp.broadcast_to(valid[:, None, :], (B, S, T))
+        if S > 1:  # cached prefill: causal within the written window
+            qpos = cache_index + jnp.arange(S, dtype=jnp.int32)
+            mask = mask & (kv_pos[None, :, :] <= qpos[None, :, None])
+    else:
+        if use_pallas:  # full-sequence causal flash kernel
+            from repro.kernels import ops as kops
+            ctx = kops.clover_attention(q, k, v, causal=True, scale=scale,
+                                        impl=attn_impl)        # (B,S,H,dv)
+            if "s_vo" in params:
+                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
+                                 params["s_vo"].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+            return y, None
+        if S > ATTN_CHUNK:
+            # XLA flash: scan over q blocks so the (bq, S) logits slab is
+            # the peak — full (S, S) logits at 4k-32k would not fit HBM.
+            # unroll_layers (exact-cost mode) python-unrolls the chunk
+            # loop: identical math, trip-count-free HLO.
+            ctx = _causal_attention_chunked(q, k, v, scale,
+                                            softcap=cfg.attn_logit_softcap,
+                                            heads_shardable=_heads_shardable(H),
+                                            unroll=cfg.unroll_layers)
+            if "s_vo" in params:
+                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
+                                 params["s_vo"].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+            return y, None
+        T = S
+        qpos = jnp.arange(S, dtype=jnp.int32)
+        mask = (qpos[None, :, None] >= qpos[None, None, :])
+        mask = jnp.broadcast_to(mask, (B, S, T))
+
+    qg = q.reshape(B, S, KV, G, dq)
+    logits = jnp.einsum("bskgq,btkq->bkgst", qg, k) * scale
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    logits = logits.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    logits = jnp.where(mask[:, None, None, :, :], logits, neg)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bkgst,btkv->bskgv", probs, v).reshape(B, S, H, dv)
+
+    if "s_vo" in params:
+        ctx = jnp.einsum("bshv,hvw->bshw", ctx, params["s_vo"].astype(ctx.dtype))
+    y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, dtype) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p = {
+            "w_gate": dense_init(ks[0], (D, F), D, dtype),
+            "w_up": dense_init(ks[1], (D, F), D, dtype),
+            "w_down": dense_init(ks[2], (F, D), F, dtype),
+        }
+    else:
+        p = {
+            "w_up": dense_init(ks[0], (D, F), D, dtype),
+            "w_down": dense_init(ks[1], (F, D), F, dtype),
+        }
+    return p
+
+
+def apply_mlp(params: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    if "up_u" in params:  # CLOVER blockwise-decomposed Up (+ transition)
+        h = jnp.einsum("bsd,dnr->bsnr", x, params["up_u"].astype(x.dtype))
+        h = jnp.einsum("bsnr,nrk->bsnk", h, params["up_t"].astype(x.dtype))
+        up = h.reshape(*x.shape[:-1], -1)
+    else:
+        up = x @ params["w_up"].astype(x.dtype)
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * up
+    elif cfg.mlp_act == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"].astype(x.dtype)

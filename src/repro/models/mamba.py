@@ -1,0 +1,195 @@
+"""Mamba-1 block (selective SSM) for the jamba hybrid architecture.
+
+Training path uses a *chunked* selective scan: ``lax.scan`` over chunks of
+the sequence with the SSM state as carry; within a chunk the recurrence is
+evaluated with an associative scan, and the chunk body is rematerialized
+(``jax.checkpoint``) so backward memory stays chunk-local — the TPU
+adaptation of the CUDA selective-scan recomputation trick.
+
+Decode path carries (conv_state, ssm_state) and does an O(1) update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+CHUNK = 128
+
+
+def init_mamba(key, cfg, dtype) -> Params:
+    D = cfg.d_model
+    dI, dS = cfg.mamba_d_inner, cfg.mamba_d_state
+    dt_rank = cfg.mamba_dt_rank_
+    dconv = cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    A = jnp.tile(jnp.arange(1, dS + 1, dtype=jnp.float32)[None, :], (dI, 1))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * dI), D, dtype),
+        "conv_w": dense_init(ks[1], (dconv, dI), dconv, dtype),
+        "conv_b": jnp.zeros((dI,), dtype),
+        "x_proj": dense_init(ks[2], (dI, dt_rank + 2 * dS), dI, dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, dI), dt_rank, dtype),
+        "dt_bias": jnp.full((dI,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((dI,), jnp.float32),
+        "out_proj": dense_init(ks[4], (dI, D), dI, dtype),
+    }
+
+
+def _ssm_chunk(h0, a, b, C):
+    """One chunk of the selective scan.
+
+    h0: (B, dI, dS) carry;  a: (B, c, dI, dS) decay = exp(dt*A);
+    b: (B, c, dI, dS) input = dt*B_t*x_t;  C: (B, c, dS).
+    Returns (h_end, y) with y: (B, c, dI).
+    """
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    acc_a, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    # fold in the carry: h_t += (prod a up to t) * h0
+    h = h + acc_a * h0[:, None]
+    y = jnp.einsum("bcns,bcs->bcn", h, C)
+    h_end = h[:, -1]
+    return h_end, y
+
+
+def _selective_scan(dt, A, Bmat, C, xin, h0, unroll=False):
+    """dt, xin: (B, S, dI); A: (dI, dS); Bmat, C: (B, S, dS); h0: (B,dI,dS).
+
+    The (chunk, dI, dS) decay/input tensors are built INSIDE the
+    rematerialized chunk body — materializing them for the full sequence
+    would be S/chunk times the memory (fatal at 32k x dI=8k x dS=16).
+    ``unroll`` (exact-cost mode) uses one whole-sequence chunk instead so
+    cost_analysis counts every flop (compile-only; never executed).
+    """
+    B, S, dI = xin.shape
+    dS = A.shape[-1]
+    if unroll:
+        # exact-cost mode: python-unrolled, capped at 64 chunks (cost is
+        # linear in chunk size so totals stay exact).
+        chunk = S
+        for cand in range(max(CHUNK, (S + 63) // 64), S + 1):
+            if S % cand == 0:
+                chunk = cand
+                break
+    else:
+        chunk = CHUNK if S % CHUNK == 0 else S
+    n_chunks = S // chunk
+
+    def split(t):  # (B, S, ...) -> (n_chunks, B, chunk, ...)
+        return jnp.moveaxis(
+            t.reshape(B, n_chunks, chunk, *t.shape[2:]), 1, 0)
+
+    def chunk_body(h, xs):
+        dtc, bc_in, cc, xc = xs                   # (B,c,dI),(B,c,dS),...
+        a = jnp.exp(dtc[..., None] * (-A)[None, None])      # (B,c,dI,dS)
+        b = (dtc * xc)[..., None] * bc_in[:, :, None, :]    # (B,c,dI,dS)
+        return _ssm_chunk(h, a, b, cc)
+
+    def body(h, xs):
+        h_end, y = jax.checkpoint(chunk_body)(h, xs)
+        return h_end, y
+
+    if unroll:
+        h = h0
+        ys = []
+        xs_all = (split(dt), split(Bmat), split(C), split(xin))
+        for i in range(n_chunks):
+            h, y = chunk_body(h, tuple(t[i] for t in xs_all))
+            ys.append(y)
+        y = (jnp.concatenate(ys, axis=1) if n_chunks > 1
+             else ys[0]).reshape(B, S, dI)
+        return y, h
+
+    h_end, ys = jax.lax.scan(
+        body, h0, (split(dt), split(Bmat), split(C), split(xin)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, dI)
+    return y, h_end
+
+
+def mamba_forward(params: Params, cfg, x: jnp.ndarray, *,
+                  state: Optional[Params] = None,
+                  ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, S, D).  state (decode): {"conv": (B, dconv-1, dI),
+    "ssm": (B, dI, dS)}.  Full-sequence when state is None."""
+    B, S, D = x.shape
+    dI, dS = cfg.mamba_d_inner, cfg.mamba_d_state
+    dt_rank = cfg.mamba_dt_rank_
+    dconv = cfg.mamba_d_conv
+
+    xz = x @ params["in_proj"].astype(x.dtype)               # (B,S,2dI)
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over seq
+    conv_w = params["conv_w"].astype(x.dtype)                # (dconv, dI)
+    if state is None:
+        pad = jnp.zeros((B, dconv - 1, dI), x.dtype)
+        new_conv = xin[:, S - (dconv - 1):, :] if S >= dconv - 1 else None
+    else:
+        pad = state["conv"].astype(x.dtype)
+        window = jnp.concatenate([pad, xin], axis=1)
+        new_conv = window[:, -(dconv - 1):, :]
+    xp = jnp.concatenate([pad, xin], axis=1)                 # (B,S+dc-1,dI)
+    idx = jnp.arange(S)[:, None] + jnp.arange(dconv)[None, :]
+    xw = xp[:, idx, :]                                       # (B,S,dconv,dI)
+    xc = jnp.einsum("bscn,cn->bsn", xw, conv_w) + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ params["x_proj"].astype(x.dtype)             # (B,S,dtr+2dS)
+    dt_lr, Bmat, C = jnp.split(proj, [dt_rank, dt_rank + dS], axis=-1)
+    dt = jax.nn.softplus(
+        dt_lr @ params["dt_proj"].astype(x.dtype)
+        + params["dt_bias"].astype(x.dtype)).astype(jnp.float32)
+    A = jnp.exp(params["A_log"].astype(jnp.float32))         # (dI,dS), positive
+
+    xcf = xc.astype(jnp.float32)
+    Bf, Cf = Bmat.astype(jnp.float32), C.astype(jnp.float32)
+
+    if state is None:
+        h0 = jnp.zeros((B, dI, dS), jnp.float32)
+        if getattr(cfg, "kernel_impl", "xla") in ("pallas", "interpret"):
+            from repro.kernels import ops as kops
+            y, h_end = kops.mamba_scan(dt, A, Bf, Cf, xcf, h0,
+                                       impl=cfg.kernel_impl)
+        else:
+            y, h_end = _selective_scan(dt, A, Bf, Cf, xcf, h0,
+                                       unroll=getattr(cfg, "unroll_layers",
+                                                      False))
+        new_state = None
+    else:
+        # single-step (S small, typically 1): plain recurrence
+        h = state["ssm"].astype(jnp.float32)
+        a = jnp.exp(dt[..., None] * (-A)[None, None])
+        b = (dt * xcf)[..., None] * Bf[:, :, None, :]
+
+        def step(hc, xs):
+            at, bt, ct = xs
+            hc = at * hc + bt
+            return hc, jnp.einsum("bns,bs->bn", hc, ct)
+
+        h_end, ys = jax.lax.scan(
+            step, h,
+            (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)
+        new_state = {"conv": new_conv.astype(x.dtype), "ssm": h_end}
+
+    y = y.astype(x.dtype) + xc * params["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(x.dtype), new_state
+
+
+def init_mamba_state(cfg, batch: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32),
+    }

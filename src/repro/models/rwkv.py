@@ -1,0 +1,244 @@
+"""RWKV-6 (Finch) blocks: time-mix with data-dependent per-channel decay and
+channel-mix FFN.
+
+wkv recurrence per head (d = rwkv_head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          S in R^{d x d}
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+Training uses the chunked parallel form (linear-attention style) with
+log-space cumulative decays; decode carries (last_x, last_x_ffn, S).
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+token-shift mixing coefficients for r/k/v/g are static per-channel (RWKV-6
+makes them data-dependent via a small LoRA); the decay w keeps its full
+data-dependent LoRA form, which is the part that matters for the recurrence.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+W_LORA = 64
+CHUNK = 32
+
+
+def init_rwkv_timemix(key, cfg, dtype) -> Params:
+    D = cfg.d_model
+    H, dh = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "mix_r": jnp.full((D,), 0.5, dtype),
+        "mix_k": jnp.full((D,), 0.5, dtype),
+        "mix_v": jnp.full((D,), 0.5, dtype),
+        "mix_g": jnp.full((D,), 0.5, dtype),
+        "mix_w": jnp.full((D,), 0.5, dtype),
+        "wr": dense_init(ks[0], (D, D), D, dtype),
+        "wk": dense_init(ks[1], (D, D), D, dtype),
+        "wv": dense_init(ks[2], (D, D), D, dtype),
+        "wg": dense_init(ks[3], (D, D), D, dtype),
+        "w0": jnp.full((D,), -2.0, jnp.float32),       # decay bias
+        "w_lora_a": dense_init(ks[4], (D, W_LORA), D, dtype),
+        "w_lora_b": (jax.random.normal(ks[5], (W_LORA, D)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[6], (H, dh)) * 0.1).astype(jnp.float32),
+        "out": dense_init(ks[7], (D, D), D, dtype),
+        "ln_x_scale": jnp.ones((D,), dtype),
+        "ln_x_bias": jnp.zeros((D,), dtype),
+    }
+
+
+def init_rwkv_chanmix(key, cfg, dtype) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.full((D,), 0.5, dtype),
+        "mix_r": jnp.full((D,), 0.5, dtype),
+        "wk": dense_init(ks[0], (D, F), D, dtype),
+        "wv": dense_init(ks[1], (F, D), F, dtype),
+        "wr": dense_init(ks[2], (D, D), D, dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Shift sequence right by one; position 0 sees `last` (or zeros)."""
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, coef):
+    c = coef.astype(x.dtype)
+    return x * c + xs * (1.0 - c)
+
+
+def _group_norm(x, scale, bias, n_groups, eps=1e-5):
+    """x: (B, S, D) grouped into n_groups along D (RWKV head-wise LN)."""
+    B, S, D = x.shape
+    xg = x.reshape(B, S, n_groups, D // n_groups).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xn = (xg - mu) * jax.lax.rsqrt(var + eps)
+    xn = xn.reshape(B, S, D)
+    return (xn * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def wkv6_chunked(r, k, v, logw, u, S0, unroll=False):
+    """Chunked parallel wkv6.
+
+    r,k,v: (B, H, T, d);  logw: (B, H, T, d) = log decay in (-inf, 0);
+    u: (H, d) bonus;  S0: (B, H, d, d) initial state (k-dim x v-dim).
+    Returns (out (B,H,T,d), S_end).  ``unroll`` = exact-cost mode: one
+    whole-sequence chunk (compile-only; see transformer.unroll_layers).
+    """
+    B, H, T, d = r.shape
+    if unroll:
+        # exact-cost mode: python-unrolled, capped at 64 chunks (chunk
+        # grows for long T; the c^2 intra-chunk term then overstates
+        # deployed flops — noted in EXPERIMENTS.md §Roofline).
+        c = T
+        for cand in range(max(CHUNK, (T + 63) // 64), T + 1):
+            if T % cand == 0:
+                c = cand
+                break
+    else:
+        c = CHUNK if T % CHUNK == 0 else T
+    n = T // c
+    rc = r.reshape(B, H, n, c, d)
+    kc = k.reshape(B, H, n, c, d)
+    vc = v.reshape(B, H, n, c, d)
+    lwc = logw.reshape(B, H, n, c, d)
+
+    def chunk_body(S, xs):
+        rb, kb, vb, lw = xs                      # (B,H,c,d)
+        cum = jnp.cumsum(lw, axis=2)             # inclusive logdecay (<=0, dec.)
+        # within-chunk scores via pairwise log-space differences:
+        # cum_t - cum_s <= 0 for t > s, so exp() never overflows.
+        ri = rb * jnp.exp(cum)                   # exp(cum) <= 1, safe
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        ldiff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,H,t,s,d)
+        ldiff = jnp.where(tri[None, None, :, :, None], ldiff, -jnp.inf)
+        scores = jnp.einsum("bhtd,bhtsd,bhsd->bhts",
+                            rb, jnp.exp(ldiff), kb)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        # diagonal bonus term: r_t . (u * k_t)
+        diag = jnp.einsum("bhtd,bhtd->bht", rb, u[None, :, None, :] * kb)
+        out = jnp.einsum("bhts,bhsd->bhtd", scores, vb) + diag[..., None] * vb
+        # cross-chunk: r_t . (exp(cum_t) * S)
+        out = out + jnp.einsum("bhtd,bhde->bhte", ri, S)
+        # state update: S' = diag(exp(cum_end)) S + sum_s exp(cum_end-cum_s) k_s v_s^T
+        cend = cum[:, :, -1:, :]
+        kd = kb * jnp.exp(cend - cum)
+        S = jnp.exp(cend[:, :, 0, :])[..., None] * S + jnp.einsum(
+            "bhsd,bhse->bhde", kd, vb)
+        return S, out
+
+    def body(S, xs):
+        return jax.checkpoint(chunk_body)(S, xs)
+
+    if unroll:
+        S = S0
+        outs = []
+        for i in range(n):
+            S, o = chunk_body(
+                S, (rc[:, :, i], kc[:, :, i], vc[:, :, i], lwc[:, :, i]))
+            outs.append(o)
+        out = jnp.concatenate(outs, axis=2) if n > 1 else outs[0]
+        return out.reshape(B, H, T, d), S
+
+    S_end, outs = jax.lax.scan(
+        body, S0,
+        (jnp.moveaxis(rc, 2, 0), jnp.moveaxis(kc, 2, 0),
+         jnp.moveaxis(vc, 2, 0), jnp.moveaxis(lwc, 2, 0)))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, T, d)
+    return out, S_end
+
+
+def rwkv_timemix_forward(params: Params, cfg, x: jnp.ndarray, *,
+                         state: Optional[Params] = None,
+                         ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B, S, D).  state (decode): {"last_x": (B,D), "wkv": (B,H,d,d)}."""
+    B, T, D = x.shape
+    H, dh = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+
+    last_x = state["last_x"] if state is not None else None
+    xs = _token_shift(x, last_x)
+    xr = _mix(x, xs, params["mix_r"])
+    xk = _mix(x, xs, params["mix_k"])
+    xv = _mix(x, xs, params["mix_v"])
+    xg = _mix(x, xs, params["mix_g"])
+    xw = _mix(x, xs, params["mix_w"])
+
+    r = xr @ params["wr"].astype(x.dtype)
+    k = xk @ params["wk"].astype(x.dtype)
+    v = xv @ params["wv"].astype(x.dtype)
+    g = jax.nn.silu(xg @ params["wg"].astype(x.dtype))
+
+    # data-dependent decay (f32): logw = -exp(w0 + lora(xw)) in (-inf, 0)
+    lora = jnp.tanh(xw @ params["w_lora_a"].astype(x.dtype)) @ \
+        params["w_lora_b"].astype(x.dtype)
+    logw = -jnp.exp(params["w0"].astype(jnp.float32)
+                    + lora.astype(jnp.float32))              # (B,T,D)
+    logw = jnp.clip(logw, -10.0, -1e-4)
+
+    def heads(t):  # (B,T,D) -> (B,H,T,dh)
+        return jnp.moveaxis(t.reshape(B, T, H, dh), 2, 1)
+
+    rf, kf, vf = (heads(t.astype(jnp.float32)) for t in (r, k, v))
+    lwf = heads(logw)
+    u = params["u"].astype(jnp.float32)
+
+    S0 = (state["wkv"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, H, dh, dh), jnp.float32))
+    if getattr(cfg, "kernel_impl", "xla") in ("pallas", "interpret"):
+        from repro.kernels import ops as kops
+        out, S_end = kops.wkv6(rf, kf, vf, lwf, u, S0,
+                               impl=cfg.kernel_impl)
+    else:
+        out, S_end = wkv6_chunked(rf, kf, vf, lwf, u, S0,
+                                  unroll=getattr(cfg, "unroll_layers",
+                                                 False))
+    out = jnp.moveaxis(out, 1, 2).reshape(B, T, D).astype(x.dtype)
+
+    out = _group_norm(out, params["ln_x_scale"], params["ln_x_bias"], H)
+    out = out * g
+    y = out @ params["out"].astype(x.dtype)
+
+    new_state = None
+    if state is not None:
+        new_state = {"last_x": x[:, -1, :], "wkv": S_end}
+    return y, new_state
+
+
+def rwkv_chanmix_forward(params: Params, cfg, x: jnp.ndarray, *,
+                         state: Optional[Params] = None,
+                         ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    last_x = state["last_x"] if state is not None else None
+    xs = _token_shift(x, last_x)
+    xk = _mix(x, xs, params["mix_k"])
+    xr = _mix(x, xs, params["mix_r"])
+    if "up_u" in params:  # CLOVER blockwise-decomposed key projection
+        h = jnp.einsum("bsd,dnr->bsnr", xk, params["up_u"].astype(x.dtype))
+        h = jnp.einsum("bsnr,nrk->bsnk", h, params["up_t"].astype(x.dtype))
+        kk = h.reshape(*xk.shape[:-1], -1)
+    else:
+        kk = xk @ params["wk"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(kk))
+    out = jax.nn.sigmoid(xr @ params["wr"].astype(x.dtype)) * (
+        k @ params["wv"].astype(x.dtype))
+    new_state = {"last_x": x[:, -1, :]} if state is not None else None
+    return out, new_state
+
+
+def init_rwkv_state(cfg, batch: int, dtype) -> Params:
+    H, dh = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    return {
+        "time": {"last_x": jnp.zeros((batch, cfg.d_model), dtype),
+                 "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32)},
+        "chan": {"last_x": jnp.zeros((batch, cfg.d_model), dtype)},
+    }

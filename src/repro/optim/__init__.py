@@ -1,0 +1,4 @@
+"""Optimizers and schedules (pure JAX, no optax dependency)."""
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, warmup_cosine, warmup_linear,
+    global_norm, clip_by_global_norm)

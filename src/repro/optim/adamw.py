@@ -1,0 +1,118 @@
+"""AdamW with decoupled weight decay, global-norm clipping, LR schedules.
+
+Moments are stored in f32 regardless of param dtype (bf16-safe master
+scaling happens in the update, not in storage of params — params keep
+their dtype; at bf16 this is the standard "bf16 params + f32 moments"
+memory/stability point).  ``None`` leaves (frozen halves from
+``peft.partition``) pass through untouched, so CLOVER-S fine-tuning uses
+the same optimizer on the trainable half only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0     # 0 disables
+
+
+def _map(f, *trees):
+    return jax.tree.map(f, *trees, is_leaf=lambda x: x is None)
+
+
+def adamw_init(params: Params) -> Params:
+    zeros = _map(lambda p: None if p is None
+                 else jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(
+        lambda z: None if z is None else jnp.zeros_like(z), zeros,
+        is_leaf=lambda x: x is None),
+        "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree) if g is not None]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return _map(lambda g: None if g is None else g * scale, grads), gn
+
+
+def adamw_update(grads: Params, opt_state: Params, params: Params,
+                 cfg: AdamWConfig, lr_scale: jnp.ndarray = 1.0,
+                 ) -> Tuple[Params, Params, jnp.ndarray]:
+    """Returns (new_params, new_opt_state, pre-clip grad norm)."""
+    if cfg.grad_clip > 0:
+        grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gn = global_norm(grads)
+    step = opt_state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        if p is None or g is None:
+            return None, None, None
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:   # no decay on norms/bias
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    # explicit flatten/unflatten: the param tree contains tuples as
+    # INTERNAL nodes ("blocks"), so tuple-valued tree.map leaves are not
+    # distinguishable — operate on leaf lists instead.
+    is_none = lambda x: x is None  # noqa: E731
+    treedef = jax.tree_util.tree_structure(params, is_leaf=is_none)
+    flat = [jax.tree_util.tree_leaves(t, is_leaf=is_none)
+            for t in (params, grads, opt_state["m"], opt_state["v"])]
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(*flat):
+        np_, nm, nv = upd(p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)  # noqa: E731
+    return (unf(new_p),
+            {"m": unf(new_m), "v": unf(new_v), "step": step}, gn)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(step, *, warmup: int, total: int, floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def warmup_linear(step, *, warmup: int, total: int):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, warmup)
+    decay = jnp.clip(1.0 - (s - warmup) / jnp.maximum(1.0, total - warmup),
+                     0, 1)
+    return jnp.where(s < warmup, warm, decay)

@@ -1,0 +1,153 @@
+"""Compiled-HLO analysis: collective bytes + the three roofline terms.
+
+The dry-run's compiled artifact is the per-device SPMD program, so
+``cost_analysis()`` flops/bytes and the summed collective operand bytes
+are already per-chip quantities (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e, per chip):
+  peak bf16 compute  197 TFLOP/s
+  HBM bandwidth      819 GB/s
+  ICI per link       ~50 GB/s
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# '  %name = <result shapes> <opcode>(' — operands are bare %refs in the
+# compiled HLO text, so sizes come from the RESULT side + group size.
+_LINE_RE = re.compile(
+    r"=\s*(?P<result>(?:\()?(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?"
+    r"(?:,\s*)?)+(?:\))?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<phase>-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format: [n_groups,group_size]<=[total]
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device OPERAND bytes of every collective, keyed by opcode.
+
+    The compiled HLO prints operands as bare ``%refs``, so sizes derive
+    from the result shapes (always printed) and the replica group size g:
+
+      all-reduce          operand == result
+      all-gather          operand == result / g   (result is gathered)
+      reduce-scatter      operand == result * g   (result is scattered)
+      all-to-all          operand == result
+      collective-permute  operand == result
+
+    ``-done`` halves of async pairs are skipped (counted at ``-start``).
+    """
+    out: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or m.group("phase") == "-done":
+            continue
+        op = m.group("op")
+        rb = sum(_shape_bytes(d, s)
+                 for d, s in _SHAPE_RE.findall(m.group("result")))
+        g = max(1, _group_size(line))
+        if op == "all-gather":
+            rb = rb // g
+        elif op == "reduce-scatter":
+            rb = rb * g
+        out[op] += rb
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective operand bytes
+    coll_detail: Dict[str, int]
+    t_compute: float             # seconds
+    t_memory: float
+    t_collective: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound(self) -> float:
+        """Roof-bound step time (s) = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def fraction(self, model_flops_per_device: float) -> float:
+        """Achievable roofline fraction = useful-compute time / bound."""
+        t_useful = model_flops_per_device / PEAK_FLOPS
+        return t_useful / max(self.bound, 1e-30)
+
+
+def roofline_from_compiled(compiled, *, ici_links: int = 4,
+                           hlo_text: Optional[str] = None) -> Roofline:
+    """Three roofline terms from a compiled (partitioned) executable.
+
+    ici_links: usable ICI links per chip for the dominant collective
+    direction (v5e 2D torus: 4 links; conservative default)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):   # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    cb = float(sum(coll.values()))
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, coll_bytes=cb, coll_detail=coll,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=hbm / HBM_BW,
+        t_collective=cb / (ICI_BW * ici_links),
+    )
+
+
+def memory_per_device(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = float(getattr(ma, k, 0) or 0)
+    out["total_gib"] = (out["argument_size_in_bytes"]
+                        + out["temp_size_in_bytes"]) / 2**30
+    return out

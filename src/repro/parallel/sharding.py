@@ -1,0 +1,274 @@
+"""Logical-axis sharding rules (MaxText-style) for every param/state tree.
+
+Each weight leaf is matched BY NAME to a tuple of logical axes; logical
+axes map to mesh axes through ``ShardingRules``; any dim whose size does
+not divide its mesh-axis extent degrades to replication (None) — this is
+what absorbs awkward head counts (gpt2's 25 heads, phi3's 10 KV heads,
+280 Up-blocks) without per-arch special cases.
+
+Default logical->mesh map (production):
+  embed(d_model) -> "data"   (FSDP: weights gathered per-layer on use)
+  heads/ff/experts/vocab -> "model"  (TP / EP)
+  batch -> ("pod", "data")
+  kv_seq -> "model"  (decode only: the 32k/500k KV cache is sharded
+            along sequence; GSPMD inserts the flash-decoding-style
+            max/sum combines.  Chosen over head-sharding because KV-head
+            counts of the assigned archs rarely divide 16 — see
+            DESIGN.md §7.)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Dict[str, Any]
+
+# logical axis names
+BATCH = "batch"
+EMBED = "embed"        # d_model dim of weights (FSDP)
+HEADS = "heads"        # query heads
+KV_HEADS = "kv"        # kv heads
+FF = "ff"              # MLP hidden
+EXPERTS = "experts"    # MoE expert dim
+VOCAB = "vocab"
+KV_SEQ = "kv_seq"      # KV-cache sequence dim (decode)
+REP = None             # replicated
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+    rules: Dict[str, Any] = field(default_factory=lambda: {
+        BATCH: ("pod", "data"),
+        EMBED: "data",
+        HEADS: "model",
+        KV_HEADS: "model",
+        FF: "model",
+        EXPERTS: "model",
+        VOCAB: "model",
+        KV_SEQ: "model",
+    })
+
+    def mesh_axes(self, logical: Optional[str], mesh: Mesh):
+        if logical is None:
+            return None
+        ax = self.rules.get(logical)
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            present = tuple(a for a in ax if a in mesh.shape)
+            return present if present else None
+        return ax if ax in mesh.shape else None
+
+    def spec(self, logical_axes: Tuple[Optional[str], ...], shape,
+             mesh: Mesh) -> P:
+        """Resolve logical axes -> PartitionSpec, dropping non-divisible."""
+        out = []
+        for ax_name, dim in zip(logical_axes, shape):
+            m = self.mesh_axes(ax_name, mesh)
+            if m is None:
+                out.append(None)
+                continue
+            extent = (math.prod(mesh.shape[a] for a in m)
+                      if isinstance(m, tuple) else mesh.shape[m])
+            out.append(m if dim % extent == 0 else None)
+        return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf logical axes, keyed by (parent, leaf-name) patterns
+# ---------------------------------------------------------------------------
+
+# name -> logical axes for the TRAILING dims (leading stacked n_blocks
+# axis is always replicated).  Names are unique across the tree.
+_WEIGHT_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # attention (wq (D,H,dq), wk/wv (D,KV,d), wo (H,dv,D))
+    "wq": (EMBED, HEADS, None),
+    "wv": (EMBED, KV_HEADS, None),
+    "wo": (HEADS, None, EMBED),
+    # clover transitions
+    "s_qk": (HEADS, None, None),
+    "s_vo": (HEADS, None, None),
+    "k_t": (KV_HEADS, None, None),
+    "up_t": (FF, None, None),           # (n_up_blocks, blk, blk)
+    "up_u": (EMBED, FF, None),          # (D, n_up_blocks, blk)
+    # dense mlp
+    "w_gate": (EMBED, FF),
+    "w_up": (EMBED, FF),
+    "w_down": (FF, EMBED),
+    # moe (router (D,E), experts (E,D,de) / (E,de,D), shared (D,ds))
+    "router": (EMBED, None),
+    "shared_up": (EMBED, FF),
+    "shared_gate": (EMBED, FF),
+    "shared_down": (FF, EMBED),
+    # mamba
+    "in_proj": (EMBED, FF),
+    "conv_w": (None, FF),
+    "conv_b": (FF,),
+    "x_proj": (FF, None),
+    "dt_proj": (None, FF),
+    "dt_bias": (FF,),
+    "A_log": (FF, None),
+    "D": (FF,),
+    "out_proj": (FF, EMBED),
+    # rwkv time/channel mix
+    "wr": (EMBED, FF),
+    "wg": (EMBED, FF),
+    "w_lora_a": (EMBED, None),
+    "w_lora_b": (None, FF),
+    "u": (HEADS, None),
+    "out": (FF, EMBED),
+    # norms / mixing coefficients / small vectors: replicated
+}
+
+# context-dependent overrides: leaf "wk" means attention K (D,KV,d) in
+# "attn" but channel-mix key (D,F) in "rwkv_chan".
+_CONTEXT_AXES: Dict[Tuple[str, str], Tuple[Optional[str], ...]] = {
+    ("attn", "wk"): (EMBED, KV_HEADS, None),
+    ("rwkv_chan", "wk"): (EMBED, FF),
+    ("rwkv_time", "wk"): (EMBED, FF),
+    ("rwkv_time", "wv"): (EMBED, FF),
+    ("moe", "w_up"): (EXPERTS, EMBED, None),
+    ("moe", "w_gate"): (EXPERTS, EMBED, None),
+    ("moe", "w_down"): (EXPERTS, None, EMBED),
+    ("rwkv_chan", "up_u"): (EMBED, FF, None),
+    ("rwkv_chan", "up_t"): (FF, None, None),
+}
+
+_TOP_LEVEL: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": (VOCAB, EMBED),
+    "pos_embed": (None, EMBED),
+    "lm_head": (EMBED, VOCAB),
+}
+
+
+def _leaf_axes(path) -> Optional[Tuple[Optional[str], ...]]:
+    names = [getattr(p, "key", None) for p in path
+             if getattr(p, "key", None) is not None]
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    if (parent, leaf) in _CONTEXT_AXES:
+        return _CONTEXT_AXES[(parent, leaf)]
+    if leaf in _TOP_LEVEL and "blocks" not in names:
+        return _TOP_LEVEL[leaf]
+    return _WEIGHT_AXES.get(leaf)
+
+
+def param_specs(params: Params, mesh: Mesh,
+                rules: Optional[ShardingRules] = None) -> Params:
+    """PartitionSpec tree matching ``params`` (init_lm_params layout)."""
+    rules = rules or ShardingRules()
+
+    def visit(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        axes = _leaf_axes(path)
+        if axes is None:
+            return P()          # replicate (norms, scalars, biases)
+        shape = leaf.shape
+        in_blocks = "blocks" in names
+        if in_blocks:           # leading stacked n_blocks axis
+            axes = (None,) + tuple(axes)
+        # pad/truncate to rank
+        axes = tuple(axes)[:len(shape)]
+        axes = axes + (None,) * (len(shape) - len(axes))
+        return rules.spec(axes, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def data_specs(mesh: Mesh, rules: Optional[ShardingRules] = None,
+               global_batch: Optional[int] = None):
+    """(tokens, labels) specs: batch over (pod, data); replicated when
+    the batch doesn't divide (long_500k decode has batch 1)."""
+    rules = rules or ShardingRules()
+    b = rules.mesh_axes(BATCH, mesh)
+    if b is not None and global_batch is not None:
+        extent = (math.prod(mesh.shape[a] for a in b)
+                  if isinstance(b, tuple) else mesh.shape[b])
+        if global_batch % extent != 0:
+            b = None
+    return P(b, None)
+
+
+def decode_state_specs(state: Params, mesh: Mesh,
+                       rules: Optional[ShardingRules] = None) -> Params:
+    """Decode-state tree: KV caches (B, T, KV, d) shard batch over
+    (pod,data) and the cache sequence over "model" (see module doc);
+    mamba/rwkv states shard batch and the inner dim over "model"."""
+    rules = rules or ShardingRules()
+
+    def visit(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        shape = leaf.shape
+        if "kv" in names:                       # (nb, B, T, KV, d)
+            axes = (None, BATCH, KV_SEQ, None, None)
+        elif "mamba" in names and path and getattr(
+                path[-1], "key", "") == "ssm":  # (nb, B, dI, dS)
+            axes = (None, BATCH, FF, None)
+        elif "mamba" in names:                  # conv (nb, B, dc-1, dI)
+            axes = (None, BATCH, None, FF)
+        elif getattr(path[-1], "key", "") == "wkv":  # (nb, B, H, d, d)
+            axes = (None, BATCH, HEADS, None, None)
+        elif getattr(path[-1], "key", "") == "last_x":  # (nb, B, D)
+            axes = (None, BATCH, None)
+        elif getattr(path[-1], "key", "") == "index":
+            return P()
+        else:
+            axes = (None, BATCH) + (None,) * (len(shape) - 2)
+        axes = tuple(axes)[:len(shape)]
+        axes = axes + (None,) * (len(shape) - len(axes))
+        return rules.spec(axes, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(visit, state)
+
+
+def opt_specs(param_spec_tree: Params) -> Params:
+    """Optimizer moments inherit the param sharding; scalars replicate."""
+    return param_spec_tree
+
+
+def shardings(spec_tree: Params, mesh: Mesh) -> Params:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# ambient-mesh helpers: model code can hint shardings without plumbing a
+# mesh argument through every layer — a no-op when no mesh is in context
+# (CPU smoke tests).
+# ---------------------------------------------------------------------------
+
+def ambient_mesh() -> Optional[Mesh]:
+    """The mesh currently in context (``with mesh:`` / set_mesh), or None."""
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:  # noqa: BLE001 — internal API; degrade gracefully
+        pass
+    am = jax.sharding.get_abstract_mesh()
+    if am is not None and getattr(am, "shape", None):
+        return am
+    return None
+
+
+def batch_mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def constrain(x, logical_axes: Tuple[Optional[str], ...],
+              rules: Optional[ShardingRules] = None):
+    """with_sharding_constraint by logical axes, if a mesh is ambient."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    rules = rules or ShardingRules()
+    axes = tuple(logical_axes)[:x.ndim]
+    axes = axes + (None,) * (x.ndim - len(axes))
+    return jax.lax.with_sharding_constraint(
+        x, rules.spec(axes, x.shape, mesh))

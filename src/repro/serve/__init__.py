@@ -1,0 +1,2 @@
+"""Serving: batched engine over CLOVER-rank KV caches."""
+from repro.serve.engine import Engine, EngineConfig, Request  # noqa: F401

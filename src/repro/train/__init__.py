@@ -1,0 +1,3 @@
+"""Training substrate: step functions, checkpointing, fault tolerance."""
+from repro.train.step import (  # noqa: F401
+    TrainConfig, make_train_step, make_serve_step, loss_fn)

@@ -1,0 +1,175 @@
+"""Checkpointing: atomic, async, keep-k, elastic-reshard on restore.
+
+Layout (one directory per step):
+    <root>/step_000420.tmp/...   while writing
+    <root>/step_000420/          after atomic rename (commit point)
+        manifest.json            tree structure + shapes + dtypes + meta
+        arr_00000.npy ...        leaves in tree-flatten order
+
+Writes happen on a daemon thread (training continues); ``wait()`` joins
+before the next save or at shutdown.  Restore maps any saved layout onto
+any mesh: leaves are loaded as full host arrays and device_put with the
+TARGET mesh's shardings — this is the elastic path (checkpoint from a
+(16,16) run restores onto (2,16,16), (4,4), or 1 device unchanged).
+
+At 1000+ nodes the same protocol holds with per-host shard files +
+a commit marker written by host 0 after a barrier; the single-process
+writer here keeps the identical manifest/commit contract (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Dict[str, Any]
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+class _RawView:
+    """A numpy-unsupported dtype (bfloat16) stored as a raw uint16 view
+    with the jax dtype name recorded for lossless restore."""
+    def __init__(self, raw: np.ndarray, dtype_name: str):
+        self.raw = raw
+        self.dtype_name = dtype_name
+
+    @property
+    def dtype(self):
+        return self.dtype_name
+
+    @property
+    def shape(self):
+        return self.raw.shape
+
+
+def _tree_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)[0]
+    return [(jax.tree_util.keystr(p), l) for p, l in flat]
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_write: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- save -------------------------------------------------------------
+    def save(self, step: int, tree: Params, extra: Optional[Dict] = None):
+        """Snapshot to host memory NOW, write (possibly async), rename."""
+        self.wait()
+
+        def to_host(x):
+            if x is None:
+                return None
+            a = np.asarray(x)
+            if a.dtype.kind == "V":  # bfloat16 etc: store raw 16-bit view
+                return _RawView(a.view(np.uint16), str(x.dtype))
+            return a
+        host = jax.tree.map(to_host, tree, is_leaf=lambda x: x is None)
+        extra = dict(extra or {})
+
+        def write():
+            name = f"step_{step:09d}"
+            tmp = os.path.join(self.root, name + ".tmp")
+            final = os.path.join(self.root, name)
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            leaves = _tree_paths(host)
+            manifest = {
+                "step": step,
+                "extra": extra,
+                "leaves": [
+                    {"path": p,
+                     "dtype": (None if a is None else str(a.dtype)),
+                     "shape": (None if a is None else list(a.shape))}
+                    for p, a in leaves],
+                "treedef": jax.tree_util.tree_structure(
+                    host, is_leaf=lambda x: x is None).__repr__(),
+            }
+            for i, (p, a) in enumerate(leaves):
+                if a is None:
+                    continue
+                raw = a.raw if isinstance(a, _RawView) else a
+                np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), raw)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, final)       # atomic commit
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for n in os.listdir(self.root):
+            m = _STEP_RE.match(n)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.all_steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like: Params,
+                shardings: Optional[Params] = None,
+                ) -> Tuple[Params, Dict]:
+        """Load step into the structure of ``like``; if ``shardings`` is
+        given (tree of NamedSharding on the TARGET mesh), leaves are
+        device_put sharded — the elastic-reshard path."""
+        d = os.path.join(self.root, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_like = _tree_paths(like)
+        saved = {e["path"]: i for i, e in enumerate(manifest["leaves"])}
+        leaves = []
+        sh_flat = (None if shardings is None else
+                   [l for _, l in _tree_paths(shardings)])
+        for j, (p, leaf) in enumerate(flat_like):
+            if leaf is None:
+                leaves.append(None)
+                continue
+            assert p in saved, f"checkpoint missing leaf {p}"
+            arr = np.load(os.path.join(d, f"arr_{saved[p]:05d}.npy"))
+            dt = manifest["leaves"][saved[p]]["dtype"]
+            if arr.dtype == np.uint16 and dt == "bfloat16":
+                arr = arr.view(jax.numpy.bfloat16.dtype)
+            assert tuple(arr.shape) == tuple(leaf.shape), \
+                f"{p}: saved {arr.shape} != expected {leaf.shape}"
+            if sh_flat is not None and sh_flat[j] is not None:
+                leaves.append(jax.device_put(arr, sh_flat[j]))
+            else:
+                leaves.append(jax.device_put(arr))
+        treedef = jax.tree_util.tree_structure(
+            like, is_leaf=lambda x: x is None)
+        return (jax.tree_util.tree_unflatten(treedef, leaves),
+                manifest["extra"])

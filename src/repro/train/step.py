@@ -1,0 +1,226 @@
+"""jit-compiled train / serve steps with explicit shardings.
+
+``make_train_step`` returns a jitted function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with in/out shardings derived from ``repro.parallel.sharding`` and
+params+opt donated.  Remat wraps each scanned block (memory ~ one block's
+activations instead of n_layers).
+
+``make_serve_step`` returns jitted prefill / decode entry points over a
+sharded decode state (KV cache at CLOVER ranks, sequence-sharded on the
+"model" axis for long caches).
+
+CLOVER-S PEFT training reuses the same step: ``peft_mode=True`` splits
+params via ``peft.partition`` and differentiates the trainable half only.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.core import peft as peft_lib
+from repro.parallel import sharding as sh
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    remat: bool = True
+    peft_mode: bool = False         # differentiate CLOVER-S keys only
+    grad_compress: bool = False     # int8 error-feedback on the pod axis
+    # Gradient accumulation: the global batch is split into this many
+    # microbatches (python-unrolled so cost_analysis sees every copy);
+    # peak activation memory scales 1/microbatches while the f32 grad
+    # accumulator is param-sized (sharded).  The production answer to
+    # fitting 14B-52B train steps in 16GB/chip.
+    microbatches: int = 1
+
+
+def loss_fn(params: Params, cfg: ArchConfig, tokens, labels, *,
+            frontend_embeds=None, remat: bool = True):
+    """Causal-LM cross entropy (+ MoE aux losses), mean over tokens.
+
+    labels < 0 are masked (padding)."""
+    logits, aux = T.forward(params, cfg, tokens,
+                            frontend_embeds=frontend_embeds, remat=remat)
+    # frontend positions carry no labels
+    S_tok = tokens.shape[1]
+    logits = logits[:, -S_tok:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    mask = (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    ce = jnp.sum(nll * mask) / denom
+    total = ce + sum(aux.values())
+    return total, {"loss": ce, **aux}
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh: Mesh,
+                    rules: Optional[sh.ShardingRules] = None,
+                    donate: bool = True) -> Callable:
+    """Build the jitted, sharded train step for ``cfg`` on ``mesh``."""
+    rules = rules or sh.ShardingRules()
+
+    def grad_of(params_like, batch_slice, grad_fn):
+        tokens, labels = batch_slice["tokens"], batch_slice["labels"]
+        fe = batch_slice.get("frontend_embeds")
+        return grad_fn(params_like, tokens, labels, fe)
+
+    def step(params, opt_state, batch):
+        if tcfg.peft_mode:
+            trainable, frozen = peft_lib.partition(params)
+
+            def grad_fn(tr, tokens, labels, fe):
+                def peft_loss(tr):
+                    full = peft_lib.combine(tr, frozen)
+                    return loss_fn(full, cfg, tokens, labels,
+                                   frontend_embeds=fe, remat=tcfg.remat)
+                return jax.value_and_grad(peft_loss, has_aux=True)(tr)
+            opt_params = trainable
+        else:
+            def grad_fn(p, tokens, labels, fe):
+                return jax.value_and_grad(loss_fn, has_aux=True)(
+                    p, cfg, tokens, labels, frontend_embeds=fe,
+                    remat=tcfg.remat)
+            opt_params = params
+
+        m = max(1, tcfg.microbatches)
+        if m == 1:
+            (_, metrics), grads = grad_of(opt_params, batch, grad_fn)
+        else:
+            # lax.scan accumulation in f32 (sharded, param-sized carry):
+            # scan forces microbatches to SEQUENCE, so peak activation
+            # memory is one microbatch's, not the sum.
+            B = batch["tokens"].shape[0]
+            assert B % m == 0, (B, m)
+            mb = B // m
+            stacked = {k: v.reshape((m, mb) + v.shape[1:])
+                       for k, v in batch.items()}
+            is_none = lambda x: x is None  # noqa: E731
+            g0 = jax.tree.map(
+                lambda p: None if p is None
+                else jnp.zeros(p.shape, jnp.float32), opt_params,
+                is_leaf=is_none)
+
+            def micro(carry, sl):
+                acc, met_acc = carry
+                (_, met), g = grad_of(opt_params, sl, grad_fn)
+                acc = jax.tree.map(
+                    lambda a, t: None if a is None
+                    else a + t.astype(jnp.float32) / m, acc, g,
+                    is_leaf=is_none)
+                met_acc = {k: met_acc[k] + met[k] / m for k in met_acc}
+                return (acc, met_acc), None
+
+            met0 = {"loss": jnp.zeros((), jnp.float32),
+                    "moe_load_balance": jnp.zeros((), jnp.float32),
+                    "moe_router_z": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(micro, (g0, met0), stacked)
+
+        if tcfg.grad_compress and "pod" in mesh.shape:
+            from repro.parallel.compress import compress_cross_pod
+            grads = compress_cross_pod(grads, mesh)
+
+        lr_scale = warmup_cosine(opt_state["step"],
+                                 warmup=tcfg.warmup_steps,
+                                 total=tcfg.total_steps)
+        new_opt_params, new_opt, gnorm = adamw_update(
+            grads, opt_state, opt_params, tcfg.optimizer, lr_scale)
+
+        if tcfg.peft_mode:
+            new_params = peft_lib.combine(new_opt_params, frozen)
+        else:
+            new_params = new_opt_params
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr_scale"] = jnp.asarray(lr_scale, jnp.float32)
+        return new_params, new_opt, metrics
+
+    def specs_for(params, opt_state):
+        pspec = sh.param_specs(params, mesh, rules)
+        if tcfg.peft_mode:
+            # moments exist only for the trainable half; same layout
+            mspec = jax.tree.map(lambda s: s, pspec)
+        else:
+            mspec = pspec
+        ospec = {"m": mspec, "v": mspec, "step": P()}
+        return pspec, ospec
+
+    def compile_step(params_shape, opt_shape, batch_shape):
+        pspec, ospec = specs_for(params_shape, opt_shape)
+        dspec = sh.data_specs(mesh, rules)
+        bspec = {k: dspec if k in ("tokens", "labels")
+                 else P(rules.mesh_axes(sh.BATCH, mesh), None, None)
+                 for k in batch_shape}
+        mets = P()
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh.shardings(pspec, mesh),
+                          sh.shardings(ospec, mesh),
+                          sh.shardings(bspec, mesh)),
+            out_shardings=(sh.shardings(pspec, mesh),
+                           sh.shardings(ospec, mesh), None),
+            donate_argnums=(0, 1) if donate else ())
+        return jitted
+
+    return step, compile_step
+
+
+def make_opt_state(params: Params, peft_mode: bool = False) -> Params:
+    if peft_mode:
+        trainable, _ = peft_lib.partition(params)
+        return adamw_init(trainable)
+    return adamw_init(params)
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ArchConfig, mesh: Mesh,
+                    rules: Optional[sh.ShardingRules] = None):
+    """(prefill_fn, decode_fn) jitted with sharded decode state."""
+    rules = rules or sh.ShardingRules()
+
+    def prefill_step(params, tokens, state, frontend_embeds=None):
+        return T.prefill(params, cfg, tokens, state,
+                         frontend_embeds=frontend_embeds)
+
+    def decode_fn(params, token, state):
+        return T.decode_step(params, cfg, token, state)
+
+    def compile_serve(params_shape, state_shape, batch: int, prompt: int):
+        pspec = sh.param_specs(params_shape, mesh, rules)
+        sspec = sh.decode_state_specs(state_shape, mesh, rules)
+        b = rules.mesh_axes(sh.BATCH, mesh)
+        p_sh = sh.shardings(pspec, mesh)
+        s_sh = sh.shardings(sspec, mesh)
+        tok2 = NamedSharding(mesh, P(b, None))
+        tok1 = NamedSharding(mesh, P(b))
+        logits = NamedSharding(mesh, P(b, None))
+        prefill_j = jax.jit(
+            prefill_step,
+            in_shardings=(p_sh, tok2, s_sh),
+            out_shardings=(logits, s_sh),
+            donate_argnums=(2,))
+        decode_j = jax.jit(
+            decode_fn,
+            in_shardings=(p_sh, tok1, s_sh),
+            out_shardings=(logits, s_sh),
+            donate_argnums=(2,))
+        return prefill_j, decode_j
+
+    return prefill_step, decode_fn, compile_serve

@@ -1,0 +1,16 @@
+"""Shared test fixtures.  NOTE: do NOT set XLA_FLAGS here — smoke tests and
+benches must see the single real CPU device; only launch/dryrun.py forces
+512 placeholder devices (and multi-device tests spawn subprocesses)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def assert_no_nans(tree, where=""):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        assert not bool(jnp.any(jnp.isnan(leaf))), f"NaN at {where}{path}"

@@ -1,0 +1,61 @@
+"""Analytics functions backing Figs 2/4/5/6."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.analytics import (coverage, delta_spectrum, effective_rank,
+                                  energy_topk, intruder_dims,
+                                  projection_mass, qk_curves, vo_curves)
+from repro.models import init_lm_params
+
+
+def _attn0(cfg, params):
+    j = next(i for i, (m, _) in enumerate(cfg.pattern) if m == "attn")
+    return jax.tree.map(lambda a: a[0], params["blocks"][j]["attn"])
+
+
+def test_curves_shapes():
+    cfg = get_config("musicgen-large").reduced()
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    attn = _attn0(cfg, params)
+    S, van = qk_curves(attn, cfg.q_per_kv)
+    assert S.shape == van.shape == (cfg.n_kv_heads, cfg.head_dim_)
+    Sv, vanv = vo_curves(attn, cfg.q_per_kv)
+    assert Sv.shape == (cfg.n_kv_heads, cfg.head_dim_)
+    # spectra sorted descending
+    assert bool(jnp.all(S[:, :-1] >= S[:, 1:] - 1e-5))
+
+
+def test_energy_topk_bounds():
+    s = jnp.array([[4.0, 2.0, 1.0, 0.0]])
+    e = energy_topk(s, 2)
+    np.testing.assert_allclose(float(e[0]), 20.0 / 21.0, atol=1e-6)
+    assert float(energy_topk(s, 4)[0]) == 1.0
+
+
+def test_projection_mass_normalized():
+    X = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    dirs = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1),
+                                           (16, 16)))[0]
+    p = projection_mass(X, dirs)
+    np.testing.assert_allclose(float(jnp.sum(p)), 1.0, atol=1e-5)
+
+
+def test_coverage_full_basis_is_one():
+    X = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+    Q = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(1), (8, 8)))[0]
+    assert abs(coverage(X, Q) - 1.0) < 1e-5
+    assert coverage(X, Q[:, :2]) < 1.0
+
+
+def test_delta_rank_and_intruders():
+    key = jax.random.PRNGKey(0)
+    W0 = jax.random.normal(key, (48, 48))
+    lowrank = (jax.random.normal(jax.random.PRNGKey(1), (48, 3))
+               @ jax.random.normal(jax.random.PRNGKey(2), (3, 48)))
+    s = delta_spectrum(W0, W0 + 2.0 * lowrank)
+    assert effective_rank(s, tol=1e-2) == 3
+    # a big low-rank perturbation injects intruder dims; identity doesn't
+    assert intruder_dims(W0, W0 + 5.0 * lowrank, k=8) >= 1
+    assert intruder_dims(W0, W0, k=8) == 0

@@ -1,0 +1,115 @@
+"""CLOVER decomposition invariants: the paper's core claims as tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, ASSIGNED_ARCHS
+from repro.core import (clover_decompose, merge_clover, svd_lowrank_product,
+                        svd_tall, qk_mode)
+from repro.models import init_lm_params, forward
+
+ALL_ARCHS = ASSIGNED_ARCHS + ["gpt2-xl"]
+
+
+def _dropless(cfg):
+    if cfg.moe:
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.0))
+    return cfg
+
+
+def _setup(name, seed=0, B=2, S=8):
+    cfg = _dropless(get_config(name).reduced())
+    key = jax.random.PRNGKey(seed)
+    params = init_lm_params(cfg, key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    fe = None
+    if cfg.frontend != "none":
+        fe = jax.random.normal(key, (B, cfg.frontend_len, cfg.d_model)) * 0.02
+    return cfg, params, toks, fe
+
+
+# ---------------------------------------------------------------------------
+# QR-trick SVD correctness
+# ---------------------------------------------------------------------------
+
+def test_svd_lowrank_product_reconstructs():
+    key = jax.random.PRNGKey(1)
+    A = jax.random.normal(key, (96, 16))
+    B = jax.random.normal(jax.random.PRNGKey(2), (64, 16))
+    U, S, Vt = svd_lowrank_product(A, B)
+    np.testing.assert_allclose(np.asarray((U * S) @ Vt),
+                               np.asarray(A @ B.T), atol=1e-4)
+    # orthonormal factors, descending spectrum
+    np.testing.assert_allclose(np.asarray(U.T @ U), np.eye(16), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Vt @ Vt.T), np.eye(16), atol=1e-5)
+    assert bool(jnp.all(S[:-1] >= S[1:] - 1e-6))
+
+
+def test_svd_tall_reconstructs():
+    W = jax.random.normal(jax.random.PRNGKey(3), (80, 24))
+    U, S, Vt = svd_tall(W)
+    np.testing.assert_allclose(np.asarray((U * S) @ Vt), np.asarray(W),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# function preservation (the paper's central invariance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_decompose_preserves_function(name):
+    cfg, params, toks, fe = _setup(name)
+    base, _ = forward(params, cfg, toks, frontend_embeds=fe)
+    scale = float(jnp.max(jnp.abs(base))) + 1e-6
+    for peft in (True, False):
+        p2, cfg2, _ = clover_decompose(params, cfg, peft=peft)
+        out, _ = forward(p2, cfg2, toks, frontend_embeds=fe)
+        err = float(jnp.max(jnp.abs(out - base))) / scale
+        assert err < 1e-4, f"{name} peft={peft}: rel err {err}"
+
+
+@pytest.mark.parametrize("name", ["musicgen-large", "jamba-v0.1-52b",
+                                  "stablelm-3b"])
+def test_merge_back_roundtrip(name):
+    cfg, params, toks, fe = _setup(name)
+    base, _ = forward(params, cfg, toks, frontend_embeds=fe)
+    p2, cfg2, _ = clover_decompose(params, cfg, peft=True)
+    # perturb the trainable transitions (simulating fine-tuning)...
+    def bump(path, leaf):
+        names = [getattr(p, "key", "") for p in path]
+        if any(n in ("s_qk", "s_vo", "k_t", "up_t") for n in names):
+            return leaf + 0.01 * jax.random.normal(
+                jax.random.PRNGKey(hash(tuple(names)) % 2**31), leaf.shape)
+        return leaf
+    p2b = jax.tree_util.tree_map_with_path(bump, p2)
+    tuned, _ = forward(p2b, cfg2, toks, frontend_embeds=fe)
+    # ...then merging must preserve the TUNED function exactly
+    p3, cfg3 = merge_clover(p2b, cfg2)
+    merged, _ = forward(p3, cfg3, toks, frontend_embeds=fe)
+    scale = float(jnp.max(jnp.abs(tuned))) + 1e-6
+    assert float(jnp.max(jnp.abs(merged - tuned))) / scale < 1e-4
+    # and the merged tree has no leftover adapter keys
+    leaves = [getattr(p[-1], "key", "")
+              for p, _ in jax.tree_util.tree_flatten_with_path(p3)[0]]
+    assert not any(k in ("s_qk", "s_vo", "k_t", "up_t") for k in leaves)
+
+
+def test_qk_mode_per_arch():
+    assert qk_mode(get_config("musicgen-large")) == "cross"
+    assert qk_mode(get_config("stablelm-3b")) == "partial"
+    assert qk_mode(get_config("phi3-medium-14b")) == "intra"
+    assert qk_mode(get_config("gpt2-xl")) == "cross"
+
+
+def test_spectra_shapes_and_order():
+    cfg, params, _, _ = _setup("musicgen-large")
+    _, _, extras = clover_decompose(params, cfg, peft=False)
+    sp = extras[0]["spectra"]
+    assert "qk" in sp and "vo" in sp
+    s = np.asarray(sp["qk"])           # (n_blocks, KV, d)
+    assert s.shape[-1] == cfg.head_dim_
+    assert (np.diff(s, axis=-1) <= 1e-5).all(), "spectra must be sorted"

@@ -1,0 +1,105 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import svd_lowrank_product, snap_rank
+from repro.core.decompose import svd_tall
+from repro.kernels import ops, ref
+from repro.optim import warmup_cosine
+
+SET = dict(max_examples=20, deadline=None)
+
+
+@given(m=st.integers(8, 64), n=st.integers(8, 64), d=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_qr_trick_svd_reconstructs(m, n, d, seed):
+    """svd_lowrank_product(A, B) == SVD of A@B.T for ANY shapes d<=min."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    A = jax.random.normal(k1, (m, d))
+    B = jax.random.normal(k2, (n, d))
+    U, S, Vt = svd_lowrank_product(A, B)
+    np.testing.assert_allclose(np.asarray((U * S) @ Vt),
+                               np.asarray(A @ B.T), atol=1e-3)
+    assert bool(jnp.all(S >= -1e-6))
+    assert bool(jnp.all(S[:-1] >= S[1:] - 1e-5))
+
+
+@given(m=st.integers(8, 96), d=st.integers(1, 16), seed=st.integers(0, 99))
+@settings(**SET)
+def test_svd_tall_orthonormal(m, d, seed):
+    if m < d:
+        m = d
+    W = jax.random.normal(jax.random.PRNGKey(seed), (m, d))
+    U, S, Vt = svd_tall(W)
+    np.testing.assert_allclose(np.asarray(U.T @ U), np.eye(d), atol=1e-4)
+    np.testing.assert_allclose(np.asarray((U * S) @ Vt), np.asarray(W),
+                               atol=1e-3)
+
+
+@given(r=st.integers(1, 256), mult=st.sampled_from([1, 8, 16]),
+       d=st.sampled_from([64, 80, 128]))
+@settings(**SET)
+def test_snap_rank_invariants(r, mult, d):
+    s = snap_rank(r, mult, d)
+    assert 1 <= s <= d
+    assert s % mult == 0 or s == d or mult == 1
+    assert s >= min(r, d) or s == d  # never snaps below the request (cap d)
+
+
+@given(B=st.integers(1, 3), S=st.sampled_from([16, 48]),
+       H=st.sampled_from([2, 4]), G=st.sampled_from([1, 2]),
+       dq=st.sampled_from([8, 24]), dv=st.sampled_from([8, 16]),
+       seed=st.integers(0, 99))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_property(B, S, H, G, dq, dv, seed):
+    """Kernel == oracle across randomly drawn shape combinations."""
+    KV = max(1, H // G)
+    H = KV * G
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dq))
+    k = jax.random.normal(ks[1], (B, S, KV, dq))
+    v = jax.random.normal(ks[2], (B, S, KV, dv))
+    o_ref = ref.attention_ref(q, k, v, causal=True)
+    o_pal = ops.clover_attention(q, k, v, causal=True, impl="interpret",
+                                 block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(warmup=st.integers(1, 50), total=st.integers(60, 500),
+       step=st.integers(0, 499))
+@settings(**SET)
+def test_schedule_bounded(warmup, total, step):
+    v = float(warmup_cosine(jnp.asarray(step), warmup=warmup, total=total))
+    assert 0.0 <= v <= 1.0 + 1e-6
+
+
+@given(seed=st.integers(0, 999), T=st.integers(2, 40),
+       d=st.sampled_from([4, 8]))
+@settings(max_examples=10, deadline=None)
+def test_wkv6_state_consistency(seed, T, d):
+    """Splitting a sequence at any point and carrying S is equivalent to
+    one pass (the recurrence's semigroup property)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    B, Hh = 1, 2
+    r = jax.random.normal(ks[0], (B, Hh, T, d))
+    k = jax.random.normal(ks[1], (B, Hh, T, d)) * 0.5
+    v = jax.random.normal(ks[2], (B, Hh, T, d))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, Hh, T, d)) * 0.3)
+    u = jax.random.normal(ks[4], (Hh, d)) * 0.1
+    o_full, s_full = ref.wkv6_ref(r, k, v, logw, u)
+    cut = T // 2
+    if cut == 0:
+        return
+    sl = lambda t, a, b: t[:, :, a:b]  # noqa: E731
+    o1, s1 = ref.wkv6_ref(sl(r, 0, cut), sl(k, 0, cut), sl(v, 0, cut),
+                          sl(logw, 0, cut), u)
+    o2, s2 = ref.wkv6_ref(sl(r, cut, T), sl(k, cut, T), sl(v, cut, T),
+                          sl(logw, cut, T), u, s0=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 2)),
+                               np.asarray(o_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=1e-4)
