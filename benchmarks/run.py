@@ -12,13 +12,18 @@ import time
 
 MODULES = ("table1_pruning", "table2_peft", "fig2_spectrum",
            "fig3_trainfree", "fig4_projection", "fig56_rank",
-           "kernel_bench")
+           "kernel_bench", "serve_bench")
 
 
 def main(argv=None) -> int:
     argv = argv if argv is not None else sys.argv[1:]
     selected = [m for m in MODULES
                 if not argv or any(a in m for a in argv)]
+    if not selected:
+        # a typo'd selector must not report ALL CHECKS PASS (CI runs
+        # this driver with explicit module names)
+        print(f"no benchmark modules match {argv}; known: {MODULES}")
+        return 2
     failures = []
     for name in selected:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])

@@ -1,0 +1,12 @@
+"""Version compatibility for Pallas TPU symbols.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+container pins jax 0.4.x which only has the old name.  Kernels import
+the symbol from here so both spellings work.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

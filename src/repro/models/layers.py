@@ -238,10 +238,10 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
     if kv_cache is not None:
         # cache_index: scalar (whole batch at one position — prefill and
         # lockstep decode) or (B,) vector (per-slot positions — the
-        # serving engine's continuous batching).
+        # serving engine's continuous batching; S may be > 1 for chunked
+        # prefill, writing an S-token window at each slot's own offset).
         per_slot = jnp.ndim(cache_index) == 1
         if per_slot:
-            assert S == 1, "per-slot cache index is decode-only"
             upd = jax.vmap(
                 lambda c, kn, i: jax.lax.dynamic_update_slice_in_dim(
                     c, kn, i, axis=0))
@@ -269,7 +269,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
             y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
             return y, new_cache
         k, v = ck.astype(x.dtype), cv.astype(x.dtype)
-        if S > ATTN_CHUNK:
+        if not per_slot and S > ATTN_CHUNK:
             # long cached prefill: chunked flash path
             ctx = _causal_attention_chunked(
                 q, k, v, scale, softcap=cfg.attn_logit_softcap,
@@ -282,13 +282,13 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
             y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
             return y, new_cache
         T = k.shape[1]
-        kv_pos = jnp.arange(T, dtype=jnp.int32)[None, :]
+        kv_pos = jnp.arange(T, dtype=jnp.int32)
         ci = jnp.broadcast_to(jnp.atleast_1d(cache_index), (B,))
-        valid = kv_pos <= (ci[:, None] + S - 1)        # (B, T)
-        mask = jnp.broadcast_to(valid[:, None, :], (B, S, T))
-        if S > 1:  # cached prefill: causal within the written window
-            qpos = cache_index + jnp.arange(S, dtype=jnp.int32)
-            mask = mask & (kv_pos[None, :, :] <= qpos[None, :, None])
+        # query j of slot b sits at global position ci[b] + j; causal
+        # against every cached position (covers scalar AND per-slot
+        # offsets, S == 1 and chunked windows uniformly).
+        qpos = ci[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        mask = kv_pos[None, None, :] <= qpos[:, :, None]      # (B, S, T)
     else:
         if use_pallas:  # full-sequence causal flash kernel
             from repro.kernels import ops as kops

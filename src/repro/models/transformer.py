@@ -313,6 +313,40 @@ def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     return _logits(params, cfg, x)[:, 0], new_state
 
 
+def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                  state: Params, lengths: jnp.ndarray,
+                  ) -> Tuple[jnp.ndarray, Params]:
+    """Write one fixed-size prompt chunk per slot into the decode state.
+
+    tokens:  (B, C) int32 — each slot's next window of prompt tokens,
+             right-padded; positions past ``lengths[b]`` are padding.
+    state:   decode state with a per-slot ``index`` vector (B,) — the
+             number of tokens already written per slot; the window lands
+             at positions [index, index + C) of each slot's caches.
+    lengths: (B,) int32 in [0, C] — valid tokens per slot.  A slot with
+             length 0 is idle this step; length 1 is exactly a decode
+             step (the slot's last sampled token rides in column 0).
+
+    Returns (logits (B, V) at each slot's LAST VALID position, new state
+    with ``index`` advanced by ``lengths``).  Padding columns write
+    garbage KV past each slot's valid region — always masked (causality
+    against the per-slot index) or overwritten before becoming readable.
+    Recurrent (mamba/rwkv) states advance over the FULL window including
+    padding; callers with such states must only pass fully-valid windows
+    (see serve.engine's scheduler) and merge inactive slots' states back.
+    """
+    B, C = tokens.shape
+    idx = state["index"]                                   # (B,)
+    positions = idx[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    x = _embed(params, cfg, tokens, positions, None)
+    x, new_state = _run_with_state(params, cfg, x, state, positions)
+    new_state["index"] = idx + lengths
+    last = jnp.clip(lengths - 1, 0, C - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    return _logits(params, cfg, x)[:, 0], new_state
+
+
 def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
                 state: Params) -> Tuple[jnp.ndarray, Params]:
     """token: (B,) int32.  Returns (logits (B, V), new_state).

@@ -251,9 +251,11 @@ def ambient_mesh() -> Optional[Mesh]:
             return m
     except Exception:  # noqa: BLE001 — internal API; degrade gracefully
         pass
-    am = jax.sharding.get_abstract_mesh()
-    if am is not None and getattr(am, "shape", None):
-        return am
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:  # jax >= 0.5; absent on 0.4.x
+        am = get_am()
+        if am is not None and getattr(am, "shape", None):
+            return am
     return None
 
 

@@ -1,2 +1,3 @@
 """Serving: batched engine over CLOVER-rank KV caches."""
-from repro.serve.engine import Engine, EngineConfig, Request  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    Engine, EngineConfig, Request, Scheduler, greedy_reference)

@@ -1,32 +1,56 @@
-"""Batched serving engine with slot-based continuous batching.
+"""Chunked-prefill continuous batching over CLOVER-rank KV caches.
 
-The engine owns one decode-state tree (KV caches at the CLOVER-pruned
-ranks r_qk/r_vo — the paper's memory win applies to every cached token)
-with a fixed number of slots.  Requests are queued, admitted into free
-slots, prefilled (one slot at a time, via the single-slot prefill jit),
-then all active slots decode together in lockstep — the standard
-continuous-batching scheme reduced to its JAX-friendly core: all shapes
-static, per-slot progress tracked host-side.
+The engine owns one decode-state tree (KV caches at the pruned ranks
+r_qk/r_vo — the paper's memory win applies to every cached token) with a
+fixed number of slots.  Each engine step every slot is either decoding
+one token or consuming a fixed-size CHUNK of its prompt, so prefill
+interleaves with decode instead of stalling it, and the whole engine
+compiles exactly TWO step shapes regardless of the prompt-length mix:
 
-Because prefill writes into a batch=1 view and decode runs the full slot
-batch, the engine works unchanged on CPU (tests) and under a mesh with
-sharded state (production: see launch/serve_demo example).
+  * chunk step  — (slots, C) tokens with per-slot valid lengths; each
+    slot writes its window into its caches at its own offset.  Decoding
+    slots ride along with length 1 (a chunk step of one valid token IS a
+    decode step), so admission never stalls generation.
+  * decode step — (slots,) one token per slot; the cheap shape used
+    whenever no slot has prompt tokens left to chunk.
+
+The per-length jit cache of the previous engine (one compile per prompt
+length, one prompt admitted at a time, all decoding stalled during each
+prefill) is gone.
+
+Scheduling policy lives in ``Scheduler``: admission from a FIFO queue
+into free slots, per-slot phase tracking (PREFILL -> [TAIL ->] DECODE),
+retirement on eos / max_new_tokens.  Architectures with recurrent state
+(mamba / rwkv mixers or rwkv channel-mix) cannot take padded windows —
+padding tokens would advance their recurrent state — so for those the
+scheduler only chunks FULL windows and feeds the remainder (< C prompt
+tokens) through decode steps (TAIL phase); decoding slots hold during
+their chunk steps and their states are merged back unchanged.
+
+Everything is shape-static and works unchanged on CPU (tests) and under
+a mesh with sharded state.
 """
 from __future__ import annotations
 
 import collections
-import dataclasses
+import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, MIXER_ATTN, MLP_RWKV
 from repro.models import transformer as T
 
 Params = Dict[str, Any]
+
+# slot phases
+PREFILL = "prefill"     # prompt tokens remain; consumed chunk-wise
+TAIL = "tail"           # recurrent archs: < C prompt tokens remain,
+                        # fed one-by-one through the decode step
+DECODE = "decode"       # generating one token per engine step
 
 
 @dataclass
@@ -38,6 +62,10 @@ class Request:
     # filled by the engine:
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    # serving metrics (monotonic clock): submit time, one stamp per
+    # emitted token (token_times[0] is first-token / end of prefill)
+    t_submit: float = 0.0
+    token_times: List[float] = field(default_factory=list)
 
 
 @dataclass(frozen=True)
@@ -45,6 +73,201 @@ class EngineConfig:
     slots: int = 4                      # concurrent sequences
     max_len: int = 512                  # KV capacity per slot
     eos_id: int = -1                    # -1: never stop on token
+    prefill_chunk: int = 64             # prompt tokens consumed per chunk step
+
+
+class Scheduler:
+    """Admission / chunking / retirement policy with per-slot phases.
+
+    Host-side bookkeeping only — the device sees nothing but the two
+    fixed step shapes the engine compiles.
+    """
+
+    def __init__(self, ecfg: EngineConfig, recurrent: bool):
+        self.ecfg = ecfg
+        self.chunk = max(1, min(ecfg.prefill_chunk, ecfg.max_len))
+        self.recurrent = recurrent
+        self.queue: collections.deque = collections.deque()
+        n = ecfg.slots
+        self.slot_req: List[Optional[Request]] = [None] * n
+        self.phase: List[Optional[str]] = [None] * n
+        self.pos = np.zeros(n, np.int64)        # prompt tokens consumed
+        self.fresh = np.zeros(n, bool)          # needs state reset
+        self.last_token = np.zeros(n, np.int32)
+
+    # -- admission -----------------------------------------------------
+    def submit(self, req: Request):
+        req.t_submit = time.monotonic()
+        self.queue.append(req)
+
+    def admit(self):
+        for s in range(self.ecfg.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                L = len(req.prompt)
+                assert L > 0, "empty prompt"
+                assert L + req.max_new_tokens <= self.ecfg.max_len, \
+                    "request exceeds KV capacity"
+                self.slot_req[s] = req
+                self.pos[s] = 0
+                self.fresh[s] = True
+                self.phase[s] = self._prefill_phase(L, 0)
+
+    def _prefill_phase(self, L: int, pos: int) -> str:
+        if self.recurrent and L - pos < self.chunk:
+            return TAIL          # padded window would corrupt state
+        return PREFILL
+
+    # -- planning ------------------------------------------------------
+    def has_chunk_work(self) -> bool:
+        return any(p == PREFILL for p in self.phase)
+
+    def plan_chunk(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Build the (slots, C) window batch.  PREFILL slots consume up
+        to C prompt tokens (recurrent archs: exactly C — guaranteed by
+        the phase); DECODE slots ride with length 1 on attention-only
+        archs; everything else idles with length 0."""
+        n, C = self.ecfg.slots, self.chunk
+        tokens = np.zeros((n, C), np.int32)
+        lengths = np.zeros(n, np.int32)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.phase[s] == PREFILL:
+                take = min(C, len(req.prompt) - int(self.pos[s]))
+                tokens[s, :take] = req.prompt[self.pos[s]:self.pos[s] + take]
+                lengths[s] = take
+            elif self.phase[s] == DECODE and not self.recurrent:
+                tokens[s, 0] = self.last_token[s]
+                lengths[s] = 1
+        fresh = self.fresh & (lengths > 0)
+        self.fresh &= ~fresh
+        return tokens, lengths, fresh
+
+    def plan_decode(self) -> Tuple[np.ndarray, np.ndarray]:
+        """One token per slot: TAIL slots feed their next prompt token,
+        DECODE slots their last sampled token."""
+        n = self.ecfg.slots
+        tokens = np.zeros(n, np.int32)
+        active = np.zeros(n, bool)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            active[s] = True
+            if self.phase[s] == TAIL:
+                tokens[s] = req.prompt[self.pos[s]]
+            else:
+                tokens[s] = self.last_token[s]
+        fresh = self.fresh & active
+        self.fresh &= ~fresh
+        return tokens, fresh
+
+    # -- post-step transitions ----------------------------------------
+    def advance_chunk(self, lengths: np.ndarray) -> List[int]:
+        """Apply a chunk step's progress.  Returns slots whose logits
+        row is a real next-token distribution to sample from."""
+        sample = []
+        for s, req in enumerate(self.slot_req):
+            if req is None or lengths[s] == 0:
+                continue
+            if self.phase[s] == PREFILL:
+                self.pos[s] += int(lengths[s])
+                if self.pos[s] == len(req.prompt):
+                    self.phase[s] = DECODE
+                    sample.append(s)
+                else:
+                    self.phase[s] = self._prefill_phase(
+                        len(req.prompt), int(self.pos[s]))
+            else:                                   # riding decode slot
+                sample.append(s)
+        return sample
+
+    def advance_decode(self) -> List[int]:
+        sample = []
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.phase[s] == TAIL:
+                self.pos[s] += 1
+                if self.pos[s] == len(req.prompt):
+                    self.phase[s] = DECODE
+                    sample.append(s)
+            else:
+                sample.append(s)
+        return sample
+
+    def retire(self):
+        for s, req in enumerate(self.slot_req):
+            if req is None or self.phase[s] != DECODE:
+                continue
+            if (len(req.generated) >= req.max_new_tokens
+                    or (self.ecfg.eos_id >= 0 and req.generated
+                        and req.generated[-1] == self.ecfg.eos_id)):
+                req.done = True
+                self.slot_req[s] = None
+                self.phase[s] = None
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+
+def greedy_reference(params: Params, cfg: ArchConfig, prompt,
+                     n: int) -> List[int]:
+    """Isolated whole-prompt greedy decode via the full forward pass —
+    the exactness oracle engine streams are checked against (chunked
+    prefill must reproduce it token-for-token)."""
+    seq = list(prompt)
+    gen = []
+    for _ in range(n):
+        logits, _ = T.forward(params, cfg, jnp.asarray(seq)[None, :])
+        tok = int(jnp.argmax(logits[0, -1]))
+        gen.append(tok)
+        seq.append(tok)
+    return gen
+
+
+def _is_recurrent(cfg: ArchConfig) -> bool:
+    return any(mixer != MIXER_ATTN or mlp == MLP_RWKV
+               for mixer, mlp in cfg.pattern)
+
+
+def _mask_like(flags: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """(B,) bool -> broadcastable to a stacked state leaf (nb, B, ...)."""
+    return flags.reshape((1, flags.shape[0]) + (1,) * (leaf.ndim - 2))
+
+
+def _is_kv(path) -> bool:
+    return any(getattr(p, "key", None) == "kv" for p in path)
+
+
+def _reset_fresh(state: Params, fresh: jnp.ndarray) -> Params:
+    """Zero recurrent state + index of freshly admitted slots.  KV
+    caches keep their stale contents — masked by the per-slot index."""
+
+    def z(path, leaf):
+        if _is_kv(path):
+            return leaf
+        return jnp.where(_mask_like(fresh, leaf), jnp.zeros_like(leaf), leaf)
+
+    return {"blocks": jax.tree_util.tree_map_with_path(z, state["blocks"]),
+            "index": jnp.where(fresh, 0, state["index"])}
+
+
+def _merge_inactive(old_blocks, new_blocks, active: jnp.ndarray):
+    """Keep inactive slots' recurrent state across a chunk step (their
+    padded garbage window must not advance it).  KV caches are taken
+    wholesale: inactive slots' garbage writes land at [index, index+C),
+    which is either masked (beyond each slot's causal horizon) or
+    overwritten by that slot's own future writes before it becomes
+    readable."""
+
+    def sel(path, old, new):
+        if _is_kv(path):
+            return new
+        return jnp.where(_mask_like(active, old), new, old)
+
+    return jax.tree_util.tree_map_with_path(sel, old_blocks, new_blocks)
 
 
 class Engine:
@@ -54,47 +277,45 @@ class Engine:
         self.cfg = cfg
         self.ecfg = ecfg
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        self.state = T.init_decode_state(cfg, ecfg.slots, ecfg.max_len)
-        # per-slot positions: the decode state carries a (slots,) index
-        # vector so slots at different depths coexist in one batch
+        self.sched = Scheduler(ecfg, _is_recurrent(cfg))
+        C = self.sched.chunk
+        # KV capacity rounded up to a chunk multiple PLUS one spare chunk:
+        # every window write [index, index+C) with index <= max_len stays
+        # in bounds, so dynamic_update_slice never clamps (a clamped
+        # write would shift backwards over valid history).  The spare
+        # tail is beyond every causal horizon, hence never readable.
+        cap = (ecfg.max_len + C - 1) // C * C + C
+        self.state = T.init_decode_state(cfg, ecfg.slots, cap)
+        # per-slot positions: (slots,) index vector so slots at
+        # different depths coexist in one batch
         self.state["index"] = jnp.zeros((ecfg.slots,), jnp.int32)
-        # per-slot host bookkeeping
-        self.slot_req: List[Optional[Request]] = [None] * ecfg.slots
-        self.slot_pos = np.zeros(ecfg.slots, np.int32)   # tokens written
-        self.last_token = np.zeros(ecfg.slots, np.int32)
-        self.queue: collections.deque = collections.deque()
-        self._decode = jax.jit(
-            lambda p, tok, st: T.decode_step(p, cfg, tok, st))
-        self._prefill_len: Dict[int, Any] = {}
+
+        def chunk_fn(params, tokens, lengths, fresh, state):
+            st = _reset_fresh(state, fresh)
+            logits, new = T.prefill_chunk(params, cfg, tokens, st, lengths)
+            blocks = _merge_inactive(st["blocks"], new["blocks"],
+                                     lengths > 0)
+            return logits, {"blocks": blocks, "index": new["index"]}
+
+        def decode_fn(params, tok, fresh, state):
+            return T.decode_step(params, cfg, tok, _reset_fresh(state, fresh))
+
+        self._chunk = jax.jit(chunk_fn)
+        self._decode = jax.jit(decode_fn)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        self.sched.submit(req)
 
-    def _prefill_fn(self, length: int):
-        """Length-bucketed jitted single-slot prefill."""
-        if length not in self._prefill_len:
-            cfg = self.cfg
-
-            def fn(params, tokens, state, slot):
-                # fresh (zero) slot state: stale KV is masked anyway, but
-                # stale SSM/RWKV recurrent states would leak across
-                # requests — prefill always starts from zeros.
-                sub = jax.tree.map(
-                    lambda a: jnp.zeros((a.shape[0], 1) + a.shape[2:],
-                                        a.dtype)
-                    if a.ndim >= 2 else a, state["blocks"])
-                st1 = {"blocks": sub, "index": jnp.zeros((), jnp.int32)}
-                logits, st1 = T.prefill(params, cfg, tokens, st1)
-                merged = jax.tree.map(
-                    lambda full, s: jax.lax.dynamic_update_slice_in_dim(
-                        full, s.astype(full.dtype), slot, 1)
-                    if full.ndim >= 2 else full,
-                    state["blocks"], st1["blocks"])
-                new_index = state["index"].at[slot].set(tokens.shape[1])
-                return logits[0], {"blocks": merged, "index": new_index}
-            self._prefill_len[length] = jax.jit(fn)
-        return self._prefill_len[length]
+    def compiled_shapes(self) -> Optional[int]:
+        """Total jit cache entries across both step functions — the
+        engine's contract is that this never exceeds 2.  Returns None
+        if the jit cache isn't introspectable (private API drift)."""
+        sizes = [getattr(f, "_cache_size", None)
+                 for f in (self._chunk, self._decode)]
+        if any(s is None for s in sizes):
+            return None
+        return sum(s() for s in sizes)
 
     def _sample(self, logits: np.ndarray, temp: float) -> int:
         if temp <= 0:
@@ -102,60 +323,44 @@ class Engine:
         self.rng, k = jax.random.split(self.rng)
         return int(jax.random.categorical(k, jnp.asarray(logits) / temp))
 
-    # ------------------------------------------------------------------
-    def _admit(self):
-        for s in range(self.ecfg.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.popleft()
-                L = len(req.prompt)
-                assert L + req.max_new_tokens <= self.ecfg.max_len, \
-                    "request exceeds KV capacity"
-                fn = self._prefill_fn(L)
-                logits, self.state = fn(
-                    self.params, jnp.asarray(req.prompt)[None, :],
-                    self.state, s)
-                tok = self._sample(np.asarray(logits), req.temperature)
-                req.generated.append(tok)
-                self.slot_req[s] = req
-                self.slot_pos[s] = L
-                self.last_token[s] = tok
-
-    def _retire(self):
-        for s, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            if (len(req.generated) >= req.max_new_tokens
-                    or (self.ecfg.eos_id >= 0
-                        and req.generated[-1] == self.ecfg.eos_id)):
-                req.done = True
-                self.slot_req[s] = None
-
-    def step(self) -> int:
-        """Admit + one lockstep decode over all active slots.
-        Returns number of active slots after the step."""
-        self._admit()
-        active = [s for s, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return 0
-        # one lockstep decode; each slot reads/writes at ITS index
-        logits, self.state = self._decode(
-            self.params, jnp.asarray(self.last_token), self.state)
-        logits = np.asarray(logits)
-        for s in active:
-            req = self.slot_req[s]
+    def _emit(self, slots: List[int], logits: np.ndarray):
+        now = time.monotonic()
+        for s in slots:
+            req = self.sched.slot_req[s]
             tok = self._sample(logits[s], req.temperature)
             req.generated.append(tok)
-            self.last_token[s] = tok
-            self.slot_pos[s] += 1
-        self._retire()
-        return len([r for r in self.slot_req if r is not None])
+            req.token_times.append(now)
+            self.sched.last_token[s] = tok
 
-    def run(self, requests: List[Request], max_steps: int = 10000,
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one chunk or decode step over all slots.
+        Returns the number of active slots after the step."""
+        sched = self.sched
+        sched.admit()
+        if sched.has_chunk_work():
+            tokens, lengths, fresh = sched.plan_chunk()
+            logits, self.state = self._chunk(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                jnp.asarray(fresh), self.state)
+            self._emit(sched.advance_chunk(lengths), np.asarray(logits))
+        elif any(r is not None for r in sched.slot_req):
+            tokens, fresh = sched.plan_decode()
+            logits, self.state = self._decode(
+                self.params, jnp.asarray(tokens), jnp.asarray(fresh),
+                self.state)
+            self._emit(sched.advance_decode(), np.asarray(logits))
+        else:
+            return 0
+        sched.retire()
+        return len([r for r in sched.slot_req if r is not None])
+
+    def run(self, requests: List[Request], max_steps: int = 100000,
             ) -> List[Request]:
         for r in requests:
             self.submit(r)
         steps = 0
-        while (self.queue or any(self.slot_req)) and steps < max_steps:
+        while self.sched.busy and steps < max_steps:
             self.step()
             steps += 1
         return requests

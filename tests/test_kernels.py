@@ -66,6 +66,37 @@ def test_flash_decode_respects_lengths():
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
 
 
+def test_flash_decode_chunk_advanced_slots():
+    """Chunked prefill advances a slot's cache index by chunk-size, not
+    1, and leaves garbage KV beyond each slot's valid region (padded
+    window writes).  Decoding against such a cache must equal decoding
+    against one with the garbage zeroed — for slots parked exactly at
+    chunk boundaries AND mid-chunk."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, H, KV, T, d, chunk = 3, 4, 2, 96, 16, 32
+    q = jax.random.normal(ks[0], (B, H, d))
+    k = jax.random.normal(ks[1], (B, T, KV, d))
+    v = jax.random.normal(ks[2], (B, T, KV, d))
+    lengths = jnp.array([chunk, 2 * chunk, chunk + 5], jnp.int32)
+    poison_k, poison_v = k, v
+    clean_k, clean_v = k, v
+    for b in range(B):
+        L = int(lengths[b])
+        poison_k = poison_k.at[b, L:].set(1e4)
+        poison_v = poison_v.at[b, L:].set(-1e4)
+        clean_k = clean_k.at[b, L:].set(0.0)
+        clean_v = clean_v.at[b, L:].set(0.0)
+    o_poison = ops.decode_attention(q, poison_k, poison_v, lengths,
+                                    impl="interpret", block_t=32)
+    o_clean = ops.decode_attention(q, clean_k, clean_v, lengths,
+                                   impl="interpret", block_t=32)
+    o_ref = ref.decode_attention_ref(q, clean_k, clean_v, lengths)
+    np.testing.assert_allclose(np.asarray(o_poison), np.asarray(o_clean),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o_poison), np.asarray(o_ref),
+                               atol=5e-5, rtol=5e-5)
+
+
 @pytest.mark.parametrize("B,H,T,d", [
     (2, 2, 50, 16),              # padding path (50 % 16 != 0)
     (1, 4, 128, 32),

@@ -2,7 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (requirements-dev.txt); "
+           "minimal installs skip them instead of failing collection")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import svd_lowrank_product, snap_rank
 from repro.core.decompose import svd_tall
