@@ -93,6 +93,22 @@ def run(verbose: bool = True):
         np.asarray(dec),
         np.asarray(ref.decode_attention_ref(qi[:, 0], ki, vi, lens)),
         atol=2e-4))
+    # paged decode: same query against the same cache re-laid-out as a
+    # shuffled page pool + page table must agree with the dense oracle
+    pt = 8
+    n_p = Si // pt
+    perm = np.random.default_rng(0).permutation(n_p)
+    kp = jnp.concatenate([ki.reshape(n_p, pt, KVi, dqi)[perm],
+                          jnp.full((1, pt, KVi, dqi), 1e4)])   # + sink row
+    vp = jnp.concatenate([vi.reshape(n_p, pt, KVi, dvi)[perm],
+                          jnp.full((1, pt, KVi, dvi), -1e4)])
+    tab = jnp.asarray(np.argsort(perm)[None, :], jnp.int32)
+    pag = ops.paged_decode_attention(qi[:, 0], kp, vp, tab, lens,
+                                     impl="interpret")
+    paged_ok = bool(np.allclose(
+        np.asarray(pag),
+        np.asarray(ref.decode_attention_ref(qi[:, 0], ki, vi, lens)),
+        atol=2e-4))
     if verbose:
         print("name,case,us_per_call")
         for n, c, us in rows:
@@ -105,8 +121,10 @@ def run(verbose: bool = True):
         # Pallas kernels in interpret mode reproduce the jnp oracles
         "interpret_flash_matches_ref": flash_ok,
         "interpret_decode_matches_ref": dec_ok,
+        "interpret_paged_decode_matches_ref": paged_ok,
     }
-    return {"rows": rows, "checks": checks}
+    metrics = {f"{n}/{c}": v for n, c, v in rows}
+    return {"rows": rows, "checks": checks, "metrics": metrics}
 
 
 if __name__ == "__main__":

@@ -4,15 +4,38 @@
 ``PYTHONPATH=src python -m benchmarks.run table1``   # one
 Each module returns {..., "checks": {name: bool}}; the driver reports
 every check and exits non-zero if any reproduced claim fails.
+
+Perf modules (``*_bench``) additionally get a machine-readable dump
+``BENCH_<stem>.json`` (e.g. BENCH_serve.json, BENCH_kernel.json) written
+next to the stdout report — rows, checks and the module's ``metrics``
+dict (tokens/sec, p50/p95 ITL, TTFT, page-pool utilization, ...) — so
+the perf trajectory is tracked across PRs (CI uploads these as workflow
+artifacts) instead of evaporating with the build log.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 MODULES = ("table1_pruning", "table2_peft", "fig2_spectrum",
            "fig3_trainfree", "fig4_projection", "fig56_rank",
            "kernel_bench", "serve_bench")
+
+
+def _write_bench_json(name: str, out: dict, elapsed_s: float) -> str:
+    path = f"BENCH_{name[:-len('_bench')]}.json"
+    payload = {
+        "module": name,
+        "elapsed_s": round(elapsed_s, 2),
+        "rows": [list(r) for r in out.get("rows", [])],
+        "checks": out.get("checks", {}),
+        "metrics": out.get("metrics", {}),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main(argv=None) -> int:
@@ -36,6 +59,8 @@ def main(argv=None) -> int:
             print(f"  [{status}] {check}")
             if not ok:
                 failures.append(f"{name}:{check}")
+        if name.endswith("_bench"):
+            print(f"  wrote {_write_bench_json(name, out, dt)}")
         print(f"  ({dt:.1f}s)")
     print("\n" + ("ALL CHECKS PASS" if not failures
                   else f"FAILURES: {failures}"))

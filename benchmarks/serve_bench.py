@@ -1,18 +1,33 @@
-"""Serving throughput/latency under chunked-prefill continuous batching.
+"""Serving throughput/latency under chunked-prefill continuous batching,
+dense AND paged KV caches.
 
-The first end-to-end number connecting the paper's rank pruning to the
-serving path: a Poisson arrival trace of mixed-length prompts is played
-against the engine at several CLOVER prune ratios, measuring tokens/sec
-and p50/p95 per-token (inter-token) latency plus time-to-first-token.
+Two scenarios connect the paper's rank pruning to the serving path:
+
+1. **Mixed trace** — a Poisson arrival trace of mixed-length prompts is
+   played against the dense and the paged engine at several CLOVER
+   prune ratios, measuring tokens/sec, p50/p95 inter-token latency and
+   time-to-first-token for both.  The paged engine must reproduce the
+   dense engine's greedy streams token-for-token.
+
+2. **Memory pressure** — a burst of long prompts at a fixed KV HBM
+   budget.  The dense engine can hold ``budget / max_len`` slots no
+   matter how short sequences actually are; the paged engine holds
+   ``budget / bytes_per_page`` pages and admits by ACTUAL length, so it
+   must sustain strictly more concurrent sequences at the same budget.
+   And because pruning shrinks bytes-per-token, the same byte budget
+   holds more pages at prune ratio 0.5 than at 0.0 — rank pruning
+   converts directly into concurrency (the tentpole claim).
 
 What must hold on CPU (timings vary, orderings don't):
-  * the engine compiles exactly TWO step shapes (chunk + decode) over
-    the whole mixed-length trace — the tentpole contract;
-  * greedy streams match their isolated full-prefill references, i.e.
-    chunked prefill is exact, not approximate;
-  * the pruned models' KV caches really are at the reduced rank.
+  * both engines compile exactly TWO step shapes each over the whole
+    mixed-length trace — the two-shape contract survives paging;
+  * greedy streams match their isolated full-prefill references and
+    paged matches dense exactly (preemptions included);
+  * the paged engine's max concurrency strictly exceeds the dense
+    engine's at equal HBM budget, and grows again at prune 0.5.
 
-``PYTHONPATH=src python -m benchmarks.serve_bench``  (or benchmarks.run)
+``PYTHONPATH=src python -m benchmarks.serve_bench``  (or benchmarks.run;
+the driver also writes the machine-readable BENCH_serve.json)
 """
 from __future__ import annotations
 
@@ -27,13 +42,19 @@ from repro.models import init_lm_params
 from repro.serve import Engine, EngineConfig, Request, greedy_reference
 
 PRUNE_RATIOS = (0.0, 0.5)      # fraction of every head's rank removed
-N_REQUESTS = 10
+N_REQUESTS = 8
 MAX_NEW = 8
 CHUNK = 8
+PAGE_TOKENS = 8
+MAX_LEN = 64
+# memory-pressure scenario: KV HBM budget expressed in UNPRUNED tokens
+# (= a dense 2-slot x max_len allocation at prune 0.0)
+PRESSURE_BUDGET_TOKENS = 2 * MAX_LEN
+PRESSURE_REQUESTS = 10
 
 
 def _poisson_trace(rng: np.random.Generator, n: int, vocab: int,
-                   mean_gap_steps: float = 2.0):
+                   mean_gap_steps: float = 2.0, lo: int = 3, hi: int = 20):
     """(arrival_step, prompt) pairs with exponential inter-arrival gaps
     and mixed prompt lengths — the prompt-length mix that used to cost
     one jit compile per distinct length."""
@@ -41,14 +62,13 @@ def _poisson_trace(rng: np.random.Generator, n: int, vocab: int,
     out = []
     for i in range(n):
         t += rng.exponential(mean_gap_steps)
-        L = int(rng.integers(3, 20))
+        L = int(rng.integers(lo, hi))
         out.append((int(t), rng.integers(0, vocab, L).astype(np.int32)))
     return out
 
 
-def _serve_trace(params, cfg, trace):
-    eng = Engine(params, cfg, EngineConfig(
-        slots=4, max_len=64, prefill_chunk=CHUNK))
+def _serve_trace(params, cfg, trace, ecfg: EngineConfig):
+    eng = Engine(params, cfg, ecfg)
     reqs = [Request(uid=i, prompt=p, max_new_tokens=MAX_NEW)
             for i, (_, p) in enumerate(trace)]
     # warm both compiled shapes so steady-state timing isn't compile time
@@ -72,49 +92,115 @@ def _serve_trace(params, cfg, trace):
                           if len(r.token_times) > 1])
     ttft = np.array([r.token_times[0] - r.t_submit for r in reqs])
     return eng, reqs, {
-        "tokens_per_s": n_tok / wall,
-        "itl_p50_ms": float(np.percentile(itl, 50) * 1e3),
-        "itl_p95_ms": float(np.percentile(itl, 95) * 1e3),
-        "ttft_p95_ms": float(np.percentile(ttft, 95) * 1e3),
+        "tokens_per_s": round(n_tok / wall, 2),
+        "itl_p50_ms": round(float(np.percentile(itl, 50) * 1e3), 2),
+        "itl_p95_ms": round(float(np.percentile(itl, 95) * 1e3), 2),
+        "ttft_p95_ms": round(float(np.percentile(ttft, 95) * 1e3), 2),
+        "max_concurrent": eng.max_active,
+        "preemptions": eng.sched.preemptions,
+        "page_util_peak": round(eng.peak_page_util, 3),
     }
+
+
+def _kv_tokens_per_unpruned_token(cfg0, cfg) -> float:
+    """How many tokens of cfg's (pruned-rank) cache fit in the HBM of
+    one unpruned-rank token — bytes/token scales with r_qk + r_vo."""
+    return ((cfg0.qk_dim + cfg0.vo_dim) / (cfg.qk_dim + cfg.vo_dim))
 
 
 def run(verbose: bool = True):
     cfg0 = get_config("musicgen-large").reduced()
     params0 = init_lm_params(cfg0, jax.random.PRNGKey(0))
-    trace = _poisson_trace(np.random.default_rng(0), N_REQUESTS,
-                           cfg0.vocab_size)
+    rng = np.random.default_rng(0)
+    trace = _poisson_trace(rng, N_REQUESTS, cfg0.vocab_size)
+    # burst of LONG prompts: everything arrives up front, so concurrency
+    # is limited purely by KV capacity, not by arrival gaps
+    pressure = _poisson_trace(rng, PRESSURE_REQUESTS, cfg0.vocab_size,
+                              mean_gap_steps=0.3, lo=18, hi=31)
 
     rows = []
     checks = {}
+    metrics = {}
+    pressure_concurrency = {}
     for ratio in PRUNE_RATIOS:
         dp, dcfg, _ = clover_decompose(params0, cfg0, peft=False)
         params, cfg = clover_prune(dp, dcfg, qk_ratio=ratio, vo_ratio=ratio)
-        eng, reqs, m = _serve_trace(params, cfg, trace)
         tag = f"prune{ratio:.2f}"
-        for k, v in m.items():
-            rows.append((tag, k, round(v, 2)))
+
+        # -- mixed trace: dense vs paged, identical streams ------------
+        dense_cfg = EngineConfig(slots=4, max_len=MAX_LEN,
+                                 prefill_chunk=CHUNK)
+        paged_cfg = EngineConfig(slots=4, max_len=MAX_LEN,
+                                 prefill_chunk=CHUNK, paged=True,
+                                 page_tokens=PAGE_TOKENS)
+        eng_d, reqs_d, m_d = _serve_trace(params, cfg, trace, dense_cfg)
+        eng_p, reqs_p, m_p = _serve_trace(params, cfg, trace, paged_cfg)
+        metrics[tag] = {"dense": m_d, "paged": m_p,
+                        "qk_rank": cfg.clover.qk_rank}
+        for mode, m in (("dense", m_d), ("paged", m_p)):
+            for k, v in m.items():
+                rows.append((f"{tag}_{mode}", k, v))
         rows.append((tag, "qk_rank", cfg.clover.qk_rank))
 
         # None = jit cache not introspectable (private API drift) —
         # soft-pass rather than failing CI with no real regression
         checks[f"{tag}_two_compiled_shapes"] = (
-            eng.compiled_shapes() in (2, None))
+            eng_d.compiled_shapes() in (2, None))
+        checks[f"{tag}_paged_two_compiled_shapes"] = (
+            eng_p.compiled_shapes() in (2, None))
+        # the paged engine reproduces the dense engine token-for-token
+        checks[f"{tag}_paged_matches_dense"] = all(
+            p.generated == d.generated for p, d in zip(reqs_p, reqs_d))
         # chunked prefill is exact: spot-check 3 streams (covering both
         # multi-chunk and sub-chunk prompts) against isolated references
         ok = all(r.generated == greedy_reference(
                      params, cfg, r.prompt, r.max_new_tokens)
-                 for r in reqs[:3])
+                 for r in reqs_d[:3])
         checks[f"{tag}_greedy_matches_reference"] = ok
         if ratio > 0:
             checks[f"{tag}_kv_rank_reduced"] = (
                 cfg.clover.qk_rank < cfg0.head_dim_)
 
+        # -- memory pressure at a fixed HBM budget ---------------------
+        # pruning shrinks bytes/token, so the SAME byte budget holds
+        # more tokens (hence pages / dense slots) at higher prune ratio
+        budget_tokens = int(PRESSURE_BUDGET_TOKENS
+                            * _kv_tokens_per_unpruned_token(cfg0, cfg))
+        dense_slots = max(1, budget_tokens // MAX_LEN)
+        n_pages = budget_tokens // PAGE_TOKENS
+        press_dense = EngineConfig(slots=dense_slots, max_len=MAX_LEN,
+                                   prefill_chunk=CHUNK)
+        press_paged = EngineConfig(slots=PRESSURE_REQUESTS, max_len=MAX_LEN,
+                                   prefill_chunk=CHUNK, paged=True,
+                                   page_tokens=PAGE_TOKENS, n_pages=n_pages)
+        eng_pd, reqs_pd, m_pd = _serve_trace(params, cfg, pressure,
+                                             press_dense)
+        eng_pp, reqs_pp, m_pp = _serve_trace(params, cfg, pressure,
+                                             press_paged)
+        metrics[f"pressure_{tag}"] = {
+            "budget_tokens": budget_tokens, "dense_slots": dense_slots,
+            "n_pages": n_pages, "dense": m_pd, "paged": m_pp}
+        for mode, m in (("dense", m_pd), ("paged", m_pp)):
+            for k, v in m.items():
+                rows.append((f"pressure_{tag}_{mode}", k, v))
+        pressure_concurrency[ratio] = m_pp["max_concurrent"]
+        # acceptance (a): at equal HBM budget, paging admits STRICTLY
+        # more concurrent sequences than slots x max_len dense
+        checks[f"pressure_{tag}_paged_more_concurrent"] = (
+            m_pp["max_concurrent"] > m_pd["max_concurrent"])
+        checks[f"pressure_{tag}_paged_matches_dense"] = all(
+            p.generated == d.generated for p, d in zip(reqs_pp, reqs_pd))
+
+    # the tentpole composition: prune 0.5 admits more concurrent
+    # sequences than 0.0 at the same pool byte budget
+    checks["pressure_prune_raises_concurrency"] = (
+        pressure_concurrency[0.5] > pressure_concurrency[0.0])
+
     if verbose:
         print("case,metric,value")
         for tag, k, v in rows:
             print(f"{tag},{k},{v}")
-    return {"rows": rows, "checks": checks}
+    return {"rows": rows, "checks": checks, "metrics": metrics}
 
 
 if __name__ == "__main__":

@@ -6,7 +6,9 @@ halves), then serves a mixed batch of requests with different prompt
 lengths and arrival times.  Prompts are consumed in fixed-size chunks
 interleaved with decoding, so the whole mixed-length batch compiles
 exactly two step shapes; each stream is verified against its isolated
-greedy reference.
+greedy reference.  The same trace is then replayed on the PAGED engine
+(global page pool + page tables, admission gated on free pages,
+preemption on exhaustion) and must produce identical streams.
 
 Run:  PYTHONPATH=src python examples/serve_pruned.py
 """
@@ -50,6 +52,20 @@ def main():
     ref = greedy_reference(pparams, pcfg, r.prompt, r.max_new_tokens)
     print(f"request 0: engine={r.generated}")
     print(f"           ref   ={ref}  match={r.generated == ref}")
+
+    # replay on the paged engine: undersized pool -> page-gated
+    # admission + preemption, identical streams
+    ep = Engine(pparams, pcfg, EngineConfig(slots=4, max_len=96,
+                                            prefill_chunk=8, paged=True,
+                                            page_tokens=8, n_pages=8))
+    reqs_p = [Request(uid=r.uid, prompt=r.prompt,
+                      max_new_tokens=r.max_new_tokens) for r in reqs]
+    ep.run(reqs_p)
+    match = all(a.generated == b.generated for a, b in zip(reqs, reqs_p))
+    print(f"paged replay: match={match} "
+          f"({ep.compiled_shapes()} compiled step shapes, "
+          f"{ep.sched.preemptions} preemptions, "
+          f"peak page util {ep.peak_page_util:.0%})")
 
 
 if __name__ == "__main__":

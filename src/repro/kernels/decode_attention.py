@@ -10,9 +10,15 @@ All G query heads of a KV group ride in one tile: the (G, dq) query slab
 is resident in VMEM across the whole stream, turning the GQA group into
 an MXU-friendly (G x block_t) matmul instead of G vector dots.
 
-Grid (B, KV, n_t): n_t sequential with (m, l, acc) scratch; per-batch
-``lengths`` arrives via scalar prefetch so fully-masked tail blocks are
-skipped without host round-trips.
+Grid (B, KV, n_t): n_t sequential with (m, l, acc) scratch.  The grid is
+sized by cache CAPACITY (shape-static), but per-batch ``lengths`` arrive
+via scalar prefetch and bound the work by each row's ACTUAL length: the
+K/V index maps clamp the block index to each row's last in-range block,
+so every tail iteration re-references the block already resident in VMEM
+— Pallas skips the DMA for a revisited block index — and ``pl.when``
+skips its compute.  (Previously only the compute was skipped; the tail
+blocks still streamed from HBM, so a short slot in a long-capacity cache
+paid full-capacity bandwidth.  They were never free.)
 """
 from __future__ import annotations
 
@@ -91,15 +97,20 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     kernel = functools.partial(
         _decode_kernel, scale=scale, block_t=block_t, n_t=n_t)
 
+    def _kv_block(b, kv, it, lens):
+        # Clamp to the row's last in-range block: tail iterations revisit
+        # the resident block (no DMA) and `pl.when` skips their compute,
+        # so streamed bytes are bounded by lengths[b], not capacity.
+        n_valid = jnp.maximum((lens[b] + block_t - 1) // block_t, 1)
+        return (b, jnp.minimum(it, n_valid - 1), kv, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, KV, n_t),
         in_specs=[
             pl.BlockSpec((1, G, dq), lambda b, kv, it, lens: (b, kv, 0)),
-            pl.BlockSpec((1, block_t, 1, dq),
-                         lambda b, kv, it, lens: (b, it, kv, 0)),
-            pl.BlockSpec((1, block_t, 1, dv),
-                         lambda b, kv, it, lens: (b, it, kv, 0)),
+            pl.BlockSpec((1, block_t, 1, dq), _kv_block),
+            pl.BlockSpec((1, block_t, 1, dv), _kv_block),
         ],
         out_specs=pl.BlockSpec((1, G, dv), lambda b, kv, it, lens: (b, kv, 0)),
         scratch_shapes=[

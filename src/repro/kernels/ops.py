@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.clover_attention import flash_attention as _flash
 from repro.kernels.decode_attention import flash_decode as _decode
+from repro.kernels.paged_decode_attention import (
+    paged_flash_decode as _paged_decode)
 from repro.kernels.wkv6 import wkv6 as _wkv6
 
 
@@ -76,6 +78,27 @@ def decode_attention(q, k, v, lengths, *, scale: Optional[float] = None,
     vp = _pad_to(v, 1, bt)
     return _decode(q, kp, vp, lengths, scale=scale, block_t=bt,
                    interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+def paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
+                           scale: Optional[float] = None,
+                           impl: str = "ref") -> jnp.ndarray:
+    """Flash-decoding vs a PAGED (possibly CLOVER-rank) KV cache.
+
+    q (B,H,dq), k_pool (N,page_tokens,KV,dq), v_pool (N,page_tokens,KV,dv),
+    page_table (B,n_p) int32, lengths (B,) -> (B,H,dv).
+
+    No padding is needed: the pool's ``page_tokens`` axis IS the block
+    size, and page-table entries past each slot's in-use pages are never
+    dereferenced (the kernel clamps its sequential axis per row).
+    """
+    if impl == "ref":
+        return _ref.paged_decode_attention_ref(q, k_pool, v_pool,
+                                               page_table, lengths,
+                                               scale=scale)
+    return _paged_decode(q, k_pool, v_pool, page_table, lengths,
+                         scale=scale, interpret=(impl == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "tile", "impl"))

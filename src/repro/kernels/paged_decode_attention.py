@@ -1,0 +1,149 @@
+"""Paged flash-decoding: one new token's query against a PAGED
+CLOVER-rank KV cache (vLLM-style page pool + per-slot page tables).
+
+The dense `flash_decode` streams a per-slot cache of shape
+``(B, capacity, KV, r)`` — every slot reserves (and, before the
+index-map clamp, streamed) full capacity regardless of actual length.
+Here the cache is one global pool ``(n_pages + 1, page_tokens, KV, r)``
+shared by all slots; each slot owns an ordered list of page ids (its
+page table row) and positions map through the indirection
+``pool[table[b, p // page_tokens], p % page_tokens]``.  Rank pruning
+composes with paging: smaller r -> more tokens per HBM byte -> more
+resident sequences per pool (DESIGN.md §6).
+
+Kernel schedule — grid ``(B, KV, n_p)`` with the page axis sequential:
+
+  * ``lengths`` (B,) and ``page_table`` (B, n_p) arrive via SCALAR
+    PREFETCH, so the K/V BlockSpec index maps dereference the page
+    table BEFORE the body runs: iteration ``ip`` of row ``b`` DMAs pool
+    row ``page_table[b, ip]`` — the gather through the indirection is
+    done by the pipeline, not by a device-wide gather op.
+  * The grid is statically sized by the page-table width, but the
+    index maps clamp ``ip`` to each ROW's last in-use page: every
+    iteration past a row's page count still issues, yet re-references
+    the block already resident in VMEM (Pallas skips the DMA for a
+    revisited block index) and ``pl.when`` skips its compute — so per
+    row, streamed bytes and MXU work are bounded by the actual page
+    count, not the table width.
+  * Entries past a slot's in-use pages may be a sentinel id (the pool's
+    spare garbage row); the clamp means they are never dereferenced.
+
+Per (batch, kv-head) the whole GQA group's (G, dq) query slab stays
+resident in VMEM across the page stream, same as the dense kernel.
+
+Page size: ``page_tokens`` is the sublane dim of the streamed slabs, so
+keep it a multiple of the dtype tile (8 for f32, 16 for bf16) on real
+TPUs; tests run interpret mode where any size is legal.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = float(-1e30)
+
+
+def _paged_decode_kernel(len_ref, tab_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *,
+                         scale: float, page_tokens: int, n_p: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    to = ip * page_tokens
+
+    @pl.when(to < length)
+    def _body():
+        q = q_ref[0]                                           # (G, dq)
+        k = k_ref[0, :, 0, :]                                  # (pt, dq)
+        v = v_ref[0, :, 0, :]                                  # (pt, dv)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (G, pt)
+        tj = to + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(tj < length, logits, NEG_INF)
+        m_prev = m_scr[...]                                    # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, 1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, 1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ip == n_p - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
+                       v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                       lengths: jnp.ndarray, *,
+                       scale: Optional[float] = None,
+                       interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, dq);  k_pool: (N, page_tokens, KV, dq);
+    v_pool: (N, page_tokens, KV, dv);  page_table: (B, n_p) int32 page
+    ids into the pool (entries past ceil(lengths[b]/page_tokens) are
+    never dereferenced and may be any in-range id, e.g. a garbage-sink
+    sentinel);  lengths: (B,) int32.  -> (B, H, dv)
+    """
+    B, H, dq = q.shape
+    pt, KV = k_pool.shape[1], k_pool.shape[2]
+    dv = v_pool.shape[-1]
+    G = H // KV
+    n_p = page_table.shape[1]
+    if scale is None:
+        scale = float(1.0 / (dq ** 0.5))
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, page_tokens=pt, n_p=n_p)
+
+    def _page_block(b, kv, ip, lens, tab):
+        # Clamp to the row's last in-use page: tail iterations revisit
+        # the resident block (no DMA), pl.when skips their compute.
+        n_used = jnp.maximum((lens[b] + pt - 1) // pt, 1)
+        return (tab[b, jnp.minimum(ip, n_used - 1)], 0, kv, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_p),
+        in_specs=[
+            pl.BlockSpec((1, G, dq), lambda b, kv, ip, lens, tab: (b, kv, 0)),
+            pl.BlockSpec((1, pt, 1, dq), _page_block),
+            pl.BlockSpec((1, pt, 1, dv), _page_block),
+        ],
+        out_specs=pl.BlockSpec((1, G, dv),
+                               lambda b, kv, ip, lens, tab: (b, kv, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dv), jnp.float32),
+        ],
+    )
+
+    # H is laid out as KV groups of G consecutive query heads, so the
+    # (1, G, dq) block at index kv is exactly group kv's query slab.
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, dv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), q,
+      k_pool, v_pool)

@@ -59,6 +59,27 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.reshape(B, H, v.shape[-1])
 
 
+def paged_decode_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                               v_pool: jnp.ndarray,
+                               page_table: jnp.ndarray,
+                               lengths: jnp.ndarray, *,
+                               scale: Optional[float] = None) -> jnp.ndarray:
+    """Paged flash-decoding oracle: gather each slot's pages into a
+    dense per-slot cache through the page-table indirection, then defer
+    to the dense oracle (lengths mask everything past each slot's valid
+    tokens, so sentinel/garbage pages never influence the output).
+
+    q: (B, H, dq);  k_pool: (N, page_tokens, KV, dq);
+    v_pool: (N, page_tokens, KV, dv);  page_table: (B, n_p) int32;
+    lengths: (B,) int32.  -> (B, H, dv)
+    """
+    B, n_p = page_table.shape
+    pt = k_pool.shape[1]
+    k = k_pool[page_table].reshape(B, n_p * pt, *k_pool.shape[2:])
+    v = v_pool[page_table].reshape(B, n_p * pt, *v_pool.shape[2:])
+    return decode_attention_ref(q, k, v, lengths, scale=scale)
+
+
 def mamba_scan_ref(dt: jnp.ndarray, A: jnp.ndarray, Bmat: jnp.ndarray,
                    C: jnp.ndarray, x: jnp.ndarray,
                    h0: Optional[jnp.ndarray] = None,

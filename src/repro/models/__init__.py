@@ -1,4 +1,4 @@
 """Config-driven model zoo covering all assigned architectures."""
 from repro.models.transformer import (  # noqa: F401
     init_lm_params, forward, prefill, prefill_chunk, decode_step,
-    init_decode_state)
+    init_decode_state, init_decode_state_paged)

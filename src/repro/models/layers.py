@@ -198,6 +198,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
               positions: jnp.ndarray,
               kv_cache: Optional[Params] = None,
               cache_index: Optional[jnp.ndarray] = None,
+              page_table: Optional[jnp.ndarray] = None,
               attn_impl: str = "xla",
               ) -> Tuple[jnp.ndarray, Optional[Params]]:
     """GQA attention.
@@ -205,6 +206,15 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
     Full-sequence (train/prefill): ``kv_cache is None`` -> causal mask.
     Decode: ``kv_cache`` holds {"k": (B, Smax, KV, dq), "v": (B, Smax, KV, dv)}
     and ``cache_index`` is the write position (scalar int32); x has S==1.
+
+    Paged decode: ``page_table`` (B, n_p) int32 is given and ``kv_cache``
+    holds the global pools {"k": (N, page_tokens, KV, dq), "v": (N,
+    page_tokens, KV, dv)} shared by all slots; ``cache_index`` must be
+    the (B,) per-slot vector.  Position p of slot b lives at
+    ``pool[page_table[b, p // page_tokens], p % page_tokens]``.  The
+    table must cover positions [0, cache_index + S) per slot — entries
+    may be a sentinel id addressing the pool's spare garbage row, where
+    padding/idle-slot writes land harmlessly (DESIGN.md §6).
     """
     B, S, D = x.shape
     H, KV = cfg.n_heads, cfg.n_kv_heads
@@ -235,7 +245,50 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
                   and cfg.attn_logit_softcap == 0)
 
     new_cache = None
-    if kv_cache is not None:
+    if kv_cache is not None and page_table is not None:
+        # Paged cache: scatter the window through the page table into
+        # the global pool.  Positions past a slot's allocated pages map
+        # through sentinel entries to the pool's garbage row, so padded
+        # windows and idle slots never corrupt other slots' pages;
+        # garbage inside a slot's own last page sits beyond its causal
+        # horizon until the slot itself overwrites it — the same
+        # masked-or-overwritten invariant as the dense cache.
+        N, PT = kv_cache["k"].shape[0], kv_cache["k"].shape[1]
+        P = page_table.shape[1]
+        pos = cache_index[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        page = jnp.take_along_axis(page_table, pos // PT, axis=1)   # (B, S)
+        dest = (page * PT + pos % PT).reshape(-1)                   # (B*S,)
+        ck = (kv_cache["k"].reshape(N * PT, KV, dq)
+              .at[dest].set(k.reshape(B * S, KV, dq)
+                            .astype(kv_cache["k"].dtype))
+              .reshape(kv_cache["k"].shape))
+        cv = (kv_cache["v"].reshape(N * PT, KV, dv)
+              .at[dest].set(v.reshape(B * S, KV, dv)
+                            .astype(kv_cache["v"].dtype))
+              .reshape(kv_cache["v"].shape))
+        new_cache = {"k": ck, "v": cv}
+        if use_pallas and S == 1:  # paged flash-decoding: the hot path
+            from repro.kernels import ops as kops
+            lengths = (cache_index + 1).astype(jnp.int32)
+            ctx = kops.paged_decode_attention(
+                q[:, 0], ck.astype(x.dtype), cv.astype(x.dtype),
+                page_table, lengths, scale=scale,
+                impl=attn_impl)[:, None]                    # (B,1,H,dv)
+            if "s_vo" in params:
+                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
+                                 params["s_vo"].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+            return y, new_cache
+        # Chunked-prefill reads gather each slot's pages into a dense
+        # (B, P*PT, KV, r) view and reuse the masked path below; writes
+        # stay pool-resident (noted in DESIGN.md §6 as the cold path).
+        k = ck[page_table].reshape(B, P * PT, KV, dq).astype(x.dtype)
+        v = cv[page_table].reshape(B, P * PT, KV, dv).astype(x.dtype)
+        T = k.shape[1]
+        kv_pos = jnp.arange(T, dtype=jnp.int32)
+        qpos = cache_index[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        mask = kv_pos[None, None, :] <= qpos[:, :, None]      # (B, S, T)
+    elif kv_cache is not None:
         # cache_index: scalar (whole batch at one position — prefill and
         # lockstep decode) or (B,) vector (per-slot positions — the
         # serving engine's continuous batching; S may be > 1 for chunked

@@ -98,7 +98,8 @@ def _zero_aux():
 
 def _apply_layer(lp: Params, cfg: ArchConfig, mixer: str, mlp: str,
                  x: jnp.ndarray, *, positions, state: Optional[Params],
-                 cache_index) -> Tuple[jnp.ndarray, Optional[Params], Dict]:
+                 cache_index, pages=None,
+                 ) -> Tuple[jnp.ndarray, Optional[Params], Dict]:
     from repro.parallel.sharding import constrain, BATCH
     aux = _zero_aux()
     # anchor: activations stay batch-sharded through every block.  The
@@ -113,6 +114,7 @@ def _apply_layer(lp: Params, cfg: ArchConfig, mixer: str, mlp: str,
         kv = state["kv"] if state is not None else None
         y, new_kv = L.attention(lp["attn"], cfg, h, positions=positions,
                                 kv_cache=kv, cache_index=cache_index,
+                                page_table=pages,
                                 attn_impl=cfg.kernel_impl)
         if state is not None:
             new_state["kv"] = new_kv
@@ -267,7 +269,36 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> Params:
     return {"blocks": tuple(states), "index": jnp.zeros((), jnp.int32)}
 
 
-def _run_with_state(params, cfg, x, state, positions):
+def init_decode_state_paged(cfg: ArchConfig, batch: int, n_pages: int,
+                            page_tokens: int) -> Params:
+    """Decode state whose KV caches are PAGED: one global pool
+    ``(n_pages + 1, page_tokens, KV, r)`` per attention layer (stacked
+    over ``n_blocks``) instead of a dense per-slot ``(batch, max_len,
+    KV, r)``.  Row ``n_pages`` is the spare garbage row that sentinel
+    page-table entries address (padding / idle-slot writes land there).
+    Recurrent (mamba/rwkv) leaves stay per-slot — they are O(1) in
+    sequence length, so paging buys them nothing.  ``index`` is the
+    (batch,) per-slot position vector; the (batch, n_p) page table is
+    host-owned (serve.engine's ``PageAllocator``) and passed into each
+    step alongside the state.
+    """
+    dense = init_decode_state(cfg, batch, 1)   # non-KV leaves + layout
+    kv_dtype = _dtype(cfg.kv_cache_dtype or cfg.compute_dtype)
+
+    def repage(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if "kv" not in names:
+            return leaf
+        r = leaf.shape[-1]          # qk or vo rank
+        KV = leaf.shape[-2]
+        return jnp.zeros((cfg.n_blocks, n_pages + 1, page_tokens, KV, r),
+                         kv_dtype)
+
+    blocks = jax.tree_util.tree_map_with_path(repage, dense["blocks"])
+    return {"blocks": blocks, "index": jnp.zeros((batch,), jnp.int32)}
+
+
+def _run_with_state(params, cfg, x, state, positions, pages=None):
     cache_index = state["index"]
 
     def block_fn(x, xs):
@@ -276,7 +307,7 @@ def _run_with_state(params, cfg, x, state, positions):
         for j, (mixer, mlp) in enumerate(cfg.pattern):
             x, ns, _ = _apply_layer(block_params[j], cfg, mixer, mlp, x,
                                     positions=positions, state=block_state[j],
-                                    cache_index=cache_index)
+                                    cache_index=cache_index, pages=pages)
             new_states.append(ns)
         return x, tuple(new_states)
 
@@ -315,6 +346,7 @@ def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
 
 def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
                   state: Params, lengths: jnp.ndarray,
+                  pages: Optional[jnp.ndarray] = None,
                   ) -> Tuple[jnp.ndarray, Params]:
     """Write one fixed-size prompt chunk per slot into the decode state.
 
@@ -334,12 +366,16 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     Recurrent (mamba/rwkv) states advance over the FULL window including
     padding; callers with such states must only pass fully-valid windows
     (see serve.engine's scheduler) and merge inactive slots' states back.
+    ``pages``: optional (B, n_p) page table for paged KV caches — the
+    window then writes through the page indirection (see
+    ``init_decode_state_paged``).
     """
     B, C = tokens.shape
     idx = state["index"]                                   # (B,)
     positions = idx[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     x = _embed(params, cfg, tokens, positions, None)
-    x, new_state = _run_with_state(params, cfg, x, state, positions)
+    x, new_state = _run_with_state(params, cfg, x, state, positions,
+                                   pages=pages)
     new_state["index"] = idx + lengths
     last = jnp.clip(lengths - 1, 0, C - 1)
     x = jnp.take_along_axis(x, last[:, None, None], axis=1)
@@ -348,11 +384,14 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
 
 
 def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
-                state: Params) -> Tuple[jnp.ndarray, Params]:
+                state: Params,
+                pages: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, Params]:
     """token: (B,) int32.  Returns (logits (B, V), new_state).
 
     state["index"] may be a scalar (lockstep decode) or a (B,) vector
-    (per-slot positions, continuous batching)."""
+    (per-slot positions, continuous batching).  ``pages``: optional
+    (B, n_p) page table for paged KV caches."""
     B = token.shape[0]
     idx = state["index"]
     if jnp.ndim(idx) == 1:
@@ -360,7 +399,8 @@ def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
     else:
         positions = jnp.broadcast_to(idx[None, None], (B, 1)).astype(jnp.int32)
     x = _embed(params, cfg, token[:, None], positions, None)
-    x, new_state = _run_with_state(params, cfg, x, state, positions)
+    x, new_state = _run_with_state(params, cfg, x, state, positions,
+                                   pages=pages)
     new_state["index"] = state["index"] + 1
     x = L.apply_norm(params["final_norm"], cfg, x)
     return _logits(params, cfg, x)[:, 0], new_state

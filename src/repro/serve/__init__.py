@@ -1,3 +1,4 @@
-"""Serving: batched engine over CLOVER-rank KV caches."""
+"""Serving: batched engine over (optionally paged) CLOVER-rank KV caches."""
 from repro.serve.engine import (  # noqa: F401
-    Engine, EngineConfig, Request, Scheduler, greedy_reference)
+    Engine, EngineConfig, PageAllocator, Request, Scheduler,
+    greedy_reference)

@@ -14,18 +14,32 @@ compiles exactly TWO step shapes regardless of the prompt-length mix:
   * decode step — (slots,) one token per slot; the cheap shape used
     whenever no slot has prompt tokens left to chunk.
 
-The per-length jit cache of the previous engine (one compile per prompt
-length, one prompt admitted at a time, all decoding stalled during each
-prefill) is gone.
+KV layout is either DENSE (``EngineConfig.paged=False``: per-slot
+``(slots, capacity, KV, r)`` caches — every slot reserves full capacity
+regardless of its actual length) or PAGED (``paged=True``: one global
+pool ``(n_pages + 1, page_tokens, KV, r)`` per attention layer plus
+host-side per-slot page tables, managed by ``PageAllocator``).  Paging
+converts CLOVER's bytes-per-token win into CONCURRENCY: smaller rank ->
+more tokens per page -> more resident sequences per HBM byte, so a pool
+sized like a dense ``slots x max_len`` cache admits strictly more
+simultaneous sequences when real lengths are shorter than max_len.
+Admission is gated on free pages (not free slots), sequences grow
+on demand during decode, and on pool exhaustion the YOUNGEST sequence is
+preempted and requeued (its pages freed, its generated tokens folded
+into the effective prompt so the greedy stream continues exactly on
+re-admission) instead of crashing.  Both layouts compile the same two
+step shapes; every paged result is checkable against the dense engine
+token-for-token.
 
 Scheduling policy lives in ``Scheduler``: admission from a FIFO queue
 into free slots, per-slot phase tracking (PREFILL -> [TAIL ->] DECODE),
-retirement on eos / max_new_tokens.  Architectures with recurrent state
-(mamba / rwkv mixers or rwkv channel-mix) cannot take padded windows —
-padding tokens would advance their recurrent state — so for those the
-scheduler only chunks FULL windows and feeds the remainder (< C prompt
-tokens) through decode steps (TAIL phase); decoding slots hold during
-their chunk steps and their states are merged back unchanged.
+retirement on eos / max_new_tokens (freeing pages in paged mode).
+Architectures with recurrent state (mamba / rwkv mixers or rwkv
+channel-mix) cannot take padded windows — padding tokens would advance
+their recurrent state — so for those the scheduler only chunks FULL
+windows and feeds the remainder (< C prompt tokens) through decode steps
+(TAIL phase); decoding slots hold during their chunk steps and their
+states are merged back unchanged.
 
 Everything is shape-static and works unchanged on CPU (tests) and under
 a mesh with sharded state.
@@ -74,26 +88,133 @@ class EngineConfig:
     max_len: int = 512                  # KV capacity per slot
     eos_id: int = -1                    # -1: never stop on token
     prefill_chunk: int = 64             # prompt tokens consumed per chunk step
+    # -- paged KV cache (DESIGN.md §6) --------------------------------
+    paged: bool = False                 # page the KV cache
+    page_tokens: int = 8                # tokens per KV page
+    # pool size in pages; 0 -> slots * ceil(capacity / page_tokens),
+    # i.e. no memory pressure (every slot can reach full capacity).
+    # Size it below that to overcommit: admission then gates on free
+    # pages and exhaustion preempts the youngest sequence.
+    n_pages: int = 0
+
+    @property
+    def chunk(self) -> int:
+        """Effective chunk size — the ONE clamp both the Scheduler's
+        planning and the Engine's capacity/page-table sizing use."""
+        return max(1, min(self.prefill_chunk, self.max_len))
+
+    @property
+    def capacity(self) -> int:
+        """Per-slot KV capacity: max_len rounded up to a chunk multiple
+        PLUS one spare chunk, so every window write [index, index+C)
+        with index <= max_len stays in bounds — dense
+        dynamic_update_slice never clamps (a clamped write would shift
+        backwards over valid history) and paged position->page lookups
+        never fall off the table.  The spare tail is beyond every
+        causal horizon, hence never readable."""
+        C = self.chunk
+        return (self.max_len + C - 1) // C * C + C
+
+
+class PageAllocator:
+    """Free-list allocator over the global KV page pool.
+
+    Host-side owner of the page tables for the device pools built by
+    ``T.init_decode_state_paged``: ``n_pages`` real pages plus one spare
+    garbage row (id ``sentinel == n_pages``) that un-allocated
+    page-table entries address, so padded windows and idle slots write
+    harmlessly off to the side instead of into another slot's pages.
+
+    Invariants (property-tested in tests/test_property.py):
+      * a page id is owned by at most one slot at a time;
+      * ``release`` returns exactly the slot's pages to the free list;
+      * ``free_pages + used_pages() == n_pages`` at all times.
+    """
+
+    def __init__(self, n_pages: int, page_tokens: int, slots: int,
+                 table_pages: int):
+        assert n_pages >= 1 and page_tokens >= 1 and table_pages >= 1
+        self.n_pages = n_pages
+        self.page_tokens = page_tokens
+        self.table_pages = table_pages          # static page-table width
+        self.sentinel = n_pages                 # the garbage-sink row
+        self.free_list: List[int] = list(range(n_pages))
+        self.tables: List[List[int]] = [[] for _ in range(slots)]
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free_list)
+
+    def used_pages(self) -> int:
+        return sum(len(t) for t in self.tables)
+
+    def utilization(self) -> float:
+        return self.used_pages() / max(1, self.n_pages)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_tokens)
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table to cover positions [0, n_tokens);
+        all-or-nothing.  Returns False on pool exhaustion (caller
+        preempts) or if the static table width would overflow."""
+        want = self.pages_for(n_tokens)
+        need = want - len(self.tables[slot])
+        if need <= 0:
+            return True
+        if need > len(self.free_list) or want > self.table_pages:
+            return False
+        for _ in range(need):
+            self.tables[slot].append(self.free_list.pop())
+        return True
+
+    def release(self, slot: int) -> int:
+        """Return all of ``slot``'s pages to the free list."""
+        pages = self.tables[slot]
+        self.tables[slot] = []
+        self.free_list.extend(pages)
+        return len(pages)
+
+    def table_array(self) -> np.ndarray:
+        """(slots, table_pages) int32 device view; sentinel-padded."""
+        t = np.full((len(self.tables), self.table_pages), self.sentinel,
+                    np.int32)
+        for s, pages in enumerate(self.tables):
+            t[s, :len(pages)] = pages
+        return t
 
 
 class Scheduler:
-    """Admission / chunking / retirement policy with per-slot phases.
+    """Admission / chunking / preemption / retirement policy with
+    per-slot phases.
 
     Host-side bookkeeping only — the device sees nothing but the two
-    fixed step shapes the engine compiles.
+    fixed step shapes the engine compiles.  With a ``PageAllocator``
+    (paged mode) admission is gated on free pages for the effective
+    prompt, retirement frees pages, and ``preempt`` requeues a sequence
+    at the queue head with its generated tokens folded into the
+    effective prompt (greedy continuation is exact).
     """
 
-    def __init__(self, ecfg: EngineConfig, recurrent: bool):
+    def __init__(self, ecfg: EngineConfig, recurrent: bool,
+                 allocator: Optional[PageAllocator] = None):
         self.ecfg = ecfg
-        self.chunk = max(1, min(ecfg.prefill_chunk, ecfg.max_len))
+        self.chunk = ecfg.chunk
         self.recurrent = recurrent
+        self.alloc = allocator
         self.queue: collections.deque = collections.deque()
         n = ecfg.slots
         self.slot_req: List[Optional[Request]] = [None] * n
+        # effective prompt per slot: the request's prompt plus any
+        # tokens generated before a preemption (greedy continuation)
+        self.slot_prompt: List[Optional[np.ndarray]] = [None] * n
         self.phase: List[Optional[str]] = [None] * n
         self.pos = np.zeros(n, np.int64)        # prompt tokens consumed
         self.fresh = np.zeros(n, bool)          # needs state reset
         self.last_token = np.zeros(n, np.int32)
+        self.slot_seq = np.zeros(n, np.int64)   # admission order (age)
+        self._admit_counter = 0
+        self.preemptions = 0
 
     # -- admission -----------------------------------------------------
     def submit(self, req: Request):
@@ -103,14 +224,28 @@ class Scheduler:
     def admit(self):
         for s in range(self.ecfg.slots):
             if self.slot_req[s] is None and self.queue:
-                req = self.queue.popleft()
-                L = len(req.prompt)
+                req = self.queue[0]
+                eff = (req.prompt if not req.generated else
+                       np.concatenate([np.asarray(req.prompt, np.int32),
+                                       np.asarray(req.generated, np.int32)]))
+                L = len(eff)
+                remaining = req.max_new_tokens - len(req.generated)
                 assert L > 0, "empty prompt"
-                assert L + req.max_new_tokens <= self.ecfg.max_len, \
+                assert L + remaining <= self.ecfg.max_len, \
                     "request exceeds KV capacity"
+                if self.alloc is not None:
+                    assert (self.alloc.pages_for(L + remaining)
+                            <= self.alloc.n_pages), \
+                        "request exceeds page pool"
+                    if not self.alloc.ensure(s, L):
+                        break       # FIFO head-of-line: wait for pages
+                self.queue.popleft()
                 self.slot_req[s] = req
+                self.slot_prompt[s] = eff
                 self.pos[s] = 0
                 self.fresh[s] = True
+                self.slot_seq[s] = self._admit_counter
+                self._admit_counter += 1
                 self.phase[s] = self._prefill_phase(L, 0)
 
     def _prefill_phase(self, L: int, pos: int) -> str:
@@ -121,6 +256,27 @@ class Scheduler:
     # -- planning ------------------------------------------------------
     def has_chunk_work(self) -> bool:
         return any(p == PREFILL for p in self.phase)
+
+    def planned_writes(self) -> np.ndarray:
+        """(slots,) KV positions the NEXT step will write per active
+        slot — what must be page-covered before the step runs.  TAIL
+        and PREFILL writes always land inside the prompt coverage
+        allocated at admission; only decode growth can demand pages."""
+        n, C = self.ecfg.slots, self.chunk
+        take = np.zeros(n, np.int64)
+        chunk_step = self.has_chunk_work()
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if chunk_step:
+                if self.phase[s] == PREFILL:
+                    take[s] = min(C, len(self.slot_prompt[s])
+                                  - int(self.pos[s]))
+                elif self.phase[s] == DECODE and not self.recurrent:
+                    take[s] = 1
+            else:
+                take[s] = 1
+        return take
 
     def plan_chunk(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Build the (slots, C) window batch.  PREFILL slots consume up
@@ -134,8 +290,9 @@ class Scheduler:
             if req is None:
                 continue
             if self.phase[s] == PREFILL:
-                take = min(C, len(req.prompt) - int(self.pos[s]))
-                tokens[s, :take] = req.prompt[self.pos[s]:self.pos[s] + take]
+                prompt = self.slot_prompt[s]
+                take = min(C, len(prompt) - int(self.pos[s]))
+                tokens[s, :take] = prompt[self.pos[s]:self.pos[s] + take]
                 lengths[s] = take
             elif self.phase[s] == DECODE and not self.recurrent:
                 tokens[s, 0] = self.last_token[s]
@@ -155,7 +312,7 @@ class Scheduler:
                 continue
             active[s] = True
             if self.phase[s] == TAIL:
-                tokens[s] = req.prompt[self.pos[s]]
+                tokens[s] = self.slot_prompt[s][self.pos[s]]
             else:
                 tokens[s] = self.last_token[s]
         fresh = self.fresh & active
@@ -172,12 +329,12 @@ class Scheduler:
                 continue
             if self.phase[s] == PREFILL:
                 self.pos[s] += int(lengths[s])
-                if self.pos[s] == len(req.prompt):
+                if self.pos[s] == len(self.slot_prompt[s]):
                     self.phase[s] = DECODE
                     sample.append(s)
                 else:
                     self.phase[s] = self._prefill_phase(
-                        len(req.prompt), int(self.pos[s]))
+                        len(self.slot_prompt[s]), int(self.pos[s]))
             else:                                   # riding decode slot
                 sample.append(s)
         return sample
@@ -189,12 +346,29 @@ class Scheduler:
                 continue
             if self.phase[s] == TAIL:
                 self.pos[s] += 1
-                if self.pos[s] == len(req.prompt):
+                if self.pos[s] == len(self.slot_prompt[s]):
                     self.phase[s] = DECODE
                     sample.append(s)
             else:
                 sample.append(s)
         return sample
+
+    # -- preemption / retirement --------------------------------------
+    def preempt(self, s: int):
+        """Free slot ``s`` (pages included) and requeue its request at
+        the queue HEAD.  Generated tokens are kept on the request; they
+        join the effective prompt on re-admission, so the re-prefill
+        reproduces the stream exactly and generation continues from
+        where it stopped."""
+        req = self.slot_req[s]
+        assert req is not None
+        if self.alloc is not None:
+            self.alloc.release(s)
+        self.slot_req[s] = None
+        self.slot_prompt[s] = None
+        self.phase[s] = None
+        self.queue.appendleft(req)
+        self.preemptions += 1
 
     def retire(self):
         for s, req in enumerate(self.slot_req):
@@ -205,7 +379,10 @@ class Scheduler:
                         and req.generated[-1] == self.ecfg.eos_id)):
                 req.done = True
                 self.slot_req[s] = None
+                self.slot_prompt[s] = None
                 self.phase[s] = None
+                if self.alloc is not None:
+                    self.alloc.release(s)
 
     @property
     def busy(self) -> bool:
@@ -243,7 +420,9 @@ def _is_kv(path) -> bool:
 
 def _reset_fresh(state: Params, fresh: jnp.ndarray) -> Params:
     """Zero recurrent state + index of freshly admitted slots.  KV
-    caches keep their stale contents — masked by the per-slot index."""
+    caches keep their stale contents — masked by the per-slot index
+    (dense: the slot's own region; paged: freshly allocated pages hold a
+    previous owner's data, masked until overwritten by the new one)."""
 
     def z(path, leaf):
         if _is_kv(path):
@@ -258,9 +437,10 @@ def _merge_inactive(old_blocks, new_blocks, active: jnp.ndarray):
     """Keep inactive slots' recurrent state across a chunk step (their
     padded garbage window must not advance it).  KV caches are taken
     wholesale: inactive slots' garbage writes land at [index, index+C),
-    which is either masked (beyond each slot's causal horizon) or
+    which is either masked (beyond each slot's causal horizon),
     overwritten by that slot's own future writes before it becomes
-    readable."""
+    readable, or (paged) routed via sentinel table entries into the
+    pool's garbage row."""
 
     def sel(path, old, new):
         if _is_kv(path):
@@ -277,28 +457,40 @@ class Engine:
         self.cfg = cfg
         self.ecfg = ecfg
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        self.sched = Scheduler(ecfg, _is_recurrent(cfg))
-        C = self.sched.chunk
-        # KV capacity rounded up to a chunk multiple PLUS one spare chunk:
-        # every window write [index, index+C) with index <= max_len stays
-        # in bounds, so dynamic_update_slice never clamps (a clamped
-        # write would shift backwards over valid history).  The spare
-        # tail is beyond every causal horizon, hence never readable.
-        cap = (ecfg.max_len + C - 1) // C * C + C
-        self.state = T.init_decode_state(cfg, ecfg.slots, cap)
-        # per-slot positions: (slots,) index vector so slots at
-        # different depths coexist in one batch
-        self.state["index"] = jnp.zeros((ecfg.slots,), jnp.int32)
+        cap = ecfg.capacity        # see EngineConfig.capacity
+        if ecfg.paged:
+            pt = ecfg.page_tokens
+            table_pages = (cap + pt - 1) // pt
+            n_pages = ecfg.n_pages or ecfg.slots * table_pages
+            self.alloc: Optional[PageAllocator] = PageAllocator(
+                n_pages, pt, ecfg.slots, table_pages)
+            self.state = T.init_decode_state_paged(cfg, ecfg.slots,
+                                                   n_pages, pt)
+        else:
+            self.alloc = None
+            self.state = T.init_decode_state(cfg, ecfg.slots, cap)
+            # per-slot positions: (slots,) index vector so slots at
+            # different depths coexist in one batch
+            self.state["index"] = jnp.zeros((ecfg.slots,), jnp.int32)
+        self.sched = Scheduler(ecfg, _is_recurrent(cfg), self.alloc)
+        # host mirror of state["index"] (tokens written per slot this
+        # tenure) — drives page coverage without device round-trips
+        self.written = np.zeros(ecfg.slots, np.int64)
+        # serving stats
+        self.max_active = 0
+        self.peak_page_util = 0.0
 
-        def chunk_fn(params, tokens, lengths, fresh, state):
+        def chunk_fn(params, tokens, lengths, fresh, pages, state):
             st = _reset_fresh(state, fresh)
-            logits, new = T.prefill_chunk(params, cfg, tokens, st, lengths)
+            logits, new = T.prefill_chunk(params, cfg, tokens, st, lengths,
+                                          pages=pages)
             blocks = _merge_inactive(st["blocks"], new["blocks"],
                                      lengths > 0)
             return logits, {"blocks": blocks, "index": new["index"]}
 
-        def decode_fn(params, tok, fresh, state):
-            return T.decode_step(params, cfg, tok, _reset_fresh(state, fresh))
+        def decode_fn(params, tok, fresh, pages, state):
+            return T.decode_step(params, cfg, tok, _reset_fresh(state, fresh),
+                                 pages=pages)
 
         self._chunk = jax.jit(chunk_fn)
         self._decode = jax.jit(decode_fn)
@@ -309,8 +501,9 @@ class Engine:
 
     def compiled_shapes(self) -> Optional[int]:
         """Total jit cache entries across both step functions — the
-        engine's contract is that this never exceeds 2.  Returns None
-        if the jit cache isn't introspectable (private API drift)."""
+        engine's contract is that this never exceeds 2 (dense AND paged:
+        the page table is shape-static).  Returns None if the jit cache
+        isn't introspectable (private API drift)."""
         sizes = [getattr(f, "_cache_size", None)
                  for f in (self._chunk, self._decode)]
         if any(s is None for s in sizes):
@@ -332,23 +525,64 @@ class Engine:
             req.token_times.append(now)
             self.sched.last_token[s] = tok
 
+    # -- paged page-coverage / preemption ------------------------------
+    def _ensure_pages(self):
+        """Cover every active slot's upcoming writes with pages, oldest
+        sequence first (the FIFO head has page priority).  On pool
+        exhaustion, preempt-and-requeue the YOUNGEST active sequence
+        (vLLM-style) and retry, instead of crashing mid-trace."""
+        sched, alloc = self.sched, self.alloc
+        take = sched.planned_writes()
+        order = sorted((s for s in range(self.ecfg.slots)
+                        if sched.slot_req[s] is not None),
+                       key=lambda s: sched.slot_seq[s])
+        for s in order:
+            while sched.slot_req[s] is not None:
+                if alloc.ensure(s, int(self.written[s] + take[s])):
+                    break
+                victims = [v for v in range(self.ecfg.slots)
+                           if sched.slot_req[v] is not None]
+                victim = max(victims, key=lambda v: sched.slot_seq[v])
+                if victim == s and len(victims) == 1:
+                    # admission guarantees a lone sequence always fits
+                    raise RuntimeError(
+                        f"page pool exhausted: slot {s} needs "
+                        f"{alloc.pages_for(int(self.written[s] + take[s]))}"
+                        f" pages, pool has {alloc.n_pages}")
+                sched.preempt(victim)
+                take[victim] = 0
+
     # ------------------------------------------------------------------
     def step(self) -> int:
         """Admit + one chunk or decode step over all slots.
         Returns the number of active slots after the step."""
         sched = self.sched
         sched.admit()
+        pages = None
+        if self.alloc is not None:
+            # newly admitted slots restart their tenure at position 0
+            for s in range(self.ecfg.slots):
+                if sched.slot_req[s] is not None and sched.fresh[s]:
+                    self.written[s] = 0
+            self._ensure_pages()
+            pages = jnp.asarray(self.alloc.table_array())
+            self.peak_page_util = max(self.peak_page_util,
+                                      self.alloc.utilization())
+        self.max_active = max(self.max_active, len(
+            [r for r in sched.slot_req if r is not None]))
         if sched.has_chunk_work():
             tokens, lengths, fresh = sched.plan_chunk()
             logits, self.state = self._chunk(
                 self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-                jnp.asarray(fresh), self.state)
+                jnp.asarray(fresh), pages, self.state)
+            self.written += lengths        # device: index += lengths
             self._emit(sched.advance_chunk(lengths), np.asarray(logits))
         elif any(r is not None for r in sched.slot_req):
             tokens, fresh = sched.plan_decode()
             logits, self.state = self._decode(
                 self.params, jnp.asarray(tokens), jnp.asarray(fresh),
-                self.state)
+                pages, self.state)
+            self.written += 1              # device: index += 1, all slots
             self._emit(sched.advance_decode(), np.asarray(logits))
         else:
             return 0

@@ -14,6 +14,7 @@ from repro.core import svd_lowrank_product, snap_rank
 from repro.core.decompose import svd_tall
 from repro.kernels import ops, ref
 from repro.optim import warmup_cosine
+from repro.serve import PageAllocator
 
 SET = dict(max_examples=20, deadline=None)
 
@@ -81,6 +82,41 @@ def test_flash_attention_property(B, S, H, G, dq, dv, seed):
 def test_schedule_bounded(warmup, total, step):
     v = float(warmup_cosine(jnp.asarray(step), warmup=warmup, total=total))
     assert 0.0 <= v <= 1.0 + 1e-6
+
+
+@given(n_pages=st.integers(1, 24), page_tokens=st.integers(1, 8),
+       slots=st.integers(1, 4),
+       ops_seq=st.lists(st.tuples(st.sampled_from(["ensure", "release"]),
+                                  st.integers(0, 3), st.integers(0, 64)),
+                        max_size=40))
+@settings(**SET)
+def test_page_allocator_invariants(n_pages, page_tokens, slots, ops_seq):
+    """Arbitrary ensure/release interleavings never double-allocate a
+    page, always return freed pages, and keep capacity accounting
+    exact (free + used == n_pages; ensure is all-or-nothing)."""
+    table_pages = -(-64 // page_tokens)       # fits every requested size
+    a = PageAllocator(n_pages, page_tokens, slots, table_pages)
+    for op, slot, n_tokens in ops_seq:
+        slot %= slots
+        if op == "ensure":
+            before = len(a.tables[slot])
+            want = a.pages_for(n_tokens)
+            ok = a.ensure(slot, n_tokens)
+            if ok:
+                assert len(a.tables[slot]) == max(before, want)
+            else:       # all-or-nothing: failure changes nothing
+                assert len(a.tables[slot]) == before
+                assert want - before > a.free_pages or want > a.table_pages
+        else:
+            owned = len(a.tables[slot])
+            freed = a.release(slot)
+            assert freed == owned and a.tables[slot] == []
+        # global invariants after every operation
+        allocated = [p for t in a.tables for p in t]
+        assert len(allocated) == len(set(allocated))        # no double-alloc
+        assert set(allocated).isdisjoint(a.free_list)
+        assert len(allocated) + a.free_pages == a.n_pages   # exact accounting
+        assert a.sentinel not in allocated
 
 
 @given(seed=st.integers(0, 999), T=st.integers(2, 40),
