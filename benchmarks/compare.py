@@ -1,0 +1,145 @@
+"""CI perf-regression gate: diff the current run's ``BENCH_*.json``
+against the checked-in baselines in ``benchmarks/baselines/``.
+
+Throughput metrics (``tokens_per_s``) regress when they DROP by more
+than the threshold; latency metrics (``itl_p95_ms``) regress when they
+RISE by more than it.  Every gated metric present in a baseline must
+exist in the current run — a silently vanished metric cannot pass the
+gate.  Improvements and sub-threshold noise are reported but never
+fail.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run serve_bench kernel_bench
+    python -m benchmarks.compare                 # gate vs baselines
+    python -m benchmarks.compare --update        # refresh baselines
+    python -m benchmarks.compare --threshold 0.4 # looser gate
+
+The threshold (default 0.25 = 25%) can also come from the
+``BENCH_REGRESSION_THRESHOLD`` environment variable, so CI can loosen
+the gate on noisy shared runners without a code change.  Exit codes:
+0 ok, 1 regression(s), 2 missing/operational error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from pathlib import Path
+from typing import Dict, Iterator, Tuple
+
+BASELINE_DIR = Path(__file__).parent / "baselines"
+
+# metric-name suffix -> direction ("higher" is better / "lower" is
+# better); every (path, value) whose last key matches is gated
+GATED = {
+    "tokens_per_s": "higher",
+    "itl_p95_ms": "lower",
+}
+
+
+def _walk(obj, prefix: str = "") -> Iterator[Tuple[str, float]]:
+    """Yield (dotted.path, number) for every numeric leaf in ``obj``."""
+    if isinstance(obj, dict):
+        for key, val in sorted(obj.items()):
+            yield from _walk(val, f"{prefix}.{key}" if prefix else key)
+    elif isinstance(obj, bool):
+        return
+    elif isinstance(obj, (int, float)):
+        yield prefix, float(obj)
+
+
+def _gated_metrics(payload: dict) -> Dict[str, Tuple[str, float]]:
+    """{path: (direction, value)} for the gated leaves of one JSON."""
+    out = {}
+    for path, val in _walk(payload.get("metrics", {})):
+        leaf = path.rsplit(".", 1)[-1]
+        for suffix, direction in GATED.items():
+            if leaf == suffix or leaf.endswith("_" + suffix):
+                out[path] = (direction, val)
+    return out
+
+
+def compare_file(baseline_path: Path, current_path: Path,
+                 threshold: float) -> Tuple[list, list]:
+    """Returns (regressions, report_lines) for one bench JSON pair."""
+    base = _gated_metrics(json.loads(baseline_path.read_text()))
+    cur = _gated_metrics(json.loads(current_path.read_text()))
+    regressions, lines = [], []
+    for path, (direction, b) in sorted(base.items()):
+        if path not in cur:
+            regressions.append(f"{current_path.name}:{path}: metric "
+                               "missing from current run")
+            lines.append(f"  MISSING {path} (baseline {b:g})")
+            continue
+        c = cur[path][1]
+        if b <= 0:      # degenerate baseline: report, never divide
+            lines.append(f"  skip    {path}: baseline {b:g}")
+            continue
+        delta = (c - b) / b
+        bad = (delta < -threshold if direction == "higher"
+               else delta > threshold)
+        tag = "REGRESS" if bad else ("ok     " if abs(delta) <= threshold
+                                     else "improve")
+        lines.append(f"  {tag} {path}: {b:g} -> {c:g} ({delta:+.1%})")
+        if bad:
+            regressions.append(
+                f"{current_path.name}:{path}: {b:g} -> {c:g} "
+                f"({delta:+.1%}, threshold ±{threshold:.0%})")
+    return regressions, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
+    ap.add_argument("--current-dir", type=Path, default=Path("."),
+                    help="where the fresh BENCH_*.json files live")
+    ap.add_argument("--threshold", type=float, default=float(
+        os.environ.get("BENCH_REGRESSION_THRESHOLD", "0.25")),
+        help="max tolerated fractional regression (default 0.25)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current BENCH_*.json into the baseline "
+                         "dir instead of comparing")
+    args = ap.parse_args(argv)
+
+    currents = sorted(args.current_dir.glob("BENCH_*.json"))
+    if args.update:
+        if not currents:
+            print(f"no BENCH_*.json under {args.current_dir} to adopt")
+            return 2
+        args.baseline_dir.mkdir(parents=True, exist_ok=True)
+        for cur in currents:
+            shutil.copy(cur, args.baseline_dir / cur.name)
+            print(f"baseline updated: {args.baseline_dir / cur.name}")
+        return 0
+
+    baselines = sorted(args.baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        print(f"no baselines under {args.baseline_dir}; run with "
+              "--update after a trusted run to create them")
+        return 2
+    all_regressions = []
+    for base in baselines:
+        cur = args.current_dir / base.name
+        print(f"\n== {base.name} (gate ±{args.threshold:.0%})")
+        if not cur.exists():
+            print(f"  current run produced no {base.name} "
+                  "(benchmarks.run not executed or crashed)")
+            all_regressions.append(f"{base.name}: missing current file")
+            continue
+        regs, lines = compare_file(base, cur, args.threshold)
+        print("\n".join(lines) if lines else "  (no gated metrics)")
+        all_regressions.extend(regs)
+    if all_regressions:
+        print(f"\nPERF REGRESSIONS ({len(all_regressions)}):")
+        for r in all_regressions:
+            print(f"  {r}")
+        return 1
+    print("\nperf gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

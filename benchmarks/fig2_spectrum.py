@@ -8,11 +8,9 @@ point in their plots), enabling aggressive pruning.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import pretrain_base
 from repro.configs import get_config

@@ -10,7 +10,6 @@ Fine-tune the same base with LoRA, CLOVER-S, and full FT; then:
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import data_for, pretrain_base, train
 from benchmarks.table2_peft import _train_adapters

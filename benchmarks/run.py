@@ -17,6 +17,7 @@ from __future__ import annotations
 import json
 import sys
 import time
+import traceback
 
 MODULES = ("table1_pruning", "table2_peft", "fig2_spectrum",
            "fig3_trainfree", "fig4_projection", "fig56_rank",
@@ -49,12 +50,22 @@ def main(argv=None) -> int:
         return 2
     failures = []
     for name in selected:
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         print(f"\n=== {name} " + "=" * (60 - len(name)))
         t0 = time.time()
-        out = mod.run(verbose=True)
+        # a crashing benchmark is a FAILURE of that module, never a
+        # silent pass NOR an abort that hides the remaining modules'
+        # results — record it, keep going, exit non-zero at the end
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            out = mod.run(verbose=True)
+            checks = out["checks"]
+        except Exception as e:  # noqa: BLE001 - the driver must survive
+            traceback.print_exc()
+            failures.append(f"{name}:raised:{type(e).__name__}")
+            print(f"  [FAIL] {name} raised {type(e).__name__}: {e}")
+            continue
         dt = time.time() - t0
-        for check, ok in out["checks"].items():
+        for check, ok in checks.items():
             status = "PASS" if ok else "FAIL"
             print(f"  [{status}] {check}")
             if not ok:

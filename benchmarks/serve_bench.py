@@ -1,7 +1,7 @@
 """Serving throughput/latency under chunked-prefill continuous batching,
-dense AND paged KV caches.
+dense AND paged KV caches, with and without self-speculative decoding.
 
-Two scenarios connect the paper's rank pruning to the serving path:
+Three scenarios connect the paper's rank pruning to the serving path:
 
 1. **Mixed trace** — a Poisson arrival trace of mixed-length prompts is
    played against the dense and the paged engine at several CLOVER
@@ -18,11 +18,22 @@ Two scenarios connect the paper's rank pruning to the serving path:
    holds more pages at prune ratio 0.5 than at 0.0 — rank pruning
    converts directly into concurrency (the tentpole claim).
 
+3. **Self-speculative decoding** — the same mixed trace replayed at
+   ``spec_k`` in {0, 2, 4}: every pure-decode step, a rank-sliced DRAFT
+   pass over the same weights proposes k tokens and one (slots, k+1)
+   verify step commits a greedy prefix (DESIGN.md §8).  Reported:
+   tokens/sec per k and the accepted-tokens-per-step histogram — the
+   mean must exceed 1.0 (drafts actually get accepted) for the pruned
+   model at k=4, or speculation is pure overhead.
+
 What must hold on CPU (timings vary, orderings don't):
   * both engines compile exactly TWO step shapes each over the whole
-    mixed-length trace — the two-shape contract survives paging;
-  * greedy streams match their isolated full-prefill references and
-    paged matches dense exactly (preemptions included);
+    mixed-length trace (the two-shape contract survives paging), plus
+    at most one draft + one verify shape when speculation is on;
+  * greedy streams match their isolated full-prefill references, paged
+    matches dense exactly (preemptions included), and every
+    speculative stream is token-identical to its non-speculative
+    counterpart in BOTH layouts;
   * the paged engine's max concurrency strictly exceeds the dense
     engine's at equal HBM budget, and grows again at prune 0.5.
 
@@ -31,6 +42,7 @@ the driver also writes the machine-readable BENCH_serve.json)
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -47,6 +59,8 @@ MAX_NEW = 8
 CHUNK = 8
 PAGE_TOKENS = 8
 MAX_LEN = 64
+SPEC_KS = (0, 2, 4)            # draft tokens per speculative round
+DRAFT_RATIO = 0.5              # draft slices half of every CURRENT rank
 # memory-pressure scenario: KV HBM budget expressed in UNPRUNED tokens
 # (= a dense 2-slot x max_len allocation at prune 0.0)
 PRESSURE_BUDGET_TOKENS = 2 * MAX_LEN
@@ -71,8 +85,10 @@ def _serve_trace(params, cfg, trace, ecfg: EngineConfig):
     eng = Engine(params, cfg, ecfg)
     reqs = [Request(uid=i, prompt=p, max_new_tokens=MAX_NEW)
             for i, (_, p) in enumerate(trace)]
-    # warm both compiled shapes so steady-state timing isn't compile time
+    # warm all compiled shapes so steady-state timing isn't compile time
     eng.run([Request(uid=-1, prompt=trace[0][1][:3], max_new_tokens=2)])
+    eng.spec_rounds = 0
+    eng.accept_hist.clear()
     t0 = time.monotonic()
     due = {i: s for i, (s, _) in enumerate(trace)}
     step = 0
@@ -122,6 +138,7 @@ def run(verbose: bool = True):
     checks = {}
     metrics = {}
     pressure_concurrency = {}
+    spec_accept = {}
     for ratio in PRUNE_RATIOS:
         dp, dcfg, _ = clover_decompose(params0, cfg0, peft=False)
         params, cfg = clover_prune(dp, dcfg, qk_ratio=ratio, vo_ratio=ratio)
@@ -161,6 +178,47 @@ def run(verbose: bool = True):
             checks[f"{tag}_kv_rank_reduced"] = (
                 cfg.clover.qk_rank < cfg0.head_dim_)
 
+        # -- self-speculative decoding sweep (DESIGN.md §8) ------------
+        # k=0 is the non-speculative dense/paged run above; every k > 0
+        # must reproduce those streams token-for-token while emitting
+        # accepted-tokens-per-step > 1 where drafts are good
+        spec = {"k0": {"dense_tokens_per_s": m_d["tokens_per_s"],
+                       "paged_tokens_per_s": m_p["tokens_per_s"]}}
+        for kk in [k for k in SPEC_KS if k > 0]:
+            eng_sd, reqs_sd, m_sd = _serve_trace(
+                params, cfg, trace,
+                dataclasses.replace(dense_cfg, spec_k=kk,
+                                    draft_rank_ratio=DRAFT_RATIO))
+            eng_sp, reqs_sp, m_sp = _serve_trace(
+                params, cfg, trace,
+                dataclasses.replace(paged_cfg, spec_k=kk,
+                                    draft_rank_ratio=DRAFT_RATIO))
+            spec[f"k{kk}"] = {
+                "dense_tokens_per_s": m_sd["tokens_per_s"],
+                "paged_tokens_per_s": m_sp["tokens_per_s"],
+                "accepted_per_round": round(eng_sd.accepted_per_round, 3),
+                "accept_hist": {str(a): c for a, c in
+                                sorted(eng_sd.accept_hist.items())},
+            }
+            for kname, val in spec[f"k{kk}"].items():
+                if kname != "accept_hist":
+                    rows.append((f"{tag}_spec_k{kk}", kname, val))
+            # the speculative path changes WHEN tokens are computed,
+            # never WHICH tokens come out — both layouts
+            checks[f"{tag}_spec_k{kk}_dense_matches_nonspec"] = all(
+                s.generated == d.generated
+                for s, d in zip(reqs_sd, reqs_d))
+            checks[f"{tag}_spec_k{kk}_paged_matches_nonspec"] = all(
+                s.generated == p.generated
+                for s, p in zip(reqs_sp, reqs_p))
+            # 2 base shapes + 1 draft + 1 verify at most (pure-decode
+            # steps may be entirely replaced by speculative rounds)
+            checks[f"{tag}_spec_k{kk}_shapes_fixed"] = (
+                eng_sd.compiled_shapes() in (3, 4, None)
+                and eng_sp.compiled_shapes() in (3, 4, None))
+        metrics[f"spec_{tag}"] = spec
+        spec_accept[ratio] = spec[f"k{max(SPEC_KS)}"]["accepted_per_round"]
+
         # -- memory pressure at a fixed HBM budget ---------------------
         # pruning shrinks bytes/token, so the SAME byte budget holds
         # more tokens (hence pages / dense slots) at higher prune ratio
@@ -195,6 +253,12 @@ def run(verbose: bool = True):
     # sequences than 0.0 at the same pool byte budget
     checks["pressure_prune_raises_concurrency"] = (
         pressure_concurrency[0.5] > pressure_concurrency[0.0])
+    # speculation earns its keep: on the pruned model at the deepest k,
+    # the mean accepted-tokens-per-step strictly exceeds 1.0 (some
+    # draft proposals survive verification — k+1 tokens for one
+    # full-model step, not just the bonus token every time)
+    checks["spec_accepted_per_round_gt1_prune0.50_k4"] = (
+        spec_accept[0.5] > 1.0)
 
     if verbose:
         print("case,metric,value")

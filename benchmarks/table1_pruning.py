@@ -10,9 +10,6 @@ Reproduced claims (orderings, at reduced scale):
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from benchmarks.common import perplexity, pretrain_base, train
 from repro.core import clover_decompose, clover_prune, vanilla_prune
 from repro.core.peft import count_params, partition

@@ -13,21 +13,15 @@ Reproduced claims:
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (data_for, perplexity, pretrain_base, train,
-                               tiny_gpt2)
+from benchmarks.common import data_for, perplexity, pretrain_base, train
 from repro.core import (clover_decompose, merge_clover, PeftConfig,
                         init_adapters, materialize, pissa_residual,
                         count_params, partition)
-from repro.data import SyntheticConfig, SyntheticLM
-from repro.launch.mesh import make_host_mesh
 from repro.models import forward
 from repro.optim import AdamWConfig
-from repro.train.step import TrainConfig, make_opt_state, make_train_step
 
 FT_STEPS = 80
 
@@ -52,13 +46,13 @@ def _train_adapters(params, cfg, pcfg, data, *, steps, lr):
 
     @jax.jit
     def step(ad, opt, tokens, labels):
-        l, g = jax.value_and_grad(loss_fn)(ad, tokens, labels)
+        loss_val, g = jax.value_and_grad(loss_fn)(ad, tokens, labels)
         ad, opt, _ = adamw_update(g, opt, ad, ocfg)
-        return ad, opt, l
+        return ad, opt, loss_val
 
     for i in range(steps):
         b = data.batch_at(i)
-        adapters, opt, l = step(adapters, opt, jnp.asarray(b["tokens"]),
+        adapters, opt, loss_val = step(adapters, opt, jnp.asarray(b["tokens"]),
                                 jnp.asarray(b["labels"]))
     return materialize(frozen, adapters, pcfg), count_params(adapters)
 

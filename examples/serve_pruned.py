@@ -8,10 +8,16 @@ interleaved with decoding, so the whole mixed-length batch compiles
 exactly two step shapes; each stream is verified against its isolated
 greedy reference.  The same trace is then replayed on the PAGED engine
 (global page pool + page tables, admission gated on free pages,
-preemption on exhaustion) and must produce identical streams.
+preemption on exhaustion) and must produce identical streams — and,
+with ``--spec-k`` > 0, replayed once more with SELF-SPECULATIVE
+decoding (a rank-sliced draft of the same weights proposes tokens, one
+multi-token verify step commits a greedy prefix; DESIGN.md §8), again
+token-identical.
 
 Run:  PYTHONPATH=src python examples/serve_pruned.py
+      PYTHONPATH=src python examples/serve_pruned.py --spec-k 4
 """
+import argparse
 import time
 
 import jax
@@ -24,6 +30,14 @@ from repro.serve import Engine, EngineConfig, Request, greedy_reference
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec-k", type=int, default=2,
+                    help="draft tokens per speculative round (0 = off)")
+    ap.add_argument("--draft-rank-ratio", type=float, default=0.5,
+                    help="fraction of every head's current rank the "
+                         "draft slices off (0.0 = draft is the exact "
+                         "model)")
+    args = ap.parse_args()
     cfg = get_config("musicgen-large").reduced()
     params = init_lm_params(cfg, jax.random.PRNGKey(0))
     dparams, dcfg, _ = clover_decompose(params, cfg, peft=False)
@@ -66,6 +80,26 @@ def main():
           f"({ep.compiled_shapes()} compiled step shapes, "
           f"{ep.sched.preemptions} preemptions, "
           f"peak page util {ep.peak_page_util:.0%})")
+
+    # replay once more with self-speculative decoding: the rank-sliced
+    # draft of the SAME weights proposes spec_k tokens per decode step,
+    # one (slots, k+1) verify step commits a greedy prefix — identical
+    # streams, more tokens per full-model step (DESIGN.md §8)
+    if args.spec_k > 0:
+        es = Engine(pparams, pcfg,
+                    EngineConfig(slots=4, max_len=96, prefill_chunk=8,
+                                 spec_k=args.spec_k,
+                                 draft_rank_ratio=args.draft_rank_ratio))
+        reqs_s = [Request(uid=r.uid, prompt=r.prompt,
+                          max_new_tokens=r.max_new_tokens) for r in reqs]
+        es.run(reqs_s)
+        match = all(a.generated == b.generated
+                    for a, b in zip(reqs, reqs_s))
+        print(f"speculative replay (k={args.spec_k}, draft ratio "
+              f"{args.draft_rank_ratio}): match={match}, "
+              f"{es.accepted_per_round:.2f} accepted tokens/step "
+              f"(hist {dict(sorted(es.accept_hist.items()))}, "
+              f"{es.compiled_shapes()} compiled step shapes)")
 
 
 if __name__ == "__main__":

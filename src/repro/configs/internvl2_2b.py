@@ -3,7 +3,7 @@
 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.  The InternViT
 frontend is a stub: input_specs() provides precomputed patch embeddings.
 """
-from repro.configs.base import ArchConfig, MIXER_ATTN, MLP_DENSE
+from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(
     name="internvl2-2b",

@@ -20,7 +20,6 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.core.decompose import svd_lowrank_product
 
 Params = Dict[str, Any]
@@ -52,7 +51,6 @@ def qk_curves(attn: Params, G: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
 def vo_curves(attn: Params, G: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     wv, wo = attn["wv"], attn["wo"]
     D, KV, d = wv.shape
-    H = wo.shape[0]
     A = wv.transpose(1, 0, 2)
     Bt = wo.reshape(KV, G, d, -1).transpose(0, 1, 3, 2).reshape(KV, G * D, d)
     _, S, _ = jax.vmap(svd_lowrank_product)(A, Bt)

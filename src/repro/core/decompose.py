@@ -36,12 +36,12 @@ and work in float32 regardless of the param dtype.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (ArchConfig, CloverConfig, MIXER_ATTN,
+from repro.configs.base import (ArchConfig, MIXER_ATTN,
                                 MLP_DENSE, MLP_RWKV)
 
 Params = Dict[str, Any]

@@ -20,7 +20,7 @@ applicability so comparisons are apples-to-apples.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,34 @@ def plan_ranks(cfg: ArchConfig, qk_ratio: float, vo_ratio: float
         qk_keep = d
     vo_keep = snap_rank(round(d * (1.0 - vo_ratio)), m, d)
     return qk_keep, vo_keep
+
+
+def draft_ranks(cfg: ArchConfig, ratio: float) -> Tuple[int, int]:
+    """Per-head (qk, vo) widths of the self-speculative DRAFT model.
+
+    The draft is the same weights with the last orthogonal directions of
+    every head sliced off — ``ratio`` is applied to the CURRENT widths
+    (which may already be pruned), so a model served at prune 0.5 drafts
+    from a further-halved rank.  Applicability mirrors ``plan_ranks``:
+    in partial-RoPE mode only the NoPE tail shrinks (slicing inside the
+    rotated block would break RoPE's dim pairing), and in intra mode
+    (full RoPE) the Q-K pair is never sliced — only V-O.  Widths snap UP
+    to the TPU sublane multiple like every other kept rank.
+    """
+    dq, dv = cfg.qk_dim, cfg.vo_dim
+    m = cfg.clover.rank_multiple
+    mode = qk_mode(cfg)
+    if mode == "cross":
+        r_q = snap_rank(round(dq * (1.0 - ratio)), m, dq)
+    elif mode == "partial":
+        rot = min(cfg.rope_dims, dq)
+        tail = dq - rot
+        r_q = rot + (snap_rank(round(tail * (1.0 - ratio)), m, tail)
+                     if tail > 0 else 0)
+    else:  # intra (full RoPE): Q-K slicing illegal (paper §5)
+        r_q = dq
+    r_v = snap_rank(round(dv * (1.0 - ratio)), m, dv)
+    return r_q, r_v
 
 
 def _set_ranks(cfg: ArchConfig, qk_keep: int, vo_keep: int) -> ArchConfig:

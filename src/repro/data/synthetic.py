@@ -13,10 +13,9 @@ fine-tuning and PEFT benchmarks have actual signal to learn.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Iterator, Optional, Tuple
+from typing import Any, Dict, Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -72,8 +72,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
     @pl.when(it == n_t - 1)
     def _fin():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
@@ -84,6 +84,12 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """q: (B, H, dq);  k: (B, T, KV, dq);  v: (B, T, KV, dv);
     lengths: (B,) int32.  T % block_t == 0 (ops.py pads; padded positions
     are masked by lengths).  -> (B, H, dv)
+
+    ``lengths`` is the only validity signal: positions past it may hold
+    anything — zero-init tail, a previous tenant's cache, or K/V of
+    speculative draft tokens rejected and rolled back by serve.engine —
+    and never influence the output (masked in-block, clamped out of the
+    stream across blocks).
     """
     B, H, dq = q.shape
     T, KV = k.shape[1], k.shape[2]

@@ -87,8 +87,8 @@ def _paged_decode_kernel(len_ref, tab_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(ip == n_p - 1)
     def _fin():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
 def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
@@ -101,6 +101,15 @@ def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
     ids into the pool (entries past ceil(lengths[b]/page_tokens) are
     never dereferenced and may be any in-range id, e.g. a garbage-sink
     sentinel);  lengths: (B,) int32.  -> (B, H, dv)
+
+    POST-ROLLBACK contract (speculative decoding, serve.engine): after
+    a verify round rejects draft tokens, ``lengths`` decrements while
+    the rejected K/V stays written — both inside the row's last in-use
+    page and in still-allocated pages past it.  The per-row clamp and
+    the ``tj < length`` mask key on ``lengths`` ALONE, so rolled-back
+    positions cost no DMA past the clamp and never enter the softmax;
+    a row's allocated page count may exceed ``ceil(lengths[b] /
+    page_tokens)`` freely.
     """
     B, H, dq = q.shape
     pt, KV = k_pool.shape[1], k_pool.shape[2]

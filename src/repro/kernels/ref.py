@@ -59,6 +59,36 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.reshape(B, H, v.shape[-1])
 
 
+def verify_decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
+                                v: jnp.ndarray, lengths: jnp.ndarray, *,
+                                scale: Optional[float] = None) -> jnp.ndarray:
+    """Speculative-VERIFY oracle: a W-token window of queries against a
+    per-slot cache (the multi-token generalization of
+    ``decode_attention_ref`` — W == 1 reduces to it exactly).
+
+    q: (B, W, H, dq);  k: (B, T, KV, dq);  v: (B, T, KV, dv);
+    lengths: (B,) int32 — the TOTAL valid cache length per row, window
+    included: query j of row b sits at position ``lengths[b] - W + j``
+    and attends to cache positions <= its own.  Cache contents past
+    ``lengths[b]`` (e.g. K/V of draft tokens rejected by an earlier
+    verify round and rolled back — see serve.engine) never influence
+    the output.  -> (B, W, H, dv)
+    """
+    B, W, H, dq = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(dq).astype(jnp.float32)
+    qg = q.reshape(B, W, KV, G, dq)
+    logits = jnp.einsum("bskgq,btkq->bkgst", qg, k).astype(jnp.float32) * scale
+    qpos = (lengths[:, None] - W) + jnp.arange(W)[None, :]        # (B, W)
+    mask = jnp.arange(T)[None, None, :] <= qpos[:, :, None]       # (B, W, T)
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkv->bskgv", p, v)
+    return out.reshape(B, W, H, v.shape[-1])
+
+
 def paged_decode_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
                                v_pool: jnp.ndarray,
                                page_table: jnp.ndarray,

@@ -16,7 +16,6 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):

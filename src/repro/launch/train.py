@@ -12,14 +12,11 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import clover_decompose, clover_prune
@@ -29,7 +26,7 @@ from repro.models import transformer as T
 from repro.optim import AdamWConfig
 from repro.parallel import sharding as sh
 from repro.train.checkpoint import CheckpointManager
-from repro.train.step import (TrainConfig, loss_fn, make_opt_state,
+from repro.train.step import (TrainConfig, make_opt_state,
                               make_train_step)
 from repro.train.supervisor import Supervisor, WorkerFailure
 

@@ -130,7 +130,7 @@ def _causal_attention_chunked(q, k, v, scale, *, softcap: float = 0.0,
     Megatron-style context parallelism.  K/V are per-kv-head small (GQA)
     and replicate across the model axis in that mode.
     """
-    from repro.parallel.sharding import constrain, BATCH, HEADS, KV_SEQ
+    from repro.parallel.sharding import constrain, BATCH, KV_SEQ
     B, S, H, dq = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
@@ -185,13 +185,16 @@ def init_attention(key, cfg, dtype) -> Params:
     return p
 
 
-def _merge_transitions(params: Params, q, k, ctx):
-    """Apply the (optional) CLOVER trainable matrices."""
-    if "s_qk" in params:
-        q = jnp.einsum("bshq,hqr->bshr", q, params["s_qk"].astype(q.dtype))
-    if ctx is not None and "s_vo" in params:
-        ctx = jnp.einsum("bshv,hvw->bshw", ctx, params["s_vo"].astype(ctx.dtype))
-    return q, ctx
+def _pad_rank(t: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Zero-pad the last (rank) dim up to ``width`` (no-op if already
+    there).  Used by the self-speculative DRAFT pass: its K/V live at a
+    sliced rank but must land in the full-rank shared cache — the padded
+    tail is overwritten by the verify pass before the full model ever
+    reads those positions."""
+    d = t.shape[-1]
+    if d == width:
+        return t
+    return jnp.pad(t, [(0, 0)] * (t.ndim - 1) + [(0, width - d)])
 
 
 def attention(params: Params, cfg, x: jnp.ndarray, *,
@@ -200,6 +203,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
               cache_index: Optional[jnp.ndarray] = None,
               page_table: Optional[jnp.ndarray] = None,
               attn_impl: str = "xla",
+              draft_rank: Optional[Tuple[int, int]] = None,
               ) -> Tuple[jnp.ndarray, Optional[Params]]:
     """GQA attention.
 
@@ -215,23 +219,39 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
     table must cover positions [0, cache_index + S) per slot — entries
     may be a sentinel id addressing the pool's spare garbage row, where
     padding/idle-slot writes land harmlessly (DESIGN.md §6).
+
+    Self-speculative draft: ``draft_rank = (r_q, r_v)`` runs the SAME
+    weights with every head's rank sliced to the leading draft widths
+    (DESIGN.md §8).  Because CLOVER factors are sorted by singular
+    value, ``x @ wq[..., :r]`` equals the leading dims of the full
+    projection — so the draft's view of the SHARED cache is literally
+    ``cache[..., :r]``; no second cache exists.  Draft K/V writes are
+    zero-padded to the cache width and always overwritten by the verify
+    pass before the full model reads those positions.
     """
     B, S, D = x.shape
     H, KV = cfg.n_heads, cfg.n_kv_heads
     G = cfg.q_per_kv
-    dq, dv = cfg.qk_dim, cfg.vo_dim
+    dq_c, dv_c = cfg.qk_dim, cfg.vo_dim     # cache (full-model) widths
+    dq, dv = draft_rank if draft_rank is not None else (dq_c, dv_c)
+    assert dq <= dq_c and dv <= dv_c, (draft_rank, dq_c, dv_c)
     # CLOVER-pruned heads approximate the ORIGINAL product Q K^T, so the
     # softmax scale stays 1/sqrt(original head_dim) regardless of rank.
     scale = 1.0 / math.sqrt(cfg.head_dim_)
 
-    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dkq->bskq", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dkv->bskv", x, params["wv"].astype(x.dtype))
+    q = jnp.einsum("bsd,dhq->bshq", x,
+                   params["wq"][..., :dq].astype(x.dtype))
+    k = jnp.einsum("bsd,dkq->bskq", x,
+                   params["wk"][..., :dq].astype(x.dtype))
+    v = jnp.einsum("bsd,dkv->bskv", x,
+                   params["wv"][..., :dv].astype(x.dtype))
 
     if "k_t" in params:  # intra-layer K transition (RoPE-safe CLOVER PEFT)
-        k = jnp.einsum("bskq,kqr->bskr", k, params["k_t"].astype(k.dtype))
+        k = jnp.einsum("bskq,kqr->bskr", k,
+                       params["k_t"][..., :dq, :dq].astype(k.dtype))
     if "s_qk" in params:
-        q = jnp.einsum("bshq,hqr->bshr", q, params["s_qk"].astype(q.dtype))
+        q = jnp.einsum("bshq,hqr->bshr", q,
+                       params["s_qk"][..., :dq, :dq].astype(q.dtype))
 
     # Partial-RoPE pruning keeps the rotated block intact at the front, so
     # RoPE always applies to the first rope_dims (<= dq) dims.
@@ -258,12 +278,12 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
         pos = cache_index[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
         page = jnp.take_along_axis(page_table, pos // PT, axis=1)   # (B, S)
         dest = (page * PT + pos % PT).reshape(-1)                   # (B*S,)
-        ck = (kv_cache["k"].reshape(N * PT, KV, dq)
-              .at[dest].set(k.reshape(B * S, KV, dq)
+        ck = (kv_cache["k"].reshape(N * PT, KV, dq_c)
+              .at[dest].set(_pad_rank(k, dq_c).reshape(B * S, KV, dq_c)
                             .astype(kv_cache["k"].dtype))
               .reshape(kv_cache["k"].shape))
-        cv = (kv_cache["v"].reshape(N * PT, KV, dv)
-              .at[dest].set(v.reshape(B * S, KV, dv)
+        cv = (kv_cache["v"].reshape(N * PT, KV, dv_c)
+              .at[dest].set(_pad_rank(v, dv_c).reshape(B * S, KV, dv_c)
                             .astype(kv_cache["v"].dtype))
               .reshape(kv_cache["v"].shape))
         new_cache = {"k": ck, "v": cv}
@@ -271,19 +291,22 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
             from repro.kernels import ops as kops
             lengths = (cache_index + 1).astype(jnp.int32)
             ctx = kops.paged_decode_attention(
-                q[:, 0], ck.astype(x.dtype), cv.astype(x.dtype),
+                q[:, 0], ck[..., :dq].astype(x.dtype),
+                cv[..., :dv].astype(x.dtype),
                 page_table, lengths, scale=scale,
                 impl=attn_impl)[:, None]                    # (B,1,H,dv)
             if "s_vo" in params:
                 ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
             return y, new_cache
         # Chunked-prefill reads gather each slot's pages into a dense
         # (B, P*PT, KV, r) view and reuse the masked path below; writes
         # stay pool-resident (noted in DESIGN.md §6 as the cold path).
-        k = ck[page_table].reshape(B, P * PT, KV, dq).astype(x.dtype)
-        v = cv[page_table].reshape(B, P * PT, KV, dv).astype(x.dtype)
+        k = (ck[page_table].reshape(B, P * PT, KV, dq_c)[..., :dq]
+             .astype(x.dtype))
+        v = (cv[page_table].reshape(B, P * PT, KV, dv_c)[..., :dv]
+             .astype(x.dtype))
         T = k.shape[1]
         kv_pos = jnp.arange(T, dtype=jnp.int32)
         qpos = cache_index[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
@@ -294,34 +317,33 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
         # serving engine's continuous batching; S may be > 1 for chunked
         # prefill, writing an S-token window at each slot's own offset).
         per_slot = jnp.ndim(cache_index) == 1
+        kw = _pad_rank(k, dq_c).astype(kv_cache["k"].dtype)
+        vw = _pad_rank(v, dv_c).astype(kv_cache["v"].dtype)
         if per_slot:
             upd = jax.vmap(
                 lambda c, kn, i: jax.lax.dynamic_update_slice_in_dim(
                     c, kn, i, axis=0))
-            ck = upd(kv_cache["k"], k.astype(kv_cache["k"].dtype),
-                     cache_index)
-            cv = upd(kv_cache["v"], v.astype(kv_cache["v"].dtype),
-                     cache_index)
+            ck = upd(kv_cache["k"], kw, cache_index)
+            cv = upd(kv_cache["v"], vw, cache_index)
         else:
             ck = jax.lax.dynamic_update_slice_in_dim(
-                kv_cache["k"], k.astype(kv_cache["k"].dtype), cache_index,
-                axis=1)
+                kv_cache["k"], kw, cache_index, axis=1)
             cv = jax.lax.dynamic_update_slice_in_dim(
-                kv_cache["v"], v.astype(kv_cache["v"].dtype), cache_index,
-                axis=1)
+                kv_cache["v"], vw, cache_index, axis=1)
         new_cache = {"k": ck, "v": cv}
         if use_pallas and S == 1:  # flash-decoding against the cache
             from repro.kernels import ops as kops
             lengths = jnp.broadcast_to(cache_index + 1, (B,)).astype(jnp.int32)
             ctx = kops.decode_attention(
-                q[:, 0], ck.astype(x.dtype), cv.astype(x.dtype), lengths,
+                q[:, 0], ck[..., :dq].astype(x.dtype),
+                cv[..., :dv].astype(x.dtype), lengths,
                 scale=scale, impl=attn_impl)[:, None]          # (B,1,H,dv)
             if "s_vo" in params:
                 ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
             return y, new_cache
-        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+        k, v = ck[..., :dq].astype(x.dtype), cv[..., :dv].astype(x.dtype)
         if not per_slot and S > ATTN_CHUNK:
             # long cached prefill: chunked flash path
             ctx = _causal_attention_chunked(
@@ -331,8 +353,8 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
                 unroll=cfg.unroll_layers)
             if "s_vo" in params:
                 ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
             return y, new_cache
         T = k.shape[1]
         kv_pos = jnp.arange(T, dtype=jnp.int32)
@@ -349,8 +371,8 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
                                         impl=attn_impl)        # (B,S,H,dv)
             if "s_vo" in params:
                 ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
             return y, None
         if S > ATTN_CHUNK:
             # XLA flash: scan over q blocks so the (bq, S) logits slab is
@@ -363,8 +385,8 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
                                             unroll=cfg.unroll_layers)
             if "s_vo" in params:
                 ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
+            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
             return y, None
         T = S
         qpos = jnp.arange(S, dtype=jnp.int32)
@@ -383,8 +405,8 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
     ctx = jnp.einsum("bkgst,btkv->bskgv", probs, v).reshape(B, S, H, dv)
 
     if "s_vo" in params:
-        ctx = jnp.einsum("bshv,hvw->bshw", ctx, params["s_vo"].astype(ctx.dtype))
-    y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(x.dtype))
+        ctx = jnp.einsum("bshv,hvw->bshw", ctx, params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
+    y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
     return y, new_cache
 
 

@@ -50,8 +50,8 @@ def _ssm_chunk(h0, a, b, C):
     b: (B, c, dI, dS) input = dt*B_t*x_t;  C: (B, c, dS).
     Returns (h_end, y) with y: (B, c, dI).
     """
-    def comb(l, r):
-        al, bl = l
+    def comb(lhs, r):
+        al, bl = lhs
         ar, br = r
         return al * ar, bl * ar + br
 

@@ -12,7 +12,6 @@ Three entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -98,7 +97,7 @@ def _zero_aux():
 
 def _apply_layer(lp: Params, cfg: ArchConfig, mixer: str, mlp: str,
                  x: jnp.ndarray, *, positions, state: Optional[Params],
-                 cache_index, pages=None,
+                 cache_index, pages=None, draft_rank=None,
                  ) -> Tuple[jnp.ndarray, Optional[Params], Dict]:
     from repro.parallel.sharding import constrain, BATCH
     aux = _zero_aux()
@@ -115,7 +114,8 @@ def _apply_layer(lp: Params, cfg: ArchConfig, mixer: str, mlp: str,
         y, new_kv = L.attention(lp["attn"], cfg, h, positions=positions,
                                 kv_cache=kv, cache_index=cache_index,
                                 page_table=pages,
-                                attn_impl=cfg.kernel_impl)
+                                attn_impl=cfg.kernel_impl,
+                                draft_rank=draft_rank)
         if state is not None:
             new_state["kv"] = new_kv
     elif mixer == MIXER_MAMBA:
@@ -298,7 +298,8 @@ def init_decode_state_paged(cfg: ArchConfig, batch: int, n_pages: int,
     return {"blocks": blocks, "index": jnp.zeros((batch,), jnp.int32)}
 
 
-def _run_with_state(params, cfg, x, state, positions, pages=None):
+def _run_with_state(params, cfg, x, state, positions, pages=None,
+                    draft_rank=None):
     cache_index = state["index"]
 
     def block_fn(x, xs):
@@ -307,7 +308,8 @@ def _run_with_state(params, cfg, x, state, positions, pages=None):
         for j, (mixer, mlp) in enumerate(cfg.pattern):
             x, ns, _ = _apply_layer(block_params[j], cfg, mixer, mlp, x,
                                     positions=positions, state=block_state[j],
-                                    cache_index=cache_index, pages=pages)
+                                    cache_index=cache_index, pages=pages,
+                                    draft_rank=draft_rank)
             new_states.append(ns)
         return x, tuple(new_states)
 
@@ -383,15 +385,50 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     return _logits(params, cfg, x)[:, 0], new_state
 
 
+def verify_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                 state: Params, lengths: jnp.ndarray,
+                 pages: Optional[jnp.ndarray] = None,
+                 ) -> Tuple[jnp.ndarray, Params]:
+    """Multi-token VERIFY step for self-speculative decoding
+    (DESIGN.md §8): run a (B, W) window of already-proposed tokens
+    against the decode state — the same chunked-window attention path as
+    ``prefill_chunk`` — but return logits at EVERY window position
+    ``(B, W, V)``, so the caller can check each draft token against the
+    full model's next-token argmax and roll back the rejected tail.
+
+    tokens[b, 0] is slot b's pending (last sampled, not yet cached)
+    token and tokens[b, 1:] its draft proposals; lengths in {0, W} (0 =
+    idle slot riding along).  K/V for all W positions are written at
+    full rank at [index, index + W) — overwriting whatever the draft
+    pass left there — and ``index`` advances by ``lengths``; the caller
+    rolls ``index`` back to the accepted prefix (dense and paged: a pure
+    length decrement — stale K/V past the new index sits beyond every
+    causal horizon until overwritten, the cache invariant every padded
+    chunk write already relies on)."""
+    B, C = tokens.shape
+    idx = state["index"]                                   # (B,)
+    positions = idx[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    x = _embed(params, cfg, tokens, positions, None)
+    x, new_state = _run_with_state(params, cfg, x, state, positions,
+                                   pages=pages)
+    new_state["index"] = idx + lengths
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    return _logits(params, cfg, x), new_state
+
+
 def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
                 state: Params,
                 pages: Optional[jnp.ndarray] = None,
+                draft_rank: Optional[Tuple[int, int]] = None,
                 ) -> Tuple[jnp.ndarray, Params]:
     """token: (B,) int32.  Returns (logits (B, V), new_state).
 
     state["index"] may be a scalar (lockstep decode) or a (B,) vector
     (per-slot positions, continuous batching).  ``pages``: optional
-    (B, n_p) page table for paged KV caches."""
+    (B, n_p) page table for paged KV caches.  ``draft_rank``: run the
+    attention layers at the sliced (r_q, r_v) widths — the
+    self-speculative DRAFT pass over the shared full-rank cache
+    (DESIGN.md §8)."""
     B = token.shape[0]
     idx = state["index"]
     if jnp.ndim(idx) == 1:
@@ -400,7 +437,7 @@ def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
         positions = jnp.broadcast_to(idx[None, None], (B, 1)).astype(jnp.int32)
     x = _embed(params, cfg, token[:, None], positions, None)
     x, new_state = _run_with_state(params, cfg, x, state, positions,
-                                   pages=pages)
+                                   pages=pages, draft_rank=draft_rank)
     new_state["index"] = state["index"] + 1
     x = L.apply_norm(params["final_norm"], cfg, x)
     return _logits(params, cfg, x)[:, 0], new_state

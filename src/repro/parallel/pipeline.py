@@ -19,8 +19,7 @@ buffer rotates one hop forward.  Microbatch i enters at tick i on stage
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

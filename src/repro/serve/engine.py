@@ -96,6 +96,18 @@ class EngineConfig:
     # Size it below that to overcommit: admission then gates on free
     # pages and exhaustion preempts the youngest sequence.
     n_pages: int = 0
+    # -- self-speculative decoding (DESIGN.md §8) ---------------------
+    # 0 disables; k > 0: every pure-decode step, a rank-sliced DRAFT
+    # pass over the SAME weights proposes k tokens per slot and one
+    # (slots, k+1) verify step accepts a greedy prefix — up to k+1
+    # tokens per step instead of 1.  Greedy streams stay exactly
+    # token-identical to the non-speculative engine; requires an
+    # attention-only architecture (recurrent state cannot roll back).
+    spec_k: int = 0
+    # fraction of every head's CURRENT rank the draft slices off (the
+    # leading directions are kept — CLOVER's factors are sorted, so the
+    # draft's cache view is literally cache[..., :r]; no second cache)
+    draft_rank_ratio: float = 0.5
 
     @property
     def chunk(self) -> int:
@@ -104,16 +116,25 @@ class EngineConfig:
         return max(1, min(self.prefill_chunk, self.max_len))
 
     @property
+    def spec_window(self) -> int:
+        """Verify-step window width (pending token + k drafts)."""
+        return self.spec_k + 1
+
+    @property
     def capacity(self) -> int:
         """Per-slot KV capacity: max_len rounded up to a chunk multiple
-        PLUS one spare chunk, so every window write [index, index+C)
-        with index <= max_len stays in bounds — dense
-        dynamic_update_slice never clamps (a clamped write would shift
-        backwards over valid history) and paged position->page lookups
-        never fall off the table.  The spare tail is beyond every
+        PLUS spare room, so every window write [index, index+W) with
+        index <= max_len stays in bounds — dense dynamic_update_slice
+        never clamps (a clamped write would shift backwards over valid
+        history) and paged position->page lookups never fall off the
+        table.  W is the chunk size or, with speculation on, the
+        (k+1)-wide verify window whose rejected tail transiently
+        overhangs the committed length.  The spare tail is beyond every
         causal horizon, hence never readable."""
         C = self.chunk
-        return (self.max_len + C - 1) // C * C + C
+        spare = max(C, self.spec_window if self.spec_k > 0 else 1)
+        return ((self.max_len + C - 1) // C * C
+                + (spare + C - 1) // C * C)
 
 
 class PageAllocator:
@@ -234,7 +255,10 @@ class Scheduler:
                 assert L + remaining <= self.ecfg.max_len, \
                     "request exceeds KV capacity"
                 if self.alloc is not None:
-                    assert (self.alloc.pages_for(L + remaining)
+                    # speculative verify windows transiently overhang
+                    # the committed length by up to spec_k tokens
+                    slack = self.ecfg.spec_k
+                    assert (self.alloc.pages_for(L + remaining + slack)
                             <= self.alloc.n_pages), \
                         "request exceeds page pool"
                     if not self.alloc.ensure(s, L):
@@ -257,11 +281,13 @@ class Scheduler:
     def has_chunk_work(self) -> bool:
         return any(p == PREFILL for p in self.phase)
 
-    def planned_writes(self) -> np.ndarray:
+    def planned_writes(self, decode_width: int = 1) -> np.ndarray:
         """(slots,) KV positions the NEXT step will write per active
         slot — what must be page-covered before the step runs.  TAIL
         and PREFILL writes always land inside the prompt coverage
-        allocated at admission; only decode growth can demand pages."""
+        allocated at admission; only decode growth can demand pages.
+        ``decode_width`` > 1 is a speculative round: every decoding
+        slot writes a (k+1)-wide draft+verify window."""
         n, C = self.ecfg.slots, self.chunk
         take = np.zeros(n, np.int64)
         chunk_step = self.has_chunk_work()
@@ -275,7 +301,7 @@ class Scheduler:
                 elif self.phase[s] == DECODE and not self.recurrent:
                     take[s] = 1
             else:
-                take[s] = 1
+                take[s] = decode_width
         return take
 
     def plan_chunk(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -472,13 +498,23 @@ class Engine:
             # per-slot positions: (slots,) index vector so slots at
             # different depths coexist in one batch
             self.state["index"] = jnp.zeros((ecfg.slots,), jnp.int32)
-        self.sched = Scheduler(ecfg, _is_recurrent(cfg), self.alloc)
+        recurrent = _is_recurrent(cfg)
+        if ecfg.spec_k > 0 and recurrent:
+            raise ValueError(
+                "speculative decoding requires an attention-only "
+                "architecture: recurrent (mamba/rwkv) state cannot roll "
+                "back rejected draft tokens")
+        self.sched = Scheduler(ecfg, recurrent, self.alloc)
         # host mirror of state["index"] (tokens written per slot this
         # tenure) — drives page coverage without device round-trips
         self.written = np.zeros(ecfg.slots, np.int64)
         # serving stats
         self.max_active = 0
         self.peak_page_util = 0.0
+        # speculative-decoding stats: emitted-tokens-per-round histogram
+        # {n_emitted: rounds} — mean > 1.0 is the wall-clock win
+        self.spec_rounds = 0
+        self.accept_hist: Dict[int, int] = collections.defaultdict(int)
 
         def chunk_fn(params, tokens, lengths, fresh, pages, state):
             st = _reset_fresh(state, fresh)
@@ -494,18 +530,40 @@ class Engine:
 
         self._chunk = jax.jit(chunk_fn)
         self._decode = jax.jit(decode_fn)
+        self._draft = self._verify = None
+        if ecfg.spec_k > 0:
+            from repro.core.prune import draft_ranks
+            dr = draft_ranks(cfg, ecfg.draft_rank_ratio)
+            # full-width "draft" degenerates to the exact model — skip
+            # the slicing so XLA compiles the identical program
+            self.draft_rank = (None if dr == (cfg.qk_dim, cfg.vo_dim)
+                               else dr)
+
+            def draft_fn(params, tok, pages, state):
+                return T.decode_step(params, cfg, tok, state, pages=pages,
+                                     draft_rank=self.draft_rank)
+
+            def verify_fn(params, tokens, lengths, pages, state):
+                return T.verify_chunk(params, cfg, tokens, state, lengths,
+                                      pages=pages)
+
+            self._draft = jax.jit(draft_fn)
+            self._verify = jax.jit(verify_fn)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.sched.submit(req)
 
     def compiled_shapes(self) -> Optional[int]:
-        """Total jit cache entries across both step functions — the
-        engine's contract is that this never exceeds 2 (dense AND paged:
-        the page table is shape-static).  Returns None if the jit cache
-        isn't introspectable (private API drift)."""
-        sizes = [getattr(f, "_cache_size", None)
-                 for f in (self._chunk, self._decode)]
+        """Total jit cache entries across all step functions — the
+        engine's contract is that this never exceeds 2 without
+        speculation (dense AND paged: the page table is shape-static)
+        and 4 with it (one draft shape + one verify shape on top).
+        Returns None if the jit cache isn't introspectable (private API
+        drift)."""
+        fns = [f for f in (self._chunk, self._decode,
+                           self._draft, self._verify) if f is not None]
+        sizes = [getattr(f, "_cache_size", None) for f in fns]
         if any(s is None for s in sizes):
             return None
         return sum(s() for s in sizes)
@@ -526,13 +584,13 @@ class Engine:
             self.sched.last_token[s] = tok
 
     # -- paged page-coverage / preemption ------------------------------
-    def _ensure_pages(self):
+    def _ensure_pages(self, decode_width: int = 1):
         """Cover every active slot's upcoming writes with pages, oldest
         sequence first (the FIFO head has page priority).  On pool
         exhaustion, preempt-and-requeue the YOUNGEST active sequence
         (vLLM-style) and retry, instead of crashing mid-trace."""
         sched, alloc = self.sched, self.alloc
-        take = sched.planned_writes()
+        take = sched.planned_writes(decode_width)
         order = sorted((s for s in range(self.ecfg.slots)
                         if sched.slot_req[s] is not None),
                        key=lambda s: sched.slot_seq[s])
@@ -552,19 +610,106 @@ class Engine:
                 sched.preempt(victim)
                 take[victim] = 0
 
+    # -- speculative round (DESIGN.md §8) ------------------------------
+    def _spec_due(self) -> bool:
+        """A speculative round replaces the plain decode step when the
+        engine has a draft, no slot has prompt tokens left to chunk,
+        and every active request is greedy (the acceptance rule below
+        is exact only for argmax sampling)."""
+        sched = self.sched
+        if self._draft is None or sched.has_chunk_work():
+            return False
+        reqs = [r for r in sched.slot_req if r is not None]
+        return bool(reqs) and all(r.temperature <= 0 for r in reqs)
+
+    def _spec_round(self, pages) -> None:
+        """One speculative round over all active slots (all in DECODE):
+        the rank-sliced DRAFT pass proposes ``k`` tokens per slot
+        autoregressively, then ONE (slots, k+1) verify window scores
+        every position with the full model.  Each slot commits its
+        longest draft prefix matching the full model's argmaxes plus
+        the bonus token — between 1 and k+1 tokens, never diverging
+        from the non-speculative greedy stream — and the per-slot index
+        rolls back over the rejected tail (dense and paged alike this
+        is a pure length decrement: rejected K/V sits beyond every
+        causal horizon until overwritten, the invariant padded chunk
+        writes already rely on)."""
+        sched, ecfg = self.sched, self.ecfg
+        k, W = ecfg.spec_k, ecfg.spec_window
+        slots = ecfg.slots
+        active = np.array([r is not None for r in sched.slot_req])
+        n0 = self.written.copy()
+        # draft k tokens; the draft's K/V writes land in the shared
+        # cache but its state is DISCARDED — the verify step below
+        # rewrites all k+1 positions at full rank from the pre-draft
+        # state, so nothing the draft wrote is ever read by the model
+        tok = sched.last_token.copy()
+        drafts = np.zeros((slots, k), np.int32)
+        dstate = self.state
+        for j in range(k):
+            logits, dstate = self._draft(self.params, jnp.asarray(tok),
+                                         pages, dstate)
+            tok = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+            drafts[:, j] = tok
+        tokens = np.zeros((slots, W), np.int32)
+        tokens[:, 0] = sched.last_token        # pending, not yet cached
+        tokens[:, 1:] = drafts
+        lengths = np.where(active, W, 0).astype(np.int32)
+        logits, self.state = self._verify(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths), pages,
+            self.state)
+        targets = np.argmax(np.asarray(logits), axis=-1)       # (slots, W)
+        now = time.monotonic()
+        self.spec_rounds += 1
+        for s in range(slots):
+            if not active[s]:
+                continue
+            req = sched.slot_req[s]
+            a = 0
+            while a < k and drafts[s, a] == targets[s, a]:
+                a += 1
+            out = [int(t) for t in drafts[s, :a]] + [int(targets[s, a])]
+            # honor max_new_tokens / eos exactly as the one-token path
+            # would have: anything past the stop point is dropped (the
+            # slot retires this step, so the over-committed cache tail
+            # is unreachable)
+            out = out[:req.max_new_tokens - len(req.generated)]
+            if ecfg.eos_id >= 0 and ecfg.eos_id in out:
+                out = out[:out.index(ecfg.eos_id) + 1]
+            for t in out:
+                req.generated.append(t)
+                req.token_times.append(now)
+            self.accept_hist[len(out)] += 1
+            sched.last_token[s] = targets[s, a]
+            self.written[s] = n0[s] + a + 1
+        # roll back: commit per-slot lengths (idle slots advanced by 0)
+        self.state["index"] = jnp.asarray(self.written.astype(np.int32))
+
+    @property
+    def accepted_per_round(self) -> float:
+        """Mean tokens emitted per speculative slot-round (>= 1.0;
+        1.0 = nothing ever accepted, k+1 = every draft accepted)."""
+        n = sum(self.accept_hist.values())
+        return (sum(a * c for a, c in self.accept_hist.items()) / n
+                if n else 0.0)
+
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """Admit + one chunk or decode step over all slots.
-        Returns the number of active slots after the step."""
+        """Admit + one chunk, decode, or speculative step over all
+        slots.  Returns the number of active slots after the step."""
         sched = self.sched
         sched.admit()
+        spec = self._spec_due()
         pages = None
+        # newly admitted slots restart their tenure at position 0 (the
+        # device index is zeroed by _reset_fresh at plan time; the host
+        # mirror must follow — it drives page coverage AND the
+        # speculative rollback's index commit)
+        for s in range(self.ecfg.slots):
+            if sched.slot_req[s] is not None and sched.fresh[s]:
+                self.written[s] = 0
         if self.alloc is not None:
-            # newly admitted slots restart their tenure at position 0
-            for s in range(self.ecfg.slots):
-                if sched.slot_req[s] is not None and sched.fresh[s]:
-                    self.written[s] = 0
-            self._ensure_pages()
+            self._ensure_pages(self.ecfg.spec_window if spec else 1)
             pages = jnp.asarray(self.alloc.table_array())
             self.peak_page_util = max(self.peak_page_util,
                                       self.alloc.utilization())
@@ -577,6 +722,8 @@ class Engine:
                 jnp.asarray(fresh), pages, self.state)
             self.written += lengths        # device: index += lengths
             self._emit(sched.advance_chunk(lengths), np.asarray(logits))
+        elif spec and any(r is not None for r in sched.slot_req):
+            self._spec_round(pages)
         elif any(r is not None for r in sched.slot_req):
             tokens, fresh = sched.plan_decode()
             logits, self.state = self._decode(

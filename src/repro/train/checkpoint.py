@@ -23,7 +23,6 @@ import os
 import re
 import shutil
 import threading
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -53,7 +52,7 @@ class _RawView:
 def _tree_paths(tree) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(
         tree, is_leaf=lambda x: x is None)[0]
-    return [(jax.tree_util.keystr(p), l) for p, l in flat]
+    return [(jax.tree_util.keystr(p), leaf) for p, leaf in flat]
 
 
 class CheckpointManager:
@@ -153,7 +152,7 @@ class CheckpointManager:
         saved = {e["path"]: i for i, e in enumerate(manifest["leaves"])}
         leaves = []
         sh_flat = (None if shardings is None else
-                   [l for _, l in _tree_paths(shardings)])
+                   [leaf for _, leaf in _tree_paths(shardings)])
         for j, (p, leaf) in enumerate(flat_like):
             if leaf is None:
                 leaves.append(None)

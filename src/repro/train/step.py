@@ -15,9 +15,8 @@ params via ``peft.partition`` and differentiates the trainable half only.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -165,7 +164,6 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh: Mesh,
         bspec = {k: dspec if k in ("tokens", "labels")
                  else P(rules.mesh_axes(sh.BATCH, mesh), None, None)
                  for k in batch_shape}
-        mets = P()
         jitted = jax.jit(
             step,
             in_shardings=(sh.shardings(pspec, mesh),

@@ -1,5 +1,4 @@
 """PEFT: CLOVER-S training mechanics + LoRA/DoRA/PiSSA baselines."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,6 @@
 """Hypothesis property-based tests on the system's invariants."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,11 +12,13 @@ pytest.importorskip(
            "minimal installs skip them instead of failing collection")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.configs import get_config
 from repro.core import svd_lowrank_product, snap_rank
 from repro.core.decompose import svd_tall
 from repro.kernels import ops, ref
+from repro.models import init_lm_params
 from repro.optim import warmup_cosine
-from repro.serve import PageAllocator
+from repro.serve import Engine, EngineConfig, PageAllocator, Request
 
 SET = dict(max_examples=20, deadline=None)
 
@@ -117,6 +121,53 @@ def test_page_allocator_invariants(n_pages, page_tokens, slots, ops_seq):
         assert set(allocated).isdisjoint(a.free_list)
         assert len(allocated) + a.free_pages == a.n_pages   # exact accounting
         assert a.sentinel not in allocated
+
+
+@functools.lru_cache(maxsize=1)
+def _spec_model():
+    cfg = get_config("musicgen-large").reduced()
+    return init_lm_params(cfg, jax.random.PRNGKey(7)), cfg
+
+
+@given(seed=st.integers(0, 2**16),
+       n_prompts=st.integers(1, 3),
+       k=st.integers(1, 4),
+       draft_ratio=st.sampled_from([0.0, 0.5, 0.9]),
+       tight_pool=st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_speculative_engine_exact(seed, n_prompts, k, draft_ratio,
+                                  tight_pool):
+    """For ANY prompt mix, draft rank and k, the speculative paged
+    engine's greedy streams are token-identical to the non-speculative
+    dense engine — including across forced preemption+requeue when the
+    page pool is undersized (tight_pool)."""
+    params, cfg = _spec_model()
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(2, 10))).astype(np.int32)
+               for _ in range(n_prompts)]
+    max_new = 6
+    # n_pages=6 (24 tokens) forces preemption whenever two sequences
+    # decode concurrently; 0 = uncontended pool
+    ecfg_spec = EngineConfig(slots=2, max_len=16, prefill_chunk=4,
+                             paged=True, page_tokens=4,
+                             n_pages=6 if tight_pool else 0,
+                             spec_k=k, draft_rank_ratio=draft_ratio)
+    ecfg_base = EngineConfig(slots=2, max_len=16, prefill_chunk=4)
+
+    def streams(ecfg):
+        eng = Engine(params, cfg, ecfg)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        return eng, [r.generated for r in reqs]
+
+    _, base = streams(ecfg_base)
+    eng, spec = streams(ecfg_spec)
+    assert spec == base
+    if eng.spec_rounds:
+        assert eng.accepted_per_round >= 1.0
+        assert max(eng.accept_hist) <= k + 1
 
 
 @given(seed=st.integers(0, 999), T=st.integers(2, 40),

@@ -55,7 +55,6 @@ def test_param_specs_divisible(name):
 
 def test_rules_drop_nondivisible():
     rules = sh.ShardingRules()
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

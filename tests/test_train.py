@@ -11,7 +11,7 @@ from repro.data import SyntheticConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_lm_params
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
-                         warmup_cosine, warmup_linear, global_norm)
+                         warmup_cosine, warmup_linear)
 from repro.train.checkpoint import CheckpointManager
 from repro.train.step import TrainConfig, make_train_step, make_opt_state
 from repro.train.supervisor import Supervisor, WorkerFailure, StragglerStats
