@@ -1,12 +1,17 @@
 """CI perf-regression gate: diff the current run's ``BENCH_*.json``
 against the checked-in baselines in ``benchmarks/baselines/``.
 
-Throughput metrics (``tokens_per_s``) regress when they DROP by more
-than the threshold; latency metrics (``itl_p95_ms``) regress when they
-RISE by more than it.  Every gated metric present in a baseline must
-exist in the current run — a silently vanished metric cannot pass the
-gate.  Improvements and sub-threshold noise are reported but never
-fail.
+Throughput/efficiency metrics (``tokens_per_s``, ``tokens_per_step``)
+regress when they DROP by more than the threshold; latency metrics
+(``itl_p95_ms``) regress when they RISE by more than it.  Key drift
+fails in BOTH directions: every gated
+metric present in a baseline must exist in the current run (a renamed
+or crashed scenario cannot silently pass), and every gated metric the
+current run produces must have a baseline (a new scenario is ungated
+until its baseline is adopted with ``--update`` — that adoption must be
+explicit, not an accident of the diff).  The same holds at file level:
+a ``BENCH_*.json`` present on only one side fails.  Improvements and
+sub-threshold noise are reported but never fail.
 
 Usage::
 
@@ -33,9 +38,16 @@ from typing import Dict, Iterator, Tuple
 BASELINE_DIR = Path(__file__).parent / "baselines"
 
 # metric-name suffix -> direction ("higher" is better / "lower" is
-# better); every (path, value) whose last key matches is gated
+# better); every (path, value) whose last key matches is gated.
+# serve_bench gates on the DETERMINISTIC tokens_per_step (emitted
+# tokens per engine step — scheduling/speculation/prefix efficiency);
+# its wall-clock numbers are published under ungated *_wall keys
+# because shared-runner CPU steal swings them beyond any usable
+# threshold.  tokens_per_s / itl_p95_ms stay gated for any bench that
+# emits them from noise-robust measurements.
 GATED = {
     "tokens_per_s": "higher",
+    "tokens_per_step": "higher",
     "itl_p95_ms": "lower",
 }
 
@@ -88,6 +100,14 @@ def compare_file(baseline_path: Path, current_path: Path,
             regressions.append(
                 f"{current_path.name}:{path}: {b:g} -> {c:g} "
                 f"({delta:+.1%}, threshold ±{threshold:.0%})")
+    for path in sorted(set(cur) - set(base)):
+        # reverse drift: a gated metric with no baseline would run
+        # ungated forever — force an explicit `--update` adoption
+        regressions.append(f"{current_path.name}:{path}: metric missing "
+                           "from baseline (new/renamed scenario — adopt "
+                           "with --update)")
+        lines.append(f"  NEW     {path} (current {cur[path][1]:g}, "
+                     "no baseline)")
     return regressions, lines
 
 
@@ -132,6 +152,12 @@ def main(argv=None) -> int:
         regs, lines = compare_file(base, cur, args.threshold)
         print("\n".join(lines) if lines else "  (no gated metrics)")
         all_regressions.extend(regs)
+    known = {b.name for b in baselines}
+    for cur in currents:
+        if cur.name not in known:
+            print(f"\n== {cur.name}: no baseline (new bench module — "
+                  "adopt with --update)")
+            all_regressions.append(f"{cur.name}: missing baseline file")
     if all_regressions:
         print(f"\nPERF REGRESSIONS ({len(all_regressions)}):")
         for r in all_regressions:

@@ -1,7 +1,8 @@
 """Serving throughput/latency under chunked-prefill continuous batching,
-dense AND paged KV caches, with and without self-speculative decoding.
+dense AND paged KV caches, self-speculative decoding, and copy-on-write
+prefix caching.
 
-Three scenarios connect the paper's rank pruning to the serving path:
+Four scenarios connect the paper's rank pruning to the serving path:
 
 1. **Mixed trace** — a Poisson arrival trace of mixed-length prompts is
    played against the dense and the paged engine at several CLOVER
@@ -26,16 +27,41 @@ Three scenarios connect the paper's rank pruning to the serving path:
    mean must exceed 1.0 (drafts actually get accepted) for the pruned
    model at k=4, or speculation is pure overhead.
 
+4. **Shared-system-prompt warm replay** (prefix cache, DESIGN.md §9) —
+   a seed request prefills a long system prompt; a burst of requests
+   sharing it then replays against (a) a cold paged engine and (b) the
+   prefix-cached engine at the SAME page budget, at prune {0.0, 0.5} x
+   spec_k {0, 4}.  The warm engine maps the cached pages read-only,
+   skips their prefill chunks (TTFT collapses) and COWs any write into
+   a shared page — redundant prefill compute is eliminated and shared
+   pages count once against the pool, so more sequences fit.
+
 What must hold on CPU (timings vary, orderings don't):
   * both engines compile exactly TWO step shapes each over the whole
     mixed-length trace (the two-shape contract survives paging), plus
-    at most one draft + one verify shape when speculation is on;
+    at most one draft + one verify shape when speculation is on (and
+    one page-copy shape once a COW fires);
   * greedy streams match their isolated full-prefill references, paged
-    matches dense exactly (preemptions included), and every
-    speculative stream is token-identical to its non-speculative
-    counterpart in BOTH layouts;
+    matches dense exactly (preemptions included), every speculative
+    stream is token-identical to its non-speculative counterpart in
+    BOTH layouts, and every prefix-cached warm stream is token-
+    identical to the cold paged engine's;
   * the paged engine's max concurrency strictly exceeds the dense
-    engine's at equal HBM budget, and grows again at prune 0.5.
+    engine's at equal HBM budget, and grows again at prune 0.5;
+  * prefix-hit TTFT < 0.5x the cold engine's, and burst concurrency at
+    the fixed pool budget strictly exceeds the no-sharing engine's.
+
+Timing methodology: wall-clock metrics (``*_wall``, ``ttft_*``) are
+INFORMATIONAL — on shared CPU runners co-tenant steal swings them 2-3x
+run-to-run, beyond any sane gate threshold (best-of-``TRACE_REPEATS``
+replays tame short bursts but not sustained slowdowns).  What the
+perf-regression gate consumes is the DETERMINISTIC ``tokens_per_step``
+(emitted tokens per engine step): a pure function of the
+scheduling/speculation/prefix-cache behavior that moves exactly when
+this engine regresses (worse chunking, lower draft acceptance,
+preemption churn, lost prefix hits) and never with machine noise.
+Cross-engine latency claims (warm-vs-cold TTFT) gate on same-run
+RATIOS, which cancel machine speed.
 
 ``PYTHONPATH=src python -m benchmarks.serve_bench``  (or benchmarks.run;
 the driver also writes the machine-readable BENCH_serve.json)
@@ -46,6 +72,7 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -65,6 +92,14 @@ DRAFT_RATIO = 0.5              # draft slices half of every CURRENT rank
 # (= a dense 2-slot x max_len allocation at prune 0.0)
 PRESSURE_BUDGET_TOKENS = 2 * MAX_LEN
 PRESSURE_REQUESTS = 10
+# prefix-cache scenario: a 40-token system prompt (5 full pages) shared
+# by a burst of requests with short unique tails, at a pool budget that
+# cannot hold every sequence without sharing (28 pages; each no-share
+# sequence needs 6 at admission, a sharing one only 1 private)
+PREFIX_SYS_TOKENS = 5 * PAGE_TOKENS
+PREFIX_BURST = 6
+PREFIX_POOL_PAGES = 28
+PREFIX_SPEC_KS = (0, 4)
 
 
 def _poisson_trace(rng: np.random.Generator, n: int, vocab: int,
@@ -81,41 +116,125 @@ def _poisson_trace(rng: np.random.Generator, n: int, vocab: int,
     return out
 
 
+# timed traces replay this many times (same engine, warm jit cache):
+# wall-clock metrics come from the fastest repeat.  Wall numbers are
+# INFORMATIONAL ONLY (``*_wall`` keys) — observed swinging 2-3x under
+# co-tenant CPU steal on shared 2-vCPU runners, beyond any sane gate
+# threshold even best-of-N / calibration-normalized.  What the
+# perf-regression gate (compare.py) consumes instead is the
+# DETERMINISTIC ``tokens_per_step``: emitted tokens per engine step,
+# a pure function of scheduling/speculation/prefix-skip behavior that
+# catches exactly the regressions this engine can cause (worse
+# chunking, lower draft acceptance, preemption churn, lost prefix
+# hits) with zero timing noise.
+TRACE_REPEATS = 3
+
+
 def _serve_trace(params, cfg, trace, ecfg: EngineConfig):
     eng = Engine(params, cfg, ecfg)
-    reqs = [Request(uid=i, prompt=p, max_new_tokens=MAX_NEW)
-            for i, (_, p) in enumerate(trace)]
     # warm all compiled shapes so steady-state timing isn't compile time
     eng.run([Request(uid=-1, prompt=trace[0][1][:3], max_new_tokens=2)])
     eng.spec_rounds = 0
     eng.accept_hist.clear()
-    t0 = time.monotonic()
-    due = {i: s for i, (s, _) in enumerate(trace)}
-    step = 0
-    while True:
-        for i, s in list(due.items()):
-            if s <= step:
-                eng.submit(reqs[i])
-                del due[i]
-        if not due and not eng.sched.busy:
-            break
-        eng.step()
-        step += 1
-    wall = time.monotonic() - t0
+    best = None
+    for _ in range(TRACE_REPEATS):
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=MAX_NEW)
+                for i, (_, p) in enumerate(trace)]
+        preempt0 = eng.sched.preemptions
+        t0 = time.monotonic()
+        due = {i: s for i, (s, _) in enumerate(trace)}
+        step = 0
+        while True:
+            for i, s in list(due.items()):
+                if s <= step:
+                    eng.submit(reqs[i])
+                    del due[i]
+            if not due and not eng.sched.busy:
+                break
+            eng.step()
+            step += 1
+        wall = time.monotonic() - t0
 
-    n_tok = sum(len(r.generated) for r in reqs)
-    itl = np.concatenate([np.diff(r.token_times) for r in reqs
-                          if len(r.token_times) > 1])
-    ttft = np.array([r.token_times[0] - r.t_submit for r in reqs])
-    return eng, reqs, {
-        "tokens_per_s": round(n_tok / wall, 2),
-        "itl_p50_ms": round(float(np.percentile(itl, 50) * 1e3), 2),
-        "itl_p95_ms": round(float(np.percentile(itl, 95) * 1e3), 2),
-        "ttft_p95_ms": round(float(np.percentile(ttft, 95) * 1e3), 2),
-        "max_concurrent": eng.max_active,
-        "preemptions": eng.sched.preemptions,
-        "page_util_peak": round(eng.peak_page_util, 3),
-    }
+        n_tok = sum(len(r.generated) for r in reqs)
+        itl = np.concatenate([np.diff(r.token_times) for r in reqs
+                              if len(r.token_times) > 1])
+        ttft = np.array([r.token_times[0] - r.t_submit for r in reqs])
+        m = {
+            "tokens_per_step": round(n_tok / max(1, step), 4),  # GATED
+            "tokens_per_s_wall": round(n_tok / wall, 2),
+            "itl_p50_ms_wall": round(
+                float(np.percentile(itl, 50) * 1e3), 2),
+            "itl_p95_ms_wall": round(
+                float(np.percentile(itl, 95) * 1e3), 2),
+            "ttft_p95_ms_wall": round(
+                float(np.percentile(ttft, 95) * 1e3), 2),
+            "max_concurrent": eng.max_active,
+            "preemptions": eng.sched.preemptions - preempt0,
+            "page_util_peak": round(eng.peak_page_util, 3),
+        }
+        if best is None or m["tokens_per_s_wall"] > best[1][
+                "tokens_per_s_wall"]:
+            best = (reqs, m)
+    return eng, best[0], best[1]
+
+
+def _prefix_replay(params, cfg, ecfg: EngineConfig, sys_prompt, tails):
+    """Scenario-4 trace: one seed request prefills the system prompt
+    (and, on the prefix engine, publishes it), then a BURST of requests
+    sharing it arrives at once.  Returns (engine, burst requests,
+    metrics); ``max_active`` counts the burst only."""
+    eng = Engine(params, cfg, ecfg)
+    # warm all compiled shapes so steady-state timing isn't compile time
+    eng.run([Request(uid=-1, prompt=sys_prompt[:3], max_new_tokens=2)])
+    seed = Request(uid=0, prompt=sys_prompt, max_new_tokens=MAX_NEW)
+    eng.run([seed])
+    best = None
+    min_rep_hits = None
+    for _ in range(TRACE_REPEATS):     # best-of-N, like _serve_trace
+        eng.max_active = 0
+        hits0 = (eng.sched.prefix_hits
+                 if eng.prefix is not None else 0)
+        hit_tok0 = (eng.sched.prefix_hit_tokens
+                    if eng.prefix is not None else 0)
+        preempt0 = eng.sched.preemptions
+        reqs = [Request(
+            uid=1 + i,
+            prompt=np.concatenate([sys_prompt, t]).astype(np.int32),
+            max_new_tokens=MAX_NEW) for i, t in enumerate(tails)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.monotonic()
+        step = 0
+        while eng.sched.busy:
+            eng.step()
+            step += 1
+        wall = time.monotonic() - t0
+        n_tok = sum(len(r.generated) for r in reqs)
+        ttft = np.array([r.token_times[0] - r.t_submit for r in reqs])
+        rep_hits = (eng.sched.prefix_hits - hits0
+                    if eng.prefix is not None else 0)
+        min_rep_hits = (rep_hits if min_rep_hits is None
+                        else min(min_rep_hits, rep_hits))
+        m = {
+            # GATED: a lost prefix hit = whole extra chunk steps, a
+            # deterministic drop in tokens/step
+            "tokens_per_step": round(n_tok / max(1, step), 4),
+            "tokens_per_s_wall": round(n_tok / wall, 2),
+            # the TTFT gate is warm-vs-cold WITHIN one run (a ratio)
+            "ttft_mean_ms": round(float(ttft.mean() * 1e3), 2),
+            "max_concurrent": eng.max_active,
+            "hit_tokens": (eng.sched.prefix_hit_tokens - hit_tok0
+                           if eng.prefix is not None else 0),
+            "preemptions": eng.sched.preemptions - preempt0,
+        }
+        if best is None or m["tokens_per_s_wall"] > best[1][
+                "tokens_per_s_wall"]:
+            best = (reqs, m)
+    # the WEAKEST replay must still have every burst request hitting
+    # (cumulative counters would let one cold replay hide behind the
+    # others' hits)
+    best[1]["hits_min_per_replay"] = min_rep_hits
+    return eng, best[0], best[1]
 
 
 def _kv_tokens_per_unpruned_token(cfg0, cfg) -> float:
@@ -182,8 +301,8 @@ def run(verbose: bool = True):
         # k=0 is the non-speculative dense/paged run above; every k > 0
         # must reproduce those streams token-for-token while emitting
         # accepted-tokens-per-step > 1 where drafts are good
-        spec = {"k0": {"dense_tokens_per_s": m_d["tokens_per_s"],
-                       "paged_tokens_per_s": m_p["tokens_per_s"]}}
+        spec = {"k0": {"dense_tokens_per_step": m_d["tokens_per_step"],
+                       "paged_tokens_per_step": m_p["tokens_per_step"]}}
         for kk in [k for k in SPEC_KS if k > 0]:
             eng_sd, reqs_sd, m_sd = _serve_trace(
                 params, cfg, trace,
@@ -194,8 +313,10 @@ def run(verbose: bool = True):
                 dataclasses.replace(paged_cfg, spec_k=kk,
                                     draft_rank_ratio=DRAFT_RATIO))
             spec[f"k{kk}"] = {
-                "dense_tokens_per_s": m_sd["tokens_per_s"],
-                "paged_tokens_per_s": m_sp["tokens_per_s"],
+                "dense_tokens_per_step": m_sd["tokens_per_step"],
+                "paged_tokens_per_step": m_sp["tokens_per_step"],
+                "dense_tokens_per_s_wall": m_sd["tokens_per_s_wall"],
+                "paged_tokens_per_s_wall": m_sp["tokens_per_s_wall"],
                 "accepted_per_round": round(eng_sd.accepted_per_round, 3),
                 "accept_hist": {str(a): c for a, c in
                                 sorted(eng_sd.accept_hist.items())},
@@ -248,6 +369,42 @@ def run(verbose: bool = True):
             m_pp["max_concurrent"] > m_pd["max_concurrent"])
         checks[f"pressure_{tag}_paged_matches_dense"] = all(
             p.generated == d.generated for p, d in zip(reqs_pp, reqs_pd))
+
+        # -- shared-system-prompt warm replay (DESIGN.md §9) -----------
+        # same page budget, same trace: prefix caching must (a) keep
+        # every stream token-identical to the cold engine, (b) collapse
+        # prefix-hit TTFT below half the cold TTFT, and (c) fit
+        # strictly more concurrent sequences (shared pages count once)
+        sys_prompt = ((np.arange(PREFIX_SYS_TOKENS, dtype=np.int32) * 3
+                       + 1) % cfg0.vocab_size).astype(np.int32)
+        tails = [np.arange(3 + (i % 3), dtype=np.int32) + 11 * (i + 1)
+                 for i in range(PREFIX_BURST)]
+        prefix = {}
+        for kk in PREFIX_SPEC_KS:
+            cold_cfg = EngineConfig(
+                slots=PREFIX_BURST, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                paged=True, page_tokens=PAGE_TOKENS,
+                n_pages=PREFIX_POOL_PAGES, spec_k=kk,
+                draft_rank_ratio=DRAFT_RATIO)
+            warm_cfg = dataclasses.replace(cold_cfg, prefix_cache=True)
+            eng_c, reqs_c, m_c = _prefix_replay(params, cfg, cold_cfg,
+                                                sys_prompt, tails)
+            eng_w, reqs_w, m_w = _prefix_replay(params, cfg, warm_cfg,
+                                                sys_prompt, tails)
+            prefix[f"k{kk}"] = {"cold": m_c, "warm": m_w}
+            for mode, m in (("cold", m_c), ("warm", m_w)):
+                for kname, val in m.items():
+                    rows.append((f"prefix_{tag}_k{kk}_{mode}", kname, val))
+            checks[f"prefix_{tag}_k{kk}_warm_matches_cold"] = all(
+                w.generated == c.generated
+                for w, c in zip(reqs_w, reqs_c))
+            checks[f"prefix_{tag}_k{kk}_every_burst_request_hit"] = (
+                m_w["hits_min_per_replay"] >= PREFIX_BURST)
+            checks[f"prefix_{tag}_k{kk}_ttft_under_half_cold"] = (
+                m_w["ttft_mean_ms"] < 0.5 * m_c["ttft_mean_ms"])
+            checks[f"prefix_{tag}_k{kk}_concurrency_strictly_higher"] = (
+                m_w["max_concurrent"] > m_c["max_concurrent"])
+        metrics[f"prefix_{tag}"] = prefix
 
     # the tentpole composition: prune 0.5 admits more concurrent
     # sequences than 0.0 at the same pool byte budget

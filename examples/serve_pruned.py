@@ -12,7 +12,10 @@ preemption on exhaustion) and must produce identical streams — and,
 with ``--spec-k`` > 0, replayed once more with SELF-SPECULATIVE
 decoding (a rank-sliced draft of the same weights proposes tokens, one
 multi-token verify step commits a greedy prefix; DESIGN.md §8), again
-token-identical.
+token-identical.  Finally a shared-system-prompt batch runs twice on a
+PREFIX-CACHED paged engine (DESIGN.md §9): the warm replay maps the
+cached prompt pages read-only, skips their prefill chunks and still
+matches the cold streams exactly.
 
 Run:  PYTHONPATH=src python examples/serve_pruned.py
       PYTHONPATH=src python examples/serve_pruned.py --spec-k 4
@@ -100,6 +103,31 @@ def main():
               f"{es.accepted_per_round:.2f} accepted tokens/step "
               f"(hist {dict(sorted(es.accept_hist.items()))}, "
               f"{es.compiled_shapes()} compiled step shapes)")
+
+    # prefix caching: a batch sharing one system prompt, served twice
+    # on the same engine — the warm pass hits the trie, skips the
+    # shared prefill chunks, and must match the cold pass exactly
+    epc = Engine(pparams, pcfg,
+                 EngineConfig(slots=4, max_len=96, prefill_chunk=8,
+                              paged=True, page_tokens=8,
+                              prefix_cache=True))
+    sys_prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    shared = [np.concatenate(
+        [sys_prompt, rng.integers(0, cfg.vocab_size, 4).astype(np.int32)])
+        for _ in range(6)]
+    cold = [Request(uid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(shared)]
+    epc.run(cold)
+    warm = [Request(uid=10 + i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(shared)]
+    epc.run(warm)
+    match = all(a.generated == b.generated for a, b in zip(cold, warm))
+    hit = sum(r.cached_tokens for r in warm)
+    print(f"prefix-cache warm replay: match={match}, "
+          f"{hit} prompt tokens served from shared pages "
+          f"({epc.sched.prefix_hits} hits, "
+          f"{len(epc.prefix)} trie nodes, "
+          f"{epc.compiled_shapes()} compiled step shapes)")
 
 
 if __name__ == "__main__":

@@ -101,6 +101,23 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
                          scale=scale, interpret=(impl == "interpret"))
 
 
+@functools.partial(jax.jit, static_argnames=("impl",))
+def page_copy(pool, src, dst, *, impl: str = "ref") -> jnp.ndarray:
+    """Batched KV-page clone — the device half of copy-on-write prefix
+    caching (serve.engine, DESIGN.md §9).
+
+    pool (n_blocks, N, page_tokens, KV, r), src/dst (m,) int32 pool-row
+    ids -> pool with row ``dst[i]`` a copy of row ``src[i]``, all other
+    rows untouched.  Pure DMA, no compute: the Pallas kernel is a
+    scalar-prefetched row-to-row block move with the pool aliased
+    through (in-place on TPU).
+    """
+    if impl == "ref":
+        return _ref.page_copy_ref(pool, src, dst)
+    from repro.kernels.page_copy import page_copy as _page_copy
+    return _page_copy(pool, src, dst, interpret=(impl == "interpret"))
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "tile", "impl"))
 def mamba_scan(dt, A, Bmat, C, x, h0=None, *, chunk: int = 128,
                tile: int = 512,

@@ -1,0 +1,81 @@
+"""Batched KV-page clone: the device half of copy-on-write prefix
+caching (DESIGN.md §9, serve.engine).
+
+When a sequence must write into a page that other sequences (or the
+prefix trie) still read, the host repoints its page-table entry to a
+fresh page and the CONTENT of the shared page has to move ``src ->
+dst`` across every layer's pool before the step's scatter-write runs.
+That copy is pure DMA — no compute — so the kernel is a grid of
+row-to-row block moves driven by scalar-prefetched ``src``/``dst`` id
+vectors, exactly the indirection idiom of
+``paged_decode_attention.py``: the BlockSpec index maps dereference the
+id vectors BEFORE the body runs, so the pipeline streams each (pt, KV,
+r) slab from pool row ``src[i]`` straight into row ``dst[i]`` without a
+device-wide gather/scatter.
+
+The pool is aliased input->output (in-place on TPU): grid steps only
+touch their (src, dst) rows, every other row keeps its bytes.  Pairs
+execute in grid order, which the caller relies on when a page freed
+after serving as a ``src`` is immediately reallocated as a later
+``dst`` (the reverse — a fresh dst becoming a later src — cannot occur
+in one batch; see ``Engine._copy_pages``).  Padding a short batch with
+sentinel->sentinel self-copies is legal: a row copied onto itself is a
+no-op.
+
+Pool rows are (page_tokens, KV, r) slabs; on real TPUs keep
+``page_tokens`` a multiple of the dtype sublane tile (8 for f32, 16
+for bf16) — the same layout rule the paged decode kernel already
+imposes.  Tests run interpret mode where any size is legal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+
+def _page_copy_kernel(src_ref, dst_ref, in_ref, out_ref):
+    del src_ref, dst_ref          # consumed by the BlockSpec index maps
+    out_ref[...] = in_ref[...]
+
+
+def page_copy(pool: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray, *,
+              interpret: bool = False) -> jnp.ndarray:
+    """pool: (n_blocks, N, page_tokens, KV, r) — one layer-stacked KV
+    pool leaf;  src, dst: (m,) int32 pool-row ids (pairs disjoint
+    except sentinel self-copy padding).  Returns the pool with row
+    ``dst[i]`` holding a copy of row ``src[i]`` for every i, all other
+    rows untouched.  -> same shape/dtype as ``pool``.
+    """
+    n_blocks, N, pt, KV, r = pool.shape
+    m = src.shape[0]
+
+    def _src_block(i, b, src, dst):
+        return (b, src[i], 0, 0, 0)
+
+    def _dst_block(i, b, src, dst):
+        return (b, dst[i], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        # pairs are the OUTER (sequential) axis so pair i+1 reads pair
+        # i's writes if the host ever chains them; blocks inner
+        grid=(m, n_blocks),
+        in_specs=[pl.BlockSpec((1, 1, pt, KV, r), _src_block)],
+        out_specs=pl.BlockSpec((1, 1, pt, KV, r), _dst_block),
+    )
+    return pl.pallas_call(
+        _page_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        # alias the pool through: untouched rows keep their bytes and
+        # the copy is in-place on TPU (index 2 = pool, after the two
+        # scalar-prefetch operands)
+        input_output_aliases={2: 0},
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(src.astype(jnp.int32), dst.astype(jnp.int32), pool)

@@ -110,6 +110,23 @@ def paged_decode_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
     return decode_attention_ref(q, k, v, lengths, scale=scale)
 
 
+def page_copy_ref(pool: jnp.ndarray, src: jnp.ndarray,
+                  dst: jnp.ndarray) -> jnp.ndarray:
+    """Batched KV-page clone oracle (copy-on-write prefix caching —
+    serve.engine).  Rows ``dst[i]`` become copies of rows ``src[i]``;
+    every other row is untouched.
+
+    pool: (n_blocks, N, page_tokens, KV, r);  src, dst: (m,) int32.
+    Pairs are disjoint except sentinel self-copies (dst may repeat the
+    sentinel row as padding), and all reads see the INPUT pool — a page
+    can be a src of one pair and the dst of a LATER pair only after the
+    src content was already cloned (see ``Engine._copy_pages``), so
+    gather-then-scatter semantics agree with the kernel's in-order
+    row-to-row moves.  -> pool shape.
+    """
+    return pool.at[:, dst].set(pool[:, src])
+
+
 def mamba_scan_ref(dt: jnp.ndarray, A: jnp.ndarray, Bmat: jnp.ndarray,
                    C: jnp.ndarray, x: jnp.ndarray,
                    h0: Optional[jnp.ndarray] = None,

@@ -202,6 +202,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
               kv_cache: Optional[Params] = None,
               cache_index: Optional[jnp.ndarray] = None,
               page_table: Optional[jnp.ndarray] = None,
+              write_floor: Optional[jnp.ndarray] = None,
               attn_impl: str = "xla",
               draft_rank: Optional[Tuple[int, int]] = None,
               ) -> Tuple[jnp.ndarray, Optional[Params]]:
@@ -218,7 +219,12 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
     ``pool[page_table[b, p // page_tokens], p % page_tokens]``.  The
     table must cover positions [0, cache_index + S) per slot — entries
     may be a sentinel id addressing the pool's spare garbage row, where
-    padding/idle-slot writes land harmlessly (DESIGN.md §6).
+    padding/idle-slot writes land harmlessly (DESIGN.md §6).  With
+    prefix caching a slot's table may map pages SHARED with other
+    sequences read-only (DESIGN.md §9); ``write_floor`` (B,) marks each
+    slot's first writable position, and scatter-writes below it are
+    rerouted to the garbage row — defense in depth under the engine's
+    copy-on-write contract (reads go through the table unchanged).
 
     Self-speculative draft: ``draft_rank = (r_q, r_v)`` runs the SAME
     weights with every head's rank sliced to the leading draft widths
@@ -277,6 +283,11 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
         P = page_table.shape[1]
         pos = cache_index[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
         page = jnp.take_along_axis(page_table, pos // PT, axis=1)   # (B, S)
+        if write_floor is not None:
+            # read-only prefix (prefix-cached shared pages): reroute
+            # any sub-floor write to the garbage row N-1.  The engine's
+            # COW path means this never fires for valid traffic.
+            page = jnp.where(pos >= write_floor[:, None], page, N - 1)
         dest = (page * PT + pos % PT).reshape(-1)                   # (B*S,)
         ck = (kv_cache["k"].reshape(N * PT, KV, dq_c)
               .at[dest].set(_pad_rank(k, dq_c).reshape(B * S, KV, dq_c)

@@ -97,7 +97,8 @@ def _zero_aux():
 
 def _apply_layer(lp: Params, cfg: ArchConfig, mixer: str, mlp: str,
                  x: jnp.ndarray, *, positions, state: Optional[Params],
-                 cache_index, pages=None, draft_rank=None,
+                 cache_index, pages=None, write_floor=None,
+                 draft_rank=None,
                  ) -> Tuple[jnp.ndarray, Optional[Params], Dict]:
     from repro.parallel.sharding import constrain, BATCH
     aux = _zero_aux()
@@ -113,7 +114,7 @@ def _apply_layer(lp: Params, cfg: ArchConfig, mixer: str, mlp: str,
         kv = state["kv"] if state is not None else None
         y, new_kv = L.attention(lp["attn"], cfg, h, positions=positions,
                                 kv_cache=kv, cache_index=cache_index,
-                                page_table=pages,
+                                page_table=pages, write_floor=write_floor,
                                 attn_impl=cfg.kernel_impl,
                                 draft_rank=draft_rank)
         if state is not None:
@@ -299,7 +300,7 @@ def init_decode_state_paged(cfg: ArchConfig, batch: int, n_pages: int,
 
 
 def _run_with_state(params, cfg, x, state, positions, pages=None,
-                    draft_rank=None):
+                    write_floor=None, draft_rank=None):
     cache_index = state["index"]
 
     def block_fn(x, xs):
@@ -309,6 +310,7 @@ def _run_with_state(params, cfg, x, state, positions, pages=None,
             x, ns, _ = _apply_layer(block_params[j], cfg, mixer, mlp, x,
                                     positions=positions, state=block_state[j],
                                     cache_index=cache_index, pages=pages,
+                                    write_floor=write_floor,
                                     draft_rank=draft_rank)
             new_states.append(ns)
         return x, tuple(new_states)
@@ -349,6 +351,7 @@ def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
 def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
                   state: Params, lengths: jnp.ndarray,
                   pages: Optional[jnp.ndarray] = None,
+                  write_floor: Optional[jnp.ndarray] = None,
                   ) -> Tuple[jnp.ndarray, Params]:
     """Write one fixed-size prompt chunk per slot into the decode state.
 
@@ -370,14 +373,17 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     (see serve.engine's scheduler) and merge inactive slots' states back.
     ``pages``: optional (B, n_p) page table for paged KV caches — the
     window then writes through the page indirection (see
-    ``init_decode_state_paged``).
+    ``init_decode_state_paged``).  ``write_floor``: optional (B,) first
+    WRITABLE position per slot — scatter-writes below it (a
+    prefix-cached read-only region, serve.engine) are rerouted to the
+    pool's garbage row; reads are unaffected.
     """
     B, C = tokens.shape
     idx = state["index"]                                   # (B,)
     positions = idx[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     x = _embed(params, cfg, tokens, positions, None)
     x, new_state = _run_with_state(params, cfg, x, state, positions,
-                                   pages=pages)
+                                   pages=pages, write_floor=write_floor)
     new_state["index"] = idx + lengths
     last = jnp.clip(lengths - 1, 0, C - 1)
     x = jnp.take_along_axis(x, last[:, None, None], axis=1)
@@ -388,6 +394,7 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
 def verify_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
                  state: Params, lengths: jnp.ndarray,
                  pages: Optional[jnp.ndarray] = None,
+                 write_floor: Optional[jnp.ndarray] = None,
                  ) -> Tuple[jnp.ndarray, Params]:
     """Multi-token VERIFY step for self-speculative decoding
     (DESIGN.md §8): run a (B, W) window of already-proposed tokens
@@ -404,13 +411,14 @@ def verify_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     rolls ``index`` back to the accepted prefix (dense and paged: a pure
     length decrement — stale K/V past the new index sits beyond every
     causal horizon until overwritten, the cache invariant every padded
-    chunk write already relies on)."""
+    chunk write already relies on).  ``write_floor`` as in
+    ``prefill_chunk``."""
     B, C = tokens.shape
     idx = state["index"]                                   # (B,)
     positions = idx[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     x = _embed(params, cfg, tokens, positions, None)
     x, new_state = _run_with_state(params, cfg, x, state, positions,
-                                   pages=pages)
+                                   pages=pages, write_floor=write_floor)
     new_state["index"] = idx + lengths
     x = L.apply_norm(params["final_norm"], cfg, x)
     return _logits(params, cfg, x), new_state
@@ -419,16 +427,17 @@ def verify_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
 def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
                 state: Params,
                 pages: Optional[jnp.ndarray] = None,
+                write_floor: Optional[jnp.ndarray] = None,
                 draft_rank: Optional[Tuple[int, int]] = None,
                 ) -> Tuple[jnp.ndarray, Params]:
     """token: (B,) int32.  Returns (logits (B, V), new_state).
 
     state["index"] may be a scalar (lockstep decode) or a (B,) vector
     (per-slot positions, continuous batching).  ``pages``: optional
-    (B, n_p) page table for paged KV caches.  ``draft_rank``: run the
-    attention layers at the sliced (r_q, r_v) widths — the
-    self-speculative DRAFT pass over the shared full-rank cache
-    (DESIGN.md §8)."""
+    (B, n_p) page table for paged KV caches.  ``write_floor`` as in
+    ``prefill_chunk``.  ``draft_rank``: run the attention layers at the
+    sliced (r_q, r_v) widths — the self-speculative DRAFT pass over the
+    shared full-rank cache (DESIGN.md §8)."""
     B = token.shape[0]
     idx = state["index"]
     if jnp.ndim(idx) == 1:
@@ -437,7 +446,8 @@ def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
         positions = jnp.broadcast_to(idx[None, None], (B, 1)).astype(jnp.int32)
     x = _embed(params, cfg, token[:, None], positions, None)
     x, new_state = _run_with_state(params, cfg, x, state, positions,
-                                   pages=pages, draft_rank=draft_rank)
+                                   pages=pages, write_floor=write_floor,
+                                   draft_rank=draft_rank)
     new_state["index"] = state["index"] + 1
     x = L.apply_norm(params["final_norm"], cfg, x)
     return _logits(params, cfg, x)[:, 0], new_state

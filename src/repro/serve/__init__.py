@@ -1,4 +1,5 @@
-"""Serving: batched engine over (optionally paged) CLOVER-rank KV caches."""
+"""Serving: batched engine over (optionally paged) CLOVER-rank KV
+caches with copy-on-write prefix caching."""
 from repro.serve.engine import (  # noqa: F401
-    Engine, EngineConfig, PageAllocator, Request, Scheduler,
+    Engine, EngineConfig, PageAllocator, PrefixCache, Request, Scheduler,
     greedy_reference)

@@ -31,6 +31,19 @@ re-admission) instead of crashing.  Both layouts compile the same two
 step shapes; every paged result is checkable against the dense engine
 token-for-token.
 
+PAGED mode can additionally share pages ACROSS sequences
+(``EngineConfig.prefix_cache``, DESIGN.md §9): a host-side trie
+(``PrefixCache``) indexes full-page runs of finished / prefilled /
+preempted sequences by their page-aligned token prefix, admission maps
+the longest hit read-only into the new slot's table and resumes chunked
+prefill at the first uncached token (TTFT collapses to one step on full
+hits), and any write landing in a shared page copy-on-writes it first
+(``kernels/page_copy.py``) so speculative rollback, preemption and
+chunk padding can never mutate a page another sequence reads.  Because
+CLOVER pruning makes each page denser in tokens, every shared
+system-prompt page multiplies the rank win: the same pool bytes admit
+strictly more concurrent sequences.
+
 Scheduling policy lives in ``Scheduler``: admission from a FIFO queue
 into free slots, per-slot phase tracking (PREFILL -> [TAIL ->] DECODE),
 retirement on eos / max_new_tokens (freeing pages in paged mode).
@@ -76,6 +89,9 @@ class Request:
     # filled by the engine:
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    # prefix-cache hit size at the LAST admission: prompt tokens whose
+    # K/V came from shared pages (their prefill chunks were skipped)
+    cached_tokens: int = 0
     # serving metrics (monotonic clock): submit time, one stamp per
     # emitted token (token_times[0] is first-token / end of prefill)
     t_submit: float = 0.0
@@ -96,6 +112,15 @@ class EngineConfig:
     # Size it below that to overcommit: admission then gates on free
     # pages and exhaustion preempts the youngest sequence.
     n_pages: int = 0
+    # -- automatic prefix caching (DESIGN.md §9, requires paged) ------
+    # share KV pages across requests with a common page-aligned token
+    # prefix (system prompts, few-shot templates, replayed chats): a
+    # host-side trie indexes retired/prefilled full-page runs, admission
+    # maps hits read-only and skips their prefill chunks, and writes
+    # into a shared page copy-on-write it first (kernels/page_copy.py).
+    # Attention-only architectures only (recurrent state is not
+    # page-addressable).
+    prefix_cache: bool = False
     # -- self-speculative decoding (DESIGN.md §8) ---------------------
     # 0 disables; k > 0: every pure-decode step, a rank-sliced DRAFT
     # pass over the SAME weights proposes k tokens per slot and one
@@ -138,7 +163,7 @@ class EngineConfig:
 
 
 class PageAllocator:
-    """Free-list allocator over the global KV page pool.
+    """Refcounted free-list allocator over the global KV page pool.
 
     Host-side owner of the page tables for the device pools built by
     ``T.init_decode_state_paged``: ``n_pages`` real pages plus one spare
@@ -146,10 +171,19 @@ class PageAllocator:
     page-table entries address, so padded windows and idle slots write
     harmlessly off to the side instead of into another slot's pages.
 
+    With prefix caching (DESIGN.md §9) a page can be referenced by
+    several slot tables at once AND by the host-side prefix trie
+    (``PrefixCache``): ``refcount[p]`` counts every such reference, and
+    a page returns to the free list exactly when its count hits zero.
+    Shared pages are read-only to their mappers; a slot that must write
+    one first clones it (``cow``) and repoints its own table entry.
+
     Invariants (property-tested in tests/test_property.py):
-      * a page id is owned by at most one slot at a time;
-      * ``release`` returns exactly the slot's pages to the free list;
-      * ``free_pages + used_pages() == n_pages`` at all times.
+      * refcounts are >= 0 and a page is free iff its count is 0;
+      * no page is both on the free list and mapped/indexed anywhere;
+      * ``free_pages + unique mapped-or-indexed pages == n_pages``;
+      * ``ensure`` is all-or-nothing; ``release`` decrefs exactly the
+        slot's pages (no double-free).
     """
 
     def __init__(self, n_pages: int, page_tokens: int, slots: int,
@@ -160,6 +194,7 @@ class PageAllocator:
         self.table_pages = table_pages          # static page-table width
         self.sentinel = n_pages                 # the garbage-sink row
         self.free_list: List[int] = list(range(n_pages))
+        self.refcount: List[int] = [0] * n_pages
         self.tables: List[List[int]] = [[] for _ in range(slots)]
 
     @property
@@ -167,7 +202,9 @@ class PageAllocator:
         return len(self.free_list)
 
     def used_pages(self) -> int:
-        return sum(len(t) for t in self.tables)
+        """UNIQUE pages in use (shared pages count once — the number
+        actually unavailable to new sequences)."""
+        return self.n_pages - len(self.free_list)
 
     def utilization(self) -> float:
         return self.used_pages() / max(1, self.n_pages)
@@ -175,10 +212,31 @@ class PageAllocator:
     def pages_for(self, n_tokens: int) -> int:
         return -(-int(n_tokens) // self.page_tokens)
 
+    # -- refcounting ---------------------------------------------------
+    def _alloc_page(self) -> int:
+        page = self.free_list.pop()
+        assert self.refcount[page] == 0, page
+        self.refcount[page] = 1
+        return page
+
+    def incref(self, page: int):
+        assert 0 <= page < self.n_pages and self.refcount[page] > 0, \
+            f"incref of unowned page {page}"
+        self.refcount[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one reference; True if the page was freed."""
+        assert self.refcount[page] > 0, f"double free of page {page}"
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self.free_list.append(page)
+            return True
+        return False
+
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s table to cover positions [0, n_tokens);
         all-or-nothing.  Returns False on pool exhaustion (caller
-        preempts) or if the static table width would overflow."""
+        evicts/preempts) or if the static table width would overflow."""
         want = self.pages_for(n_tokens)
         need = want - len(self.tables[slot])
         if need <= 0:
@@ -186,14 +244,43 @@ class PageAllocator:
         if need > len(self.free_list) or want > self.table_pages:
             return False
         for _ in range(need):
-            self.tables[slot].append(self.free_list.pop())
+            self.tables[slot].append(self._alloc_page())
         return True
 
+    def map_shared(self, slot: int, pages: List[int]) -> bool:
+        """Append already-owned pages (a prefix-trie hit) READ-ONLY to
+        the end of ``slot``'s table; each gains one reference.  The
+        mapper must never scatter into them without ``cow`` first."""
+        if len(self.tables[slot]) + len(pages) > self.table_pages:
+            return False
+        for p in pages:
+            self.incref(p)
+            self.tables[slot].append(p)
+        return True
+
+    def cow(self, slot: int, idx: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write fault on table entry ``idx``: if the page is
+        shared, allocate a fresh page, repoint the slot's entry and
+        drop its reference on the old one.  Returns (src, dst) for the
+        caller's device-side content copy, or None when the page was
+        exclusively owned (no copy needed).  Caller must check
+        ``free_pages`` first; raises on an empty pool."""
+        old = self.tables[slot][idx]
+        if self.refcount[old] == 1:
+            return None
+        new = self._alloc_page()
+        self.tables[slot][idx] = new
+        self.decref(old)
+        return (old, new)
+
     def release(self, slot: int) -> int:
-        """Return all of ``slot``'s pages to the free list."""
+        """Drop the slot's reference on all of its pages.  Returns the
+        number of pages unmapped (shared pages survive via their other
+        references — e.g. the prefix trie's)."""
         pages = self.tables[slot]
         self.tables[slot] = []
-        self.free_list.extend(pages)
+        for p in pages:
+            self.decref(p)
         return len(pages)
 
     def table_array(self) -> np.ndarray:
@@ -203,6 +290,133 @@ class PageAllocator:
         for s, pages in enumerate(self.tables):
             t[s, :len(pages)] = pages
         return t
+
+
+class PrefixCache:
+    """Host-side radix index over PAGE-ALIGNED token prefixes
+    (DESIGN.md §9) — automatic prefix caching for the paged engine.
+
+    Each node covers exactly one full KV page: the node for the first
+    ``i`` pages of a token stream is keyed on ``(salt, stream[: i *
+    page_tokens])``, and holds the pool page whose K/V encode those
+    ``page_tokens`` positions given the preceding prefix.  ``salt``
+    folds in the model's rank plan (prune ratio / CLOVER ranks / page
+    size), so caches produced under different pruning never alias even
+    if the engine were rebuilt over the same allocator.
+
+    The trie holds one reference on every indexed page (see
+    ``PageAllocator``).  ``match`` walks the longest cached run for a
+    prompt and bumps each node's LRU clock; ``insert`` publishes a
+    finished/preempted/prefilled sequence's full-page run (first writer
+    wins — an existing node keeps its page); ``evict`` reclaims LRU
+    leaf nodes whose page no slot maps (refcount == 1: only the trie's
+    own reference is left).
+    """
+
+    def __init__(self, alloc: PageAllocator, salt: Tuple = ()):
+        self.alloc = alloc
+        self.pt = alloc.page_tokens
+        # the salt IS the root: two caches with different rank plans
+        # have disjoint key spaces from the first page on
+        self._root = ("root", salt)
+        # radix keying: (parent node id, this page's pt tokens) -> node
+        # {"id", "page", "clock", "children", "parent_key"} — each walk
+        # step hashes ONE page of tokens, so match/insert are O(L), not
+        # O(L^2) re-serializations of the whole prefix per depth
+        self.nodes: Dict[tuple, dict] = {}
+        self._next_id = 1
+        self._clock = 0
+        self.inserted = 0
+        self.evicted = 0
+
+    def _chunk(self, tokens: np.ndarray, i: int) -> bytes:
+        """Page ``i``'s token content (0-based), as a hashable key."""
+        return np.asarray(tokens[i * self.pt:(i + 1) * self.pt],
+                          np.int32).tobytes()
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def pages(self) -> set:
+        return {n["page"] for n in self.nodes.values()}
+
+    def match(self, tokens: np.ndarray) -> List[int]:
+        """Longest cached page run that is a prefix of ``tokens``.
+        Returns the page ids in position order (possibly empty) and
+        LRU-touches every node on the path."""
+        self._clock += 1
+        pages: List[int] = []
+        parent = self._root
+        for i in range(len(tokens) // self.pt):
+            node = self.nodes.get((parent, self._chunk(tokens, i)))
+            if node is None:
+                break
+            node["clock"] = self._clock
+            pages.append(node["page"])
+            parent = node["id"]
+        return pages
+
+    def insert(self, tokens: np.ndarray, pages: List[int]):
+        """Publish a full-page run: page ``i`` holds K/V for positions
+        [i*pt, (i+1)*pt) of ``tokens``.  Existing nodes win (their page
+        stays; the duplicate remains the caller's private copy)."""
+        n = min(len(tokens) // self.pt, len(pages))
+        self._clock += 1
+        parent_id, parent_key = self._root, None
+        for i in range(n):
+            key = (parent_id, self._chunk(tokens, i))
+            node = self.nodes.get(key)
+            if node is None:
+                self.alloc.incref(pages[i])
+                node = {"id": self._next_id, "page": pages[i],
+                        "clock": self._clock, "children": 0,
+                        "parent_key": parent_key}
+                self._next_id += 1
+                self.nodes[key] = node
+                if parent_key is not None:
+                    self.nodes[parent_key]["children"] += 1
+                self.inserted += 1
+            else:
+                node["clock"] = self._clock
+            parent_id, parent_key = node["id"], key
+
+    def evict(self, n_pages: int) -> int:
+        """Free up to ``n_pages`` pool pages by dropping LRU LEAF nodes
+        nobody maps (page refcount == 1).  Leaf-first keeps every
+        surviving node's prefix path intact.  One scan builds the
+        clock-ordered candidate list; a parent whose last child is
+        dropped re-enters consideration within the same call."""
+        freed = 0
+        candidates = sorted(
+            (k for k, nd in self.nodes.items()
+             if nd["children"] == 0
+             and self.alloc.refcount[nd["page"]] == 1),
+            key=lambda k: self.nodes[k]["clock"], reverse=True)
+        while freed < n_pages and candidates:
+            key = candidates.pop()
+            node = self.nodes.get(key)
+            if (node is None or node["children"] != 0
+                    or self.alloc.refcount[node["page"]] != 1):
+                continue            # state moved under us: re-derived
+            self.nodes.pop(key)
+            pk = node["parent_key"]
+            if pk is not None and pk in self.nodes:
+                parent = self.nodes[pk]
+                parent["children"] -= 1
+                if (parent["children"] == 0
+                        and self.alloc.refcount[parent["page"]] == 1):
+                    # keep clock order: parents are older than the
+                    # children that just left, append-then-sort is
+                    # overkill for the one element — insert at the end
+                    # (oldest side) of the reversed list
+                    candidates.append(pk)
+                    candidates.sort(
+                        key=lambda k: self.nodes[k]["clock"],
+                        reverse=True)
+            self.alloc.decref(node["page"])
+            self.evicted += 1
+            freed += 1
+        return freed
 
 
 class Scheduler:
@@ -215,14 +429,25 @@ class Scheduler:
     prompt, retirement frees pages, and ``preempt`` requeues a sequence
     at the queue head with its generated tokens folded into the
     effective prompt (greedy continuation is exact).
+
+    With a ``PrefixCache`` (paged + ``EngineConfig.prefix_cache``)
+    admission additionally matches the longest cached page-aligned
+    prefix of the effective prompt, maps those pages READ-ONLY into the
+    slot's table and resumes chunked prefill at the first uncached
+    token (``resume``); prefill completion / preemption / retirement
+    publish the sequence's full-page run back into the trie so later
+    requests (including the preempted sequence itself) skip the
+    redundant prefill compute.
     """
 
     def __init__(self, ecfg: EngineConfig, recurrent: bool,
-                 allocator: Optional[PageAllocator] = None):
+                 allocator: Optional[PageAllocator] = None,
+                 prefix: Optional["PrefixCache"] = None):
         self.ecfg = ecfg
         self.chunk = ecfg.chunk
         self.recurrent = recurrent
         self.alloc = allocator
+        self.prefix = prefix
         self.queue: collections.deque = collections.deque()
         n = ecfg.slots
         self.slot_req: List[Optional[Request]] = [None] * n
@@ -234,8 +459,14 @@ class Scheduler:
         self.fresh = np.zeros(n, bool)          # needs state reset
         self.last_token = np.zeros(n, np.int32)
         self.slot_seq = np.zeros(n, np.int64)   # admission order (age)
+        # prefix-cache resume point per slot: the first position THIS
+        # tenure writes (0 without a hit).  Positions below it are
+        # served by read-only shared pages.
+        self.resume = np.zeros(n, np.int64)
         self._admit_counter = 0
         self.preemptions = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
 
     # -- admission -----------------------------------------------------
     def submit(self, req: Request):
@@ -254,6 +485,7 @@ class Scheduler:
                 assert L > 0, "empty prompt"
                 assert L + remaining <= self.ecfg.max_len, \
                     "request exceeds KV capacity"
+                resume = 0
                 if self.alloc is not None:
                     # speculative verify windows transiently overhang
                     # the committed length by up to spec_k tokens
@@ -261,16 +493,44 @@ class Scheduler:
                     assert (self.alloc.pages_for(L + remaining + slack)
                             <= self.alloc.n_pages), \
                         "request exceeds page pool"
-                    if not self.alloc.ensure(s, L):
-                        break       # FIFO head-of-line: wait for pages
+                    if self.prefix is not None:
+                        pages = self.prefix.match(eff)
+                        if pages and self.alloc.map_shared(s, pages):
+                            # at least one token must remain to prefill
+                            # (its logits seed generation); a FULL hit
+                            # resumes at L-1 and the rewrite of that
+                            # position COWs the shared last page
+                            pt = self.alloc.page_tokens
+                            resume = min(len(pages) * pt, L - 1)
+                    ok = self.alloc.ensure(s, L)
+                    if not ok and self.prefix is not None:
+                        # cached-but-idle prefixes are reclaimable
+                        # bytes: evict LRU trie pages nobody maps and
+                        # retry (matched pages are slot-mapped now, so
+                        # eviction can never touch THIS hit)
+                        short = (self.alloc.pages_for(L)
+                                 - len(self.alloc.tables[s])
+                                 - self.alloc.free_pages)
+                        if short > 0 and self.prefix.evict(short) > 0:
+                            ok = self.alloc.ensure(s, L)
+                    if not ok:
+                        # FIFO head-of-line: wait for pages (undo the
+                        # shared mapping so the trie can evict them)
+                        self.alloc.release(s)
+                        break
                 self.queue.popleft()
+                req.cached_tokens = resume
+                if resume > 0:
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += resume
                 self.slot_req[s] = req
                 self.slot_prompt[s] = eff
-                self.pos[s] = 0
+                self.pos[s] = resume
+                self.resume[s] = resume
                 self.fresh[s] = True
                 self.slot_seq[s] = self._admit_counter
                 self._admit_counter += 1
-                self.phase[s] = self._prefill_phase(L, 0)
+                self.phase[s] = self._prefill_phase(L, resume)
 
     def _prefill_phase(self, L: int, pos: int) -> str:
         if self.recurrent and L - pos < self.chunk:
@@ -357,6 +617,10 @@ class Scheduler:
                 self.pos[s] += int(lengths[s])
                 if self.pos[s] == len(self.slot_prompt[s]):
                     self.phase[s] = DECODE
+                    # the prompt's K/V is fully written: publish its
+                    # full-page run so CONCURRENT requests with the
+                    # same prefix already share it
+                    self._publish(s, len(self.slot_prompt[s]))
                     sample.append(s)
                 else:
                     self.phase[s] = self._prefill_phase(
@@ -380,15 +644,36 @@ class Scheduler:
         return sample
 
     # -- preemption / retirement --------------------------------------
-    def preempt(self, s: int):
-        """Free slot ``s`` (pages included) and requeue its request at
-        the queue HEAD.  Generated tokens are kept on the request; they
-        join the effective prompt on re-admission, so the re-prefill
-        reproduces the stream exactly and generation continues from
-        where it stopped."""
+    def _publish(self, s: int, n_valid: int):
+        """Publish slot ``s``'s first ``n_valid`` cached positions (its
+        committed K/V) into the prefix trie, rounded DOWN to full
+        pages.  Keyed on the sequence's actual token stream (prompt +
+        generated) — content-addressed, so it is correct for any
+        sampling temperature and any preemption history."""
+        if self.prefix is None:
+            return
+        req = self.slot_req[s]
+        stream = np.asarray(req.prompt, np.int32)
+        if req.generated:
+            stream = np.concatenate(
+                [stream, np.asarray(req.generated, np.int32)])
+        n_full = int(n_valid) // self.alloc.page_tokens
+        if n_full > 0:
+            self.prefix.insert(stream, self.alloc.tables[s][:n_full])
+
+    def preempt(self, s: int, n_valid: int = 0):
+        """Release slot ``s`` (decref its pages) and requeue its request
+        at the queue HEAD.  Generated tokens are kept on the request;
+        they join the effective prompt on re-admission, so the
+        re-prefill reproduces the stream exactly and generation
+        continues from where it stopped.  With a prefix cache the
+        committed full-page run (``n_valid`` positions) is published
+        first, so re-admission resumes from the trie instead of
+        re-prefilling — pages are decref'd, not freed."""
         req = self.slot_req[s]
         assert req is not None
         if self.alloc is not None:
+            self._publish(s, n_valid)
             self.alloc.release(s)
         self.slot_req[s] = None
         self.slot_prompt[s] = None
@@ -396,7 +681,10 @@ class Scheduler:
         self.queue.appendleft(req)
         self.preemptions += 1
 
-    def retire(self):
+    def retire(self, written: Optional[np.ndarray] = None):
+        """Retire finished DECODE slots.  ``written`` (engine's host
+        mirror of per-slot committed cache lengths) bounds what the
+        prefix trie may index on retirement."""
         for s, req in enumerate(self.slot_req):
             if req is None or self.phase[s] != DECODE:
                 continue
@@ -404,11 +692,13 @@ class Scheduler:
                     or (self.ecfg.eos_id >= 0 and req.generated
                         and req.generated[-1] == self.ecfg.eos_id)):
                 req.done = True
+                if self.alloc is not None:
+                    if written is not None:
+                        self._publish(s, int(written[s]))
+                    self.alloc.release(s)
                 self.slot_req[s] = None
                 self.slot_prompt[s] = None
                 self.phase[s] = None
-                if self.alloc is not None:
-                    self.alloc.release(s)
 
     @property
     def busy(self) -> bool:
@@ -444,11 +734,15 @@ def _is_kv(path) -> bool:
     return any(getattr(p, "key", None) == "kv" for p in path)
 
 
-def _reset_fresh(state: Params, fresh: jnp.ndarray) -> Params:
-    """Zero recurrent state + index of freshly admitted slots.  KV
-    caches keep their stale contents — masked by the per-slot index
-    (dense: the slot's own region; paged: freshly allocated pages hold a
-    previous owner's data, masked until overwritten by the new one)."""
+def _reset_fresh(state: Params, fresh: jnp.ndarray,
+                 resume: jnp.ndarray) -> Params:
+    """Zero recurrent state of freshly admitted slots and set their
+    index to ``resume`` (0 normally; the first uncached position on a
+    prefix-cache hit — the cached prefix's K/V is already present in
+    the slot's read-only shared pages).  KV caches keep their stale
+    contents — masked by the per-slot index (dense: the slot's own
+    region; paged: freshly allocated pages hold a previous owner's
+    data, masked until overwritten by the new one)."""
 
     def z(path, leaf):
         if _is_kv(path):
@@ -456,7 +750,7 @@ def _reset_fresh(state: Params, fresh: jnp.ndarray) -> Params:
         return jnp.where(_mask_like(fresh, leaf), jnp.zeros_like(leaf), leaf)
 
     return {"blocks": jax.tree_util.tree_map_with_path(z, state["blocks"]),
-            "index": jnp.where(fresh, 0, state["index"])}
+            "index": jnp.where(fresh, resume, state["index"])}
 
 
 def _merge_inactive(old_blocks, new_blocks, active: jnp.ndarray):
@@ -504,7 +798,25 @@ class Engine:
                 "speculative decoding requires an attention-only "
                 "architecture: recurrent (mamba/rwkv) state cannot roll "
                 "back rejected draft tokens")
-        self.sched = Scheduler(ecfg, recurrent, self.alloc)
+        self.prefix: Optional[PrefixCache] = None
+        if ecfg.prefix_cache:
+            if not ecfg.paged:
+                raise ValueError("prefix_cache requires paged=True: only "
+                                 "pages can be shared across sequences")
+            if recurrent:
+                raise ValueError(
+                    "prefix caching requires an attention-only "
+                    "architecture: recurrent (mamba/rwkv) state is not "
+                    "page-addressable, so a cached page run cannot "
+                    "reconstruct it")
+            # the trie key folds in the rank plan: caches produced under
+            # a different prune ratio / CLOVER rank / page size must
+            # never alias (their K/V live in a different basis)
+            salt = (cfg.name, cfg.qk_dim, cfg.vo_dim, cfg.clover.enabled,
+                    cfg.clover.qk_rank, cfg.clover.vo_rank,
+                    ecfg.page_tokens)
+            self.prefix = PrefixCache(self.alloc, salt=salt)
+        self.sched = Scheduler(ecfg, recurrent, self.alloc, self.prefix)
         # host mirror of state["index"] (tokens written per slot this
         # tenure) — drives page coverage without device round-trips
         self.written = np.zeros(ecfg.slots, np.int64)
@@ -516,20 +828,39 @@ class Engine:
         self.spec_rounds = 0
         self.accept_hist: Dict[int, int] = collections.defaultdict(int)
 
-        def chunk_fn(params, tokens, lengths, fresh, pages, state):
-            st = _reset_fresh(state, fresh)
+        def chunk_fn(params, tokens, lengths, fresh, resume, pages, wfloor,
+                     state):
+            st = _reset_fresh(state, fresh, resume)
             logits, new = T.prefill_chunk(params, cfg, tokens, st, lengths,
-                                          pages=pages)
+                                          pages=pages, write_floor=wfloor)
             blocks = _merge_inactive(st["blocks"], new["blocks"],
                                      lengths > 0)
             return logits, {"blocks": blocks, "index": new["index"]}
 
-        def decode_fn(params, tok, fresh, pages, state):
-            return T.decode_step(params, cfg, tok, _reset_fresh(state, fresh),
-                                 pages=pages)
+        def decode_fn(params, tok, fresh, resume, pages, wfloor, state):
+            return T.decode_step(params, cfg, tok,
+                                 _reset_fresh(state, fresh, resume),
+                                 pages=pages, write_floor=wfloor)
 
         self._chunk = jax.jit(chunk_fn)
         self._decode = jax.jit(decode_fn)
+        # batched page-content clone backing copy-on-write faults: the
+        # ONE extra compiled shape prefix caching adds (a no-op without
+        # it — compiled_shapes() counts it only once it runs)
+        kimpl = (cfg.kernel_impl
+                 if cfg.kernel_impl in ("pallas", "interpret") else "ref")
+
+        def copy_fn(blocks, src, dst):
+            from repro.kernels import ops as kops
+
+            def cp(path, leaf):
+                if _is_kv(path):
+                    return kops.page_copy(leaf, src, dst, impl=kimpl)
+                return leaf
+
+            return jax.tree_util.tree_map_with_path(cp, blocks)
+
+        self._copy = jax.jit(copy_fn) if ecfg.paged else None
         self._draft = self._verify = None
         if ecfg.spec_k > 0:
             from repro.core.prune import draft_ranks
@@ -539,13 +870,14 @@ class Engine:
             self.draft_rank = (None if dr == (cfg.qk_dim, cfg.vo_dim)
                                else dr)
 
-            def draft_fn(params, tok, pages, state):
+            def draft_fn(params, tok, pages, wfloor, state):
                 return T.decode_step(params, cfg, tok, state, pages=pages,
+                                     write_floor=wfloor,
                                      draft_rank=self.draft_rank)
 
-            def verify_fn(params, tokens, lengths, pages, state):
+            def verify_fn(params, tokens, lengths, pages, wfloor, state):
                 return T.verify_chunk(params, cfg, tokens, state, lengths,
-                                      pages=pages)
+                                      pages=pages, write_floor=wfloor)
 
             self._draft = jax.jit(draft_fn)
             self._verify = jax.jit(verify_fn)
@@ -557,11 +889,12 @@ class Engine:
     def compiled_shapes(self) -> Optional[int]:
         """Total jit cache entries across all step functions — the
         engine's contract is that this never exceeds 2 without
-        speculation (dense AND paged: the page table is shape-static)
-        and 4 with it (one draft shape + one verify shape on top).
-        Returns None if the jit cache isn't introspectable (private API
-        drift)."""
-        fns = [f for f in (self._chunk, self._decode,
+        speculation (dense AND paged: the page table is shape-static),
+        4 with it (one draft shape + one verify shape on top), plus at
+        most 1 for the fixed-width page-copy batch once a prefix-cache
+        copy-on-write fault has fired.  Returns None if the jit cache
+        isn't introspectable (private API drift)."""
+        fns = [f for f in (self._chunk, self._decode, self._copy,
                            self._draft, self._verify) if f is not None]
         sizes = [getattr(f, "_cache_size", None) for f in fns]
         if any(s is None for s in sizes):
@@ -583,21 +916,76 @@ class Engine:
             req.token_times.append(now)
             self.sched.last_token[s] = tok
 
-    # -- paged page-coverage / preemption ------------------------------
+    # -- paged page-coverage / COW / preemption ------------------------
+    def _cover_writes(self, s: int, take_s: int, pairs: List) -> bool:
+        """Page-cover slot ``s``'s next write window [written, written +
+        take) AND copy-on-write any SHARED page inside it (a prefix-hit
+        resume rewriting the last cached position, or any future writer
+        of a trie-indexed page): the page content is cloned into a
+        fresh page (``pairs`` collects the (src, dst) device copies)
+        and the slot's table repointed, so the shared original — and
+        every other sequence reading it — is never mutated.  False ->
+        the pool is exhausted mid-way; caller reclaims and retries
+        (partial progress is safe: completed COWs stay valid)."""
+        alloc = self.alloc
+        if take_s <= 0:
+            return True
+        start = int(self.written[s])
+        end = start + take_s
+        if not alloc.ensure(s, end):
+            return False
+        if self.prefix is None:
+            return True         # sharing is impossible without the trie
+        pt = alloc.page_tokens
+        for idx in range(start // pt, (end - 1) // pt + 1):
+            page = alloc.tables[s][idx]
+            if alloc.refcount[page] > 1:
+                if not alloc.free_pages:
+                    return False
+                pairs.append(alloc.cow(s, idx))
+        return True
+
+    def _copy_pages(self, pairs: List[Tuple[int, int]]):
+        """Clone page contents src -> dst across every layer's pools in
+        fixed-width batches (ONE compiled shape; short batches pad with
+        sentinel->sentinel self-copies).  Pairs execute in list order —
+        a page freed after serving as a src may be reallocated as a
+        later dst, never the reverse, so in-order is always correct."""
+        W = max(1, self.ecfg.slots)
+        snt = self.alloc.sentinel
+        for i in range(0, len(pairs), W):
+            batch = list(pairs[i:i + W])
+            batch += [(snt, snt)] * (W - len(batch))
+            src = jnp.asarray([p[0] for p in batch], jnp.int32)
+            dst = jnp.asarray([p[1] for p in batch], jnp.int32)
+            self.state["blocks"] = self._copy(self.state["blocks"],
+                                              src, dst)
+
     def _ensure_pages(self, decode_width: int = 1):
-        """Cover every active slot's upcoming writes with pages, oldest
-        sequence first (the FIFO head has page priority).  On pool
-        exhaustion, preempt-and-requeue the YOUNGEST active sequence
-        (vLLM-style) and retry, instead of crashing mid-trace."""
+        """Cover every active slot's upcoming writes with pages (COW
+        faults included), oldest sequence first (the FIFO head has page
+        priority).  On pool exhaustion the reclaim ladder is: evict LRU
+        unmapped prefix-cache pages first (cached-but-idle prefixes are
+        the cheapest bytes to drop), then preempt-and-requeue the
+        YOUNGEST active sequence (vLLM-style) and retry, instead of
+        crashing mid-trace."""
         sched, alloc = self.sched, self.alloc
         take = sched.planned_writes(decode_width)
         order = sorted((s for s in range(self.ecfg.slots)
                         if sched.slot_req[s] is not None),
                        key=lambda s: sched.slot_seq[s])
+        pairs: List[Tuple[int, int]] = []
         for s in order:
             while sched.slot_req[s] is not None:
-                if alloc.ensure(s, int(self.written[s] + take[s])):
+                if self._cover_writes(s, int(take[s]), pairs):
                     break
+                # batched shortfall: coverage may be short several
+                # pages (a COW fault on top needs at most one more)
+                short = max(1, alloc.pages_for(
+                    int(self.written[s] + take[s]))
+                    - len(alloc.tables[s]) - alloc.free_pages + 1)
+                if self.prefix is not None and self.prefix.evict(short):
+                    continue
                 victims = [v for v in range(self.ecfg.slots)
                            if sched.slot_req[v] is not None]
                 victim = max(victims, key=lambda v: sched.slot_seq[v])
@@ -607,8 +995,9 @@ class Engine:
                         f"page pool exhausted: slot {s} needs "
                         f"{alloc.pages_for(int(self.written[s] + take[s]))}"
                         f" pages, pool has {alloc.n_pages}")
-                sched.preempt(victim)
-                take[victim] = 0
+                sched.preempt(victim, n_valid=int(self.written[victim]))
+        if pairs:
+            self._copy_pages(pairs)
 
     # -- speculative round (DESIGN.md §8) ------------------------------
     def _spec_due(self) -> bool:
@@ -646,9 +1035,11 @@ class Engine:
         tok = sched.last_token.copy()
         drafts = np.zeros((slots, k), np.int32)
         dstate = self.state
+        wfloor = (jnp.asarray(sched.resume.astype(np.int32))
+                  if self.alloc is not None else None)
         for j in range(k):
             logits, dstate = self._draft(self.params, jnp.asarray(tok),
-                                         pages, dstate)
+                                         pages, wfloor, dstate)
             tok = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
             drafts[:, j] = tok
         tokens = np.zeros((slots, W), np.int32)
@@ -657,7 +1048,7 @@ class Engine:
         lengths = np.where(active, W, 0).astype(np.int32)
         logits, self.state = self._verify(
             self.params, jnp.asarray(tokens), jnp.asarray(lengths), pages,
-            self.state)
+            wfloor, self.state)
         targets = np.argmax(np.asarray(logits), axis=-1)       # (slots, W)
         now = time.monotonic()
         self.spec_rounds += 1
@@ -700,17 +1091,23 @@ class Engine:
         sched = self.sched
         sched.admit()
         spec = self._spec_due()
-        pages = None
-        # newly admitted slots restart their tenure at position 0 (the
-        # device index is zeroed by _reset_fresh at plan time; the host
-        # mirror must follow — it drives page coverage AND the
+        pages = wfloor = None
+        # newly admitted slots restart their tenure at their resume
+        # point — 0, or the first uncached position on a prefix hit
+        # (the device index follows via _reset_fresh at plan time; the
+        # host mirror drives page coverage, COW detection AND the
         # speculative rollback's index commit)
         for s in range(self.ecfg.slots):
             if sched.slot_req[s] is not None and sched.fresh[s]:
-                self.written[s] = 0
+                self.written[s] = int(sched.resume[s])
+        resume = jnp.asarray(sched.resume.astype(np.int32))
         if self.alloc is not None:
             self._ensure_pages(self.ecfg.spec_window if spec else 1)
             pages = jnp.asarray(self.alloc.table_array())
+            # defense in depth: scatter-writes below each slot's resume
+            # point are rerouted to the garbage row on device, so even
+            # a host-side COW bug cannot corrupt a shared cached prefix
+            wfloor = resume
             self.peak_page_util = max(self.peak_page_util,
                                       self.alloc.utilization())
         self.max_active = max(self.max_active, len(
@@ -719,7 +1116,7 @@ class Engine:
             tokens, lengths, fresh = sched.plan_chunk()
             logits, self.state = self._chunk(
                 self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-                jnp.asarray(fresh), pages, self.state)
+                jnp.asarray(fresh), resume, pages, wfloor, self.state)
             self.written += lengths        # device: index += lengths
             self._emit(sched.advance_chunk(lengths), np.asarray(logits))
         elif spec and any(r is not None for r in sched.slot_req):
@@ -728,12 +1125,12 @@ class Engine:
             tokens, fresh = sched.plan_decode()
             logits, self.state = self._decode(
                 self.params, jnp.asarray(tokens), jnp.asarray(fresh),
-                pages, self.state)
+                resume, pages, wfloor, self.state)
             self.written += 1              # device: index += 1, all slots
             self._emit(sched.advance_decode(), np.asarray(logits))
         else:
             return 0
-        sched.retire()
+        sched.retire(self.written)
         return len([r for r in sched.slot_req if r is not None])
 
     def run(self, requests: List[Request], max_steps: int = 100000,

@@ -1,9 +1,26 @@
 """Shared test fixtures.  NOTE: do NOT set XLA_FLAGS here — smoke tests and
 benches must see the single real CPU device; only launch/dryrun.py forces
 512 placeholder devices (and multi-device tests spawn subprocesses)."""
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
+
+# Named hypothesis profiles (one knob instead of per-test @settings):
+#   * dev (default): fast local iteration / the CI fast leg;
+#   * ci: the CI slow leg selects it via HYPOTHESIS_PROFILE=ci — more
+#     examples, no deadline (shared runners stall unpredictably).
+# Tests that put a MODEL in the loop still pin their own small
+# max_examples explicitly; everything else inherits the profile.
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=200, deadline=None)
+    settings.register_profile("dev", max_examples=20, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:          # minimal installs run without hypothesis
+    pass
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,136 @@
+"""Shared host-side lifecycle model for the paged pool + prefix trie.
+
+Drives the REAL ``PageAllocator`` + ``PrefixCache`` through the same
+sequence lifecycle serve.engine runs (admission maps trie hits
+read-only and resumes past them; writes COW shared pages; prefill
+completion, preemption and retirement publish full-page runs), and
+checks the allocator invariants after every operation.
+
+Two drivers share it so the invariants are exercised both with and
+without hypothesis installed:
+  * tests/test_property.py — a hypothesis ``RuleBasedStateMachine``
+    (shrinking, CI ``ci`` profile with >= 200 examples);
+  * tests/test_prefix_cache.py — a seeded numpy random walk that runs
+    on minimal installs too.
+"""
+import numpy as np
+
+from repro.serve import PageAllocator, PrefixCache
+
+
+class PoolLifecycle:
+    """One pool + trie + per-slot sequence models, with invariants."""
+
+    def __init__(self, n_pages=12, page_tokens=4, slots=3, table_pages=10):
+        self.n_pages, self.pt = n_pages, page_tokens
+        self.slots, self.table = slots, table_pages
+        self.alloc = PageAllocator(n_pages, page_tokens, slots, table_pages)
+        self.prefix = PrefixCache(self.alloc, salt=("model",))
+        # per-slot: {"stream": committed tokens, "L": prompt length,
+        # "written": committed cache length} or None
+        self.seq = [None] * slots
+
+    def free_slots(self):
+        return [s for s in range(self.slots) if self.seq[s] is None]
+
+    def active_slots(self):
+        return [s for s in range(self.slots) if self.seq[s] is not None]
+
+    def _publish(self, s):
+        q = self.seq[s]
+        n_full = q["written"] // self.pt
+        if n_full > 0:
+            self.prefix.insert(q["stream"][:n_full * self.pt],
+                               self.alloc.tables[s][:n_full])
+
+    # -- lifecycle operations (mirror serve.engine) --------------------
+    def admit(self, s, tokens) -> bool:
+        """Admission: match the trie, map hits read-only, resume past
+        them, cover the remaining prompt (evicting idle trie pages when
+        short).  False -> head-of-line wait, nothing retained."""
+        assert self.seq[s] is None
+        tokens = np.asarray(tokens, np.int32)
+        L = len(tokens)
+        pages = self.prefix.match(tokens)
+        resume = 0
+        if pages and self.alloc.map_shared(s, pages):
+            resume = min(len(pages) * self.pt, L - 1)
+        ok = self.alloc.ensure(s, L)
+        if not ok:
+            short = (self.alloc.pages_for(L) - len(self.alloc.tables[s])
+                     - self.alloc.free_pages)
+            if short > 0 and self.prefix.evict(short) > 0:
+                ok = self.alloc.ensure(s, L)
+        if not ok:
+            self.alloc.release(s)
+            return False
+        self.seq[s] = {"stream": tokens, "L": L, "written": resume}
+        return True
+
+    def write(self, s, take, new_tokens) -> bool:
+        """One step's scatter-write window [written, written + take):
+        cover with pages and COW anything shared — the engine's
+        ``_cover_writes`` contract.  ``new_tokens`` extends the stream
+        when the window grows past it (decode).  Publishes the prompt's
+        full-page run when the window completes the prefill."""
+        q = self.seq[s]
+        end = min(q["written"] + int(take), self.table * self.pt)
+        if end <= q["written"]:
+            return False
+        if not self.alloc.ensure(s, end):
+            if not self.prefix.evict(self.alloc.pages_for(end)):
+                return False
+            if not self.alloc.ensure(s, end):
+                return False
+        for idx in range(q["written"] // self.pt, (end - 1) // self.pt + 1):
+            if self.alloc.refcount[self.alloc.tables[s][idx]] > 1:
+                if not self.alloc.free_pages:
+                    return False    # engine would evict/preempt here
+                pair = self.alloc.cow(s, idx)
+                assert pair is not None and pair[0] != pair[1]
+        grown = end - len(q["stream"])
+        if grown > 0:
+            q["stream"] = np.concatenate(
+                [q["stream"], np.asarray(new_tokens[:grown], np.int32)])
+        crossed = q["written"] < q["L"] <= end
+        q["written"] = end
+        if crossed:
+            self._publish(s)
+        return True
+
+    def close(self, s):
+        """Preemption and retirement are the same pool transaction:
+        publish the committed full-page run, then decref everything."""
+        self._publish(s)
+        self.alloc.release(s)
+        self.seq[s] = None
+
+    def evict(self, n) -> int:
+        return self.prefix.evict(n)
+
+    # -- invariants ----------------------------------------------------
+    def check(self):
+        a, pfx = self.alloc, self.prefix
+        expect = {}
+        for t in a.tables:
+            for p in t:
+                expect[p] = expect.get(p, 0) + 1
+        for node in pfx.nodes.values():
+            expect[node["page"]] = expect.get(node["page"], 0) + 1
+        for p in range(a.n_pages):
+            # refcount == the page's actual reference multiset, >= 0
+            assert a.refcount[p] == expect.get(p, 0), p
+            # free iff unreferenced; never both free and mapped
+            assert (p in a.free_list) == (expect.get(p, 0) == 0), p
+        assert len(set(a.free_list)) == len(a.free_list)    # no double-free
+        assert set(expect).isdisjoint(a.free_list)
+        # pool conservation: free + unique mapped-or-indexed == n_pages
+        assert len(a.free_list) + len(expect) == a.n_pages
+        assert a.sentinel not in expect
+        for t in a.tables:
+            assert len(t) <= a.table_pages
+        for key, node in pfx.nodes.items():
+            assert a.refcount[node["page"]] >= 1    # trie pages refcounted
+            kids = sum(1 for n in pfx.nodes.values()
+                       if n["parent_key"] == key)
+            assert node["children"] == kids

@@ -1,0 +1,82 @@
+"""benchmarks/compare.py perf gate: regression math and — the part a
+rename silently defeated once — key drift in BOTH directions."""
+import json
+
+import pytest
+
+from benchmarks import compare
+
+
+def _write(path, metrics):
+    path.write_text(json.dumps({"metrics": metrics}))
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    base = tmp_path / "baselines"
+    cur = tmp_path / "current"
+    base.mkdir()
+    cur.mkdir()
+    return base, cur
+
+
+def _argv(base, cur, **kw):
+    argv = ["--baseline-dir", str(base), "--current-dir", str(cur)]
+    for k, v in kw.items():
+        argv += [f"--{k}", str(v)]
+    return argv
+
+
+def test_gate_ok_and_regression(dirs):
+    base, cur = dirs
+    _write(base / "BENCH_serve.json", {"s1": {"tokens_per_s": 100.0,
+                                              "itl_p95_ms": 10.0}})
+    _write(cur / "BENCH_serve.json", {"s1": {"tokens_per_s": 98.0,
+                                             "itl_p95_ms": 11.0}})
+    assert compare.main(_argv(base, cur, threshold=0.25)) == 0
+    _write(cur / "BENCH_serve.json", {"s1": {"tokens_per_s": 50.0,
+                                             "itl_p95_ms": 10.0}})
+    assert compare.main(_argv(base, cur, threshold=0.25)) == 1
+
+
+def test_baseline_key_missing_from_current_fails(dirs):
+    """Forward drift: a renamed/crashed scenario vanishes from the
+    current run — its baselined metric must fail the gate."""
+    base, cur = dirs
+    _write(base / "BENCH_serve.json",
+           {"s1": {"tokens_per_s": 100.0}, "s2": {"tokens_per_s": 50.0}})
+    _write(cur / "BENCH_serve.json", {"s1": {"tokens_per_s": 100.0}})
+    assert compare.main(_argv(base, cur)) == 1
+
+
+def test_current_key_missing_from_baseline_fails(dirs):
+    """Reverse drift: a NEW gated metric with no baseline would run
+    ungated forever — it must fail until adopted with --update."""
+    base, cur = dirs
+    _write(base / "BENCH_serve.json", {"s1": {"tokens_per_s": 100.0}})
+    _write(cur / "BENCH_serve.json",
+           {"s1": {"tokens_per_s": 100.0}, "s2": {"tokens_per_s": 77.0}})
+    assert compare.main(_argv(base, cur)) == 1
+    # --update adopts it, after which the gate passes
+    assert compare.main(_argv(base, cur) + ["--update"]) == 0
+    assert compare.main(_argv(base, cur)) == 0
+
+
+def test_file_level_drift_both_directions(dirs):
+    base, cur = dirs
+    _write(base / "BENCH_serve.json", {"s1": {"tokens_per_s": 1.0}})
+    _write(cur / "BENCH_serve.json", {"s1": {"tokens_per_s": 1.0}})
+    # current produced an extra bench file nobody baselined
+    _write(cur / "BENCH_new.json", {"x": {"tokens_per_s": 9.0}})
+    assert compare.main(_argv(base, cur)) == 1
+    (cur / "BENCH_new.json").unlink()
+    # baseline file with no current counterpart (module crashed/skipped)
+    _write(base / "BENCH_kernel.json", {"k": {"tokens_per_s": 2.0}})
+    assert compare.main(_argv(base, cur)) == 1
+
+
+def test_ungated_metrics_do_not_gate(dirs):
+    base, cur = dirs
+    _write(base / "BENCH_serve.json", {"s1": {"ttft_warm_ms": 1.0}})
+    _write(cur / "BENCH_serve.json", {"s1": {"ttft_warm_ms": 99.0}})
+    assert compare.main(_argv(base, cur)) == 0

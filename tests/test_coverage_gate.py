@@ -1,0 +1,56 @@
+"""tools/check_coverage.py: subtree aggregation and floor enforcement
+over synthetic Cobertura reports."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+import check_coverage  # noqa: E402
+
+XML = """<?xml version="1.0"?>
+<coverage line-rate="0.5">
+  <sources><source>/repo</source></sources>
+  <packages><package name="repro">
+    <classes>
+      <class filename="src/repro/serve/engine.py">
+        <lines>
+          <line number="1" hits="1"/><line number="2" hits="1"/>
+          <line number="3" hits="1"/><line number="4" hits="0"/>
+        </lines>
+      </class>
+      <class filename="src/repro/models/layers.py">
+        <lines><line number="1" hits="0"/><line number="2" hits="0"/></lines>
+      </class>
+    </classes>
+  </package></packages>
+</coverage>
+"""
+
+
+def _xml(tmp_path):
+    p = tmp_path / "coverage.xml"
+    p.write_text(XML)
+    return p
+
+
+def test_subtree_filter_counts_only_matching_files(tmp_path):
+    covered, valid = check_coverage.subtree_coverage(
+        _xml(tmp_path), "src/repro/serve")
+    assert (covered, valid) == (3, 4)          # layers.py excluded
+    covered, valid = check_coverage.subtree_coverage(
+        _xml(tmp_path), "src/repro")
+    assert (covered, valid) == (3, 6)
+
+
+def test_floor_enforced_both_ways(tmp_path):
+    xml = _xml(tmp_path)
+    argv = ["--xml", str(xml), "--path", "src/repro/serve"]
+    assert check_coverage.main(argv + ["--floor", "0.70"]) == 0   # 75%
+    assert check_coverage.main(argv + ["--floor", "0.80"]) == 1
+
+
+def test_operational_errors(tmp_path):
+    missing = tmp_path / "nope.xml"
+    assert check_coverage.main(["--xml", str(missing)]) == 2
+    xml = _xml(tmp_path)
+    assert check_coverage.main(
+        ["--xml", str(xml), "--path", "src/elsewhere"]) == 2

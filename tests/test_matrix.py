@@ -1,0 +1,98 @@
+"""Cross-layout exactness matrix: ONE parameterized sweep pinning every
+serving configuration to the same oracle.
+
+{dense, paged, paged+prefix-cache} x {spec_k 0, 2} x {prune 0.0, 0.5}
+must all emit BYTE-IDENTICAL greedy streams to the isolated whole-
+prompt reference — layouts and speculative decoding change WHEN tokens
+are computed and WHERE their K/V lives, never WHICH tokens come out.
+This supersedes the ad-hoc per-feature exactness tests that used to be
+scattered across test_serve/test_paged/test_spec (kept there as thin
+wrappers over ``run_layout_case``).
+
+The prefix-cache layout runs its trace TWICE through one engine: the
+cold pass fills the trie, the warm replay must hit it (every request
+resumes past cached pages) and still match the oracle token-for-token.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import clover_decompose, clover_prune
+from repro.models import init_lm_params
+from repro.serve import Engine, EngineConfig, Request, greedy_reference
+
+LAYOUTS = ("dense", "paged", "prefix")
+SPEC_KS = (0, 2)
+PRUNES = (0.0, 0.5)
+MAX_NEW = 4
+
+
+@functools.lru_cache(maxsize=None)
+def _pruned_model(prune: float):
+    cfg = get_config("musicgen-large").reduced()
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    if prune > 0:
+        dp, dcfg, _ = clover_decompose(params, cfg, peft=False)
+        params, cfg = clover_prune(dp, dcfg, qk_ratio=prune,
+                                   vo_ratio=prune)
+    return params, cfg
+
+
+@functools.lru_cache(maxsize=None)
+def _trace(prune: float):
+    """Mixed-length prompts sharing a common prefix (so the prefix
+    layout gets real hits): sub-chunk, multi-chunk and page-aligned
+    lengths all appear.  Returns (prompts, reference streams)."""
+    _, cfg = _pruned_model(prune)
+    sys_p = (np.arange(8, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    rng = np.random.default_rng(42)
+    tails = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+             for n in (2, 5, 8)]
+    prompts = ([np.concatenate([sys_p, t]) for t in tails]
+               + [rng.integers(0, cfg.vocab_size, 3).astype(np.int32)])
+    params, cfg = _pruned_model(prune)
+    refs = [greedy_reference(params, cfg, p, MAX_NEW) for p in prompts]
+    return tuple(map(tuple, (tuple(p) for p in prompts))), tuple(
+        map(tuple, refs))
+
+
+def run_layout_case(layout: str, spec_k: int, prune: float):
+    """Run one matrix cell and assert stream identity vs the oracle.
+    Returns the engine for wrapper tests that check extra properties."""
+    params, cfg = _pruned_model(prune)
+    prompts_t, refs = _trace(prune)
+    prompts = [np.asarray(p, np.int32) for p in prompts_t]
+    ecfg = EngineConfig(slots=2, max_len=32, prefill_chunk=4,
+                        spec_k=spec_k, draft_rank_ratio=0.5,
+                        paged=(layout != "dense"),
+                        page_tokens=4,
+                        prefix_cache=(layout == "prefix"))
+    eng = Engine(params, cfg, ecfg)
+    passes = 2 if layout == "prefix" else 1
+    for pass_i in range(passes):
+        reqs = [Request(uid=100 * pass_i + i, prompt=p,
+                        max_new_tokens=MAX_NEW)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        for r, want in zip(reqs, refs):
+            assert r.done and tuple(r.generated) == want, \
+                (layout, spec_k, prune, pass_i, r.uid)
+        if layout == "prefix" and pass_i == 1:
+            # the warm replay really did resume past cached pages
+            assert all(r.cached_tokens > 0 for r in reqs[:-1])
+    return eng
+
+
+@pytest.mark.parametrize("prune", PRUNES)
+@pytest.mark.parametrize("spec_k", SPEC_KS)
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_layout_exactness_matrix(layout, spec_k, prune):
+    eng = run_layout_case(layout, spec_k, prune)
+    # the compile contract survives every cell: 2 base shapes, +1 page
+    # copy once a COW fired, +2 with speculation
+    budget = 2 + (1 if layout == "prefix" else 0) + (2 if spec_k else 0)
+    shapes = eng.compiled_shapes()
+    assert shapes is None or 2 <= shapes <= budget

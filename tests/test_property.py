@@ -11,6 +11,8 @@ pytest.importorskip(
     reason="property tests need hypothesis (requirements-dev.txt); "
            "minimal installs skip them instead of failing collection")
 from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine, invariant, rule)
 
 from repro.configs import get_config
 from repro.core import svd_lowrank_product, snap_rank
@@ -20,12 +22,15 @@ from repro.models import init_lm_params
 from repro.optim import warmup_cosine
 from repro.serve import Engine, EngineConfig, PageAllocator, Request
 
-SET = dict(max_examples=20, deadline=None)
+from pool_model import PoolLifecycle  # noqa: E402  (tests/pool_model.py)
+
+# example counts / deadlines come from the named profiles registered in
+# conftest.py ("dev" default, "ci" in the CI slow leg) — only tests
+# that put a MODEL in the loop pin their own small max_examples
 
 
 @given(m=st.integers(8, 64), n=st.integers(8, 64), d=st.integers(1, 8),
        seed=st.integers(0, 2**16))
-@settings(**SET)
 def test_qr_trick_svd_reconstructs(m, n, d, seed):
     """svd_lowrank_product(A, B) == SVD of A@B.T for ANY shapes d<=min."""
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
@@ -39,7 +44,6 @@ def test_qr_trick_svd_reconstructs(m, n, d, seed):
 
 
 @given(m=st.integers(8, 96), d=st.integers(1, 16), seed=st.integers(0, 99))
-@settings(**SET)
 def test_svd_tall_orthonormal(m, d, seed):
     if m < d:
         m = d
@@ -52,7 +56,6 @@ def test_svd_tall_orthonormal(m, d, seed):
 
 @given(r=st.integers(1, 256), mult=st.sampled_from([1, 8, 16]),
        d=st.sampled_from([64, 80, 128]))
-@settings(**SET)
 def test_snap_rank_invariants(r, mult, d):
     s = snap_rank(r, mult, d)
     assert 1 <= s <= d
@@ -82,7 +85,6 @@ def test_flash_attention_property(B, S, H, G, dq, dv, seed):
 
 @given(warmup=st.integers(1, 50), total=st.integers(60, 500),
        step=st.integers(0, 499))
-@settings(**SET)
 def test_schedule_bounded(warmup, total, step):
     v = float(warmup_cosine(jnp.asarray(step), warmup=warmup, total=total))
     assert 0.0 <= v <= 1.0 + 1e-6
@@ -93,7 +95,6 @@ def test_schedule_bounded(warmup, total, step):
        ops_seq=st.lists(st.tuples(st.sampled_from(["ensure", "release"]),
                                   st.integers(0, 3), st.integers(0, 64)),
                         max_size=40))
-@settings(**SET)
 def test_page_allocator_invariants(n_pages, page_tokens, slots, ops_seq):
     """Arbitrary ensure/release interleavings never double-allocate a
     page, always return freed pages, and keep capacity accounting
@@ -121,6 +122,67 @@ def test_page_allocator_invariants(n_pages, page_tokens, slots, ops_seq):
         assert set(allocated).isdisjoint(a.free_list)
         assert len(allocated) + a.free_pages == a.n_pages   # exact accounting
         assert a.sentinel not in allocated
+
+
+class PrefixPoolMachine(RuleBasedStateMachine):
+    """Random admit / match / COW-write / preempt / retire / evict
+    interleavings over the REAL ``PageAllocator`` + ``PrefixCache``
+    (the shared ``PoolLifecycle`` driver — tests/pool_model.py —
+    mirrors serve.engine's host-side sequence lifecycle).  Tokens come
+    from a tiny alphabet so prefixes collide constantly — maximal
+    sharing stress.  ``PoolLifecycle.check`` asserts after every rule:
+    refcounts match the actual reference multiset (and are >= 0), no
+    page is both free and mapped, no double-free, every trie node's
+    page is refcounted, and pool conservation (free + unique
+    mapped-or-indexed == n_pages)."""
+
+    def __init__(self):
+        super().__init__()
+        self.pool = PoolLifecycle()
+
+    @rule(data=st.data())
+    def admit(self, data):
+        free = self.pool.free_slots()
+        if not free:
+            return
+        L = data.draw(st.integers(1, self.pool.table * self.pool.pt - 8))
+        toks = data.draw(st.lists(st.integers(0, 2),
+                                  min_size=L, max_size=L))
+        self.pool.admit(free[0], toks)
+
+    @rule(data=st.data())
+    def cow_write(self, data):
+        active = self.pool.active_slots()
+        if not active:
+            return
+        s = data.draw(st.sampled_from(active))
+        take = data.draw(st.integers(1, 6))
+        grow = data.draw(st.lists(st.integers(0, 2),
+                                  min_size=take, max_size=take))
+        self.pool.write(s, take, np.asarray(grow, np.int32))
+
+    @rule(data=st.data())
+    def preempt_or_retire(self, data):
+        """Preemption and retirement are the SAME pool transaction
+        (publish committed full pages, decref everything) — one rule
+        covers both lifecycle exits."""
+        active = self.pool.active_slots()
+        if active:
+            self.pool.close(data.draw(st.sampled_from(active)))
+
+    @rule(n=st.integers(1, 4))
+    def evict(self, n):
+        self.pool.evict(n)
+
+    @invariant()
+    def invariants_hold(self):
+        self.pool.check()
+
+
+TestPrefixPoolMachine = PrefixPoolMachine.TestCase
+# the CI slow leg runs this under the "ci" hypothesis profile
+# (HYPOTHESIS_PROFILE=ci: >= 200 examples); locally "dev" keeps it fast
+TestPrefixPoolMachine.pytestmark = [pytest.mark.slow]
 
 
 @functools.lru_cache(maxsize=1)

@@ -1,0 +1,89 @@
+"""Coverage floor gate: fail CI when line coverage of a source subtree
+drops below a floor.
+
+Reads a Cobertura ``coverage.xml`` (what ``pytest --cov --cov-report=
+xml`` emits), aggregates line hits over every file whose path starts
+with ``--path``, and exits non-zero below ``--floor``.  Used by CI to
+hold ``src/repro/serve/`` at its pre-prefix-cache coverage so the new
+allocator / trie / COW paths cannot land untested.
+
+Usage::
+
+    pytest --cov=repro --cov-report=xml
+    python tools/check_coverage.py --xml coverage.xml \
+        --path src/repro/serve --floor 0.85
+
+The floor can also come from the ``COVERAGE_FLOOR`` environment
+variable.  Exit codes: 0 ok, 1 below floor, 2 operational error
+(missing file / no matching sources).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import xml.etree.ElementTree as ET
+from pathlib import Path
+from typing import Tuple
+
+
+def subtree_coverage(xml_path: Path, prefix: str) -> Tuple[int, int]:
+    """(covered, valid) line counts over files under ``prefix``.
+
+    Cobertura <class filename=...> entries are relative to one of the
+    report's <source> roots; match on the filename joined with each
+    source root as well as bare, so both absolute-ish and package-
+    relative layouts work.
+    """
+    root = ET.parse(xml_path).getroot()
+    sources = [s.text or "" for s in root.iter("source")]
+    prefix = prefix.rstrip("/")
+    covered = valid = 0
+
+    def under(c: str) -> bool:
+        # segment-anchored: the prefix must be a whole path-segment run
+        # ("src/repro/serve" never matches "mysrc/repro/serve2/x.py")
+        c = c.replace("\\", "/")
+        return (c == prefix or c.startswith(prefix + "/")
+                or f"/{prefix}/" in c)
+
+    for cls in root.iter("class"):
+        fname = cls.get("filename", "")
+        candidates = [fname] + [str(Path(s) / fname) for s in sources]
+        if not any(under(c) for c in candidates):
+            continue
+        for line in cls.iter("line"):
+            valid += 1
+            if int(line.get("hits", "0")) > 0:
+                covered += 1
+    return covered, valid
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--xml", type=Path, default=Path("coverage.xml"))
+    ap.add_argument("--path", default="src/repro/serve",
+                    help="source subtree the floor applies to")
+    ap.add_argument("--floor", type=float, default=float(
+        os.environ.get("COVERAGE_FLOOR", "0.85")),
+        help="minimum line-coverage fraction (default 0.85)")
+    args = ap.parse_args(argv)
+
+    if not args.xml.exists():
+        print(f"coverage gate: {args.xml} not found (run pytest with "
+              "--cov=repro --cov-report=xml first)")
+        return 2
+    covered, valid = subtree_coverage(args.xml, args.path)
+    if valid == 0:
+        print(f"coverage gate: no lines under '{args.path}' in "
+              f"{args.xml} — path filter or report layout drifted")
+        return 2
+    rate = covered / valid
+    status = "OK" if rate >= args.floor else "BELOW FLOOR"
+    print(f"coverage gate [{args.path}]: {covered}/{valid} lines = "
+          f"{rate:.1%} (floor {args.floor:.0%}) — {status}")
+    return 0 if rate >= args.floor else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
