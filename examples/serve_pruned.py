@@ -17,10 +17,19 @@ PREFIX-CACHED paged engine (DESIGN.md §9): the warm replay maps the
 cached prompt pages read-only, skips their prefill chunks and still
 matches the cold streams exactly.
 
+With ``--tp N`` the paged trace is replayed once more through the
+rank-balanced ShardedExecutor (DESIGN.md §10): params and KV page
+pools shard along heads over a ("data", "model") host mesh, the
+head -> shard assignment planned so every shard carries ~equal pruned
+FLOPs/bytes, and the streams must again be token-identical.
+
 Run:  PYTHONPATH=src python examples/serve_pruned.py
       PYTHONPATH=src python examples/serve_pruned.py --spec-k 4
+      XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+          PYTHONPATH=src python examples/serve_pruned.py --tp 2
 """
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -40,6 +49,11 @@ def main():
                     help="fraction of every head's current rank the "
                          "draft slices off (0.0 = draft is the exact "
                          "model)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree for the sharded "
+                         "replay (must divide jax.device_count(); on "
+                         "CPU export XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N first)")
     args = ap.parse_args()
     cfg = get_config("musicgen-large").reduced()
     params = init_lm_params(cfg, jax.random.PRNGKey(0))
@@ -103,6 +117,42 @@ def main():
               f"{es.accepted_per_round:.2f} accepted tokens/step "
               f"(hist {dict(sorted(es.accept_hist.items()))}, "
               f"{es.compiled_shapes()} compiled step shapes)")
+
+    # rank-balanced tensor-parallel replay (DESIGN.md §10): the SAME
+    # paged trace through the ShardedExecutor — params and page pools
+    # sharded along heads, streams still token-identical, and the page
+    # pool's bytes split ~evenly across shards by the rank-balanced
+    # head partition
+    if args.tp > 1:
+        if jax.device_count() % args.tp != 0:
+            print(f"--tp {args.tp}: skipped — needs a device count "
+                  f"divisible by {args.tp} (have {jax.device_count()}; "
+                  "export XLA_FLAGS=--xla_force_host_platform_device_"
+                  "count=4)")
+        else:
+            et = Engine(pparams, pcfg,
+                        dataclasses.replace(
+                            EngineConfig(slots=4, max_len=96,
+                                         prefill_chunk=8, paged=True,
+                                         page_tokens=8, n_pages=8),
+                            tp=args.tp))
+            reqs_t = [Request(uid=r.uid, prompt=r.prompt,
+                              max_new_tokens=r.max_new_tokens)
+                      for r in reqs]
+            et.run(reqs_t)
+            match = all(a.generated == b.generated
+                        for a, b in zip(reqs, reqs_t))
+            plan = et.exe.plan
+            print(f"tensor-parallel replay (tp={args.tp}): match={match} "
+                  f"({et.compiled_shapes()} compiled step shapes, "
+                  f"{et.sched.preemptions} preemptions)")
+            used = et.alloc.used_pages()
+            for s, frac in enumerate(et.exe.shard_load_fractions()):
+                heads = plan.kv_assign[s] if plan is not None else "all"
+                print(f"  shard {s}: kv heads {heads} — "
+                      f"{et.peak_page_util:.0%} of pool pages at peak, "
+                      f"{frac:.0%} of pooled KV bytes "
+                      f"({used} pages mapped now)")
 
     # prefix caching: a batch sharing one system prompt, served twice
     # on the same engine — the warm pass hits the trie, skips the

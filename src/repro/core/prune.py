@@ -20,10 +20,11 @@ applicability so comparisons are apples-to-apples.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig, MIXER_ATTN
 from repro.core.decompose import qk_mode
@@ -252,3 +253,207 @@ def threshold_ratios(extras, cfg: ArchConfig, *,
         "qk_ratio": 1.0 - qk_keep / d_qk if mode != "intra" else 0.0,
         "vo_ratio": 1.0 - vo_keep / d,
     }
+
+
+# ---------------------------------------------------------------------------
+# Rank-balanced head partitioning (tensor-parallel serving, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# CLOVER's per-head Q-K / V-O pruning can leave heads with HETEROGENEOUS
+# ranks (threshold planning keeps a different number of directions per
+# head before the uniform snap), so a naive even head split hands some
+# model shards more pruned FLOPs/bytes than others and the slowest shard
+# sets the step time.  The partition below plans the head -> shard
+# assignment explicitly: equal head COUNTS per shard (SPMD needs equal
+# array slices) with the per-head rank LOADS bin-packed so every shard
+# carries ~the same pruned work.  Heads are assigned at KV-head
+# granularity — a GQA group's query heads must live with their KV head.
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadPartition:
+    """A head -> shard plan: ``kv_assign[s]`` is the tuple of kv-head
+    ids shard ``s`` owns (each shard owns exactly ``KV / n_shards``).
+    Realized by PERMUTING the head axes so shard ``s`` holds the
+    contiguous slice ``[s*per : (s+1)*per]`` — attention is a sum over
+    heads, so a consistent permutation of wq/wk/wv/wo (and the cache
+    written through them) is exact."""
+    n_shards: int
+    group: int                                # query heads per kv head
+    kv_assign: Tuple[Tuple[int, ...], ...]
+    loads: Tuple[float, ...]                  # per-shard rank load
+
+    @property
+    def kv_perm(self) -> Tuple[int, ...]:
+        """KV-head permutation: new position -> old kv-head id."""
+        return tuple(h for shard in self.kv_assign for h in shard)
+
+    @property
+    def q_perm(self) -> Tuple[int, ...]:
+        """Query-head permutation implied by ``kv_perm`` (GQA groups
+        move with their kv head)."""
+        return tuple(kv * self.group + g for kv in self.kv_perm
+                     for g in range(self.group))
+
+    @property
+    def identity(self) -> bool:
+        return self.kv_perm == tuple(range(len(self.kv_perm)))
+
+    @property
+    def balance(self) -> float:
+        """max/min per-shard rank load (1.0 = perfectly balanced)."""
+        lo = min(self.loads)
+        return float(max(self.loads)) / float(lo) if lo > 0 else float("inf")
+
+    def salt(self) -> Tuple:
+        """Folds the plan into cache keys (the prefix trie's salt):
+        pages written under a different head layout must never alias."""
+        return ("tp", self.n_shards, self.group) + self.kv_perm
+
+
+def head_rank_loads(cfg: ArchConfig,
+                    qk_ranks: Optional[Sequence[int]] = None,
+                    vo_ranks: Optional[Sequence[int]] = None) -> np.ndarray:
+    """(KV,) per-kv-head rank load: cached bytes AND attention FLOPs per
+    token both scale with ``r_qk + r_vo``.  Defaults to the config's
+    uniform CLOVER plan; pass per-head rank vectors (e.g. from
+    threshold spectra) for a heterogeneous plan."""
+    kv = cfg.n_kv_heads
+    if qk_ranks is None:
+        qk_ranks = [cfg.qk_dim] * kv
+    if vo_ranks is None:
+        vo_ranks = [cfg.vo_dim] * kv
+    qk = np.asarray(qk_ranks, np.float64)
+    vo = np.asarray(vo_ranks, np.float64)
+    assert qk.shape == (kv,) and vo.shape == (kv,), (qk.shape, vo.shape, kv)
+    return qk + vo
+
+
+def rank_balanced_partition(loads: Sequence[float], n_shards: int,
+                            group: int = 1) -> HeadPartition:
+    """Greedy LPT bin-packing of per-kv-head loads into ``n_shards``
+    equal-cardinality bins.
+
+    Heads sorted by descending load each go to the least-loaded bin
+    that still has a free slot (ties: lowest bin index, then lowest
+    head id — fully deterministic).  Equal cardinality is an SPMD
+    constraint, not a heuristic: every shard's array slice must have
+    the same extent.  All-equal loads short-circuit to the contiguous
+    identity split so the uniform-rank serving path keeps the exact
+    head order (and FP summation order) of the unsharded model.
+    """
+    loads = [float(x) for x in loads]
+    H = len(loads)
+    if n_shards < 1 or H % n_shards != 0:
+        raise ValueError(
+            f"{H} kv heads do not split over {n_shards} shards: the "
+            "tensor-parallel degree must divide the kv-head count")
+    per = H // n_shards
+    if len(set(loads)) <= 1:          # uniform ranks: identity split
+        assign = tuple(tuple(range(s * per, (s + 1) * per))
+                       for s in range(n_shards))
+        return HeadPartition(n_shards, group, assign,
+                             tuple(sum(loads[s * per:(s + 1) * per])
+                                   for s in range(n_shards)))
+    bins: list = [[] for _ in range(n_shards)]
+    totals = [0.0] * n_shards
+    order = sorted(range(H), key=lambda h: (-loads[h], h))
+    for h in order:
+        s = min((s for s in range(n_shards) if len(bins[s]) < per),
+                key=lambda s: (totals[s], s))
+        bins[s].append(h)
+        totals[s] += loads[h]
+    return HeadPartition(n_shards, group,
+                         tuple(tuple(sorted(b)) for b in bins),
+                         tuple(totals))
+
+
+def _permute_axis(leaf, perm: Tuple[int, ...], axis_from_end: int):
+    idx = jnp.asarray(perm, jnp.int32)
+    return jnp.take(leaf, idx, axis=leaf.ndim - axis_from_end)
+
+
+def permute_attention_heads(params: Params, cfg: ArchConfig,
+                            plan: HeadPartition) -> Params:
+    """Reorder every attention block's head axes by ``plan`` so shard
+    ``s`` owns the contiguous head slice the partition assigned it.
+    Works on stacked params (leading ``n_blocks`` axis) via
+    end-relative axis indexing.  Exact: attention sums over heads and
+    each head's factors move together (wq/wo by ``q_perm``; wk/wv/k_t
+    by ``kv_perm``; s_qk/s_vo by ``q_perm``).  The KV cache needs no
+    permutation — it starts empty and is only ever written through the
+    permuted projections."""
+    if plan.identity:
+        return params
+    q_perm, kv_perm = plan.q_perm, plan.kv_perm
+    # leaf name -> (perm, head axis counted from the END of the shape)
+    moves = {"wq": (q_perm, 2), "wk": (kv_perm, 2), "wv": (kv_perm, 2),
+             "wo": (q_perm, 3), "s_qk": (q_perm, 3), "s_vo": (q_perm, 3),
+             "k_t": (kv_perm, 3)}
+    new_blocks = []
+    for j, (mixer, mlp) in enumerate(cfg.pattern):
+        stacked = dict(params["blocks"][j])
+        if mixer == MIXER_ATTN:
+            attn = dict(stacked["attn"])
+            for name, (perm, ax) in moves.items():
+                if name in attn:
+                    attn[name] = _permute_axis(attn[name], perm, ax)
+            stacked["attn"] = attn
+        new_blocks.append(stacked)
+    out = dict(params)
+    out["blocks"] = tuple(new_blocks)
+    return out
+
+
+def mask_head_ranks(params: Params, cfg: ArchConfig,
+                    qk_ranks: Sequence[int],
+                    vo_ranks: Sequence[int]) -> Params:
+    """RAGGED per-head ranks, realized as zero-padding: head ``h``
+    keeps its leading ``qk_ranks[h]`` / ``vo_ranks[h]`` directions and
+    the tail up to the (uniform) array width is zeroed in every factor
+    that touches it.  Zeroed rank dims contribute exactly 0 to the
+    Q·K logits and to the V·O context — the padded model is BITWISE
+    the per-head-truncated model, while all shapes stay static (the
+    rank analogue of the paged pool's garbage-row convention: padding
+    exists physically but can never influence a result).  This is what
+    lets shards carry heads of different ranks through ONE compiled
+    step shape per parallelism degree."""
+    kv = cfg.n_kv_heads
+    G = cfg.q_per_kv
+    qk = np.asarray(qk_ranks, np.int64)
+    vo = np.asarray(vo_ranks, np.int64)
+    assert qk.shape == (kv,) and vo.shape == (kv,), (qk.shape, vo.shape)
+
+    def rank_mask(ranks_per_head, width, per_q: bool):
+        r = np.repeat(ranks_per_head, G) if per_q else ranks_per_head
+        return jnp.asarray(np.arange(width)[None, :] < r[:, None])
+
+    new_blocks = []
+    for j, (mixer, mlp) in enumerate(cfg.pattern):
+        stacked = dict(params["blocks"][j])
+        if mixer == MIXER_ATTN:
+            attn = dict(stacked["attn"])
+            dq = attn["wq"].shape[-1]
+            dv = attn["wv"].shape[-1]
+            mq = rank_mask(qk, dq, True)          # (H, dq)
+            mk = rank_mask(qk, dq, False)         # (KV, dq)
+            mv = rank_mask(vo, dv, False)         # (KV, dv)
+            mo = rank_mask(vo, dv, True)          # (H, dv)
+            attn["wq"] = attn["wq"] * mq
+            attn["wk"] = attn["wk"] * mk
+            attn["wv"] = attn["wv"] * mv
+            attn["wo"] = attn["wo"] * mo[..., :, :, None]
+            if "s_qk" in attn:                    # rows AND cols masked
+                attn["s_qk"] = (attn["s_qk"] * mq[..., :, :, None]
+                                * mq[..., :, None, :])
+            if "k_t" in attn:
+                attn["k_t"] = (attn["k_t"] * mk[..., :, :, None]
+                               * mk[..., :, None, :])
+            if "s_vo" in attn:
+                attn["s_vo"] = (attn["s_vo"] * mv[..., :, :, None]
+                                * mv[..., :, None, :])
+            stacked["attn"] = attn
+        new_blocks.append(stacked)
+    out = dict(params)
+    out["blocks"] = tuple(new_blocks)
+    return out

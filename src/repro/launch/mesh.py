@@ -30,10 +30,28 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
 
 
 def make_host_mesh(data: Optional[int] = None, model: int = 1):
-    """Mesh over whatever devices exist (CPU tests: usually (1, 1))."""
+    """Mesh over whatever devices exist (CPU tests: usually (1, 1)).
+
+    ``model`` must divide ``jax.device_count()`` (and ``data * model``
+    must consume exactly the available devices when ``data`` is given)
+    — otherwise ``jax.make_mesh`` dies deep inside a reshape with no
+    hint of which axis is wrong, so validate here and say so.
+    """
     n = jax.device_count()
+    if model < 1:
+        raise ValueError(f"model axis must be >= 1, got {model}")
+    if n % model != 0:
+        raise ValueError(
+            f"model={model} does not divide jax.device_count()={n}; "
+            f"pick a tensor-parallel degree from the divisors of {n} "
+            "(CPU tests: export XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N first)")
     if data is None:
         data = n // model
+    if data * model != n:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {data * model} devices but "
+            f"jax.device_count()={n}")
     return jax.make_mesh((data, model), ("data", "model"))
 
 

@@ -1,3 +1,4 @@
 """Distribution: sharding rules, gradient compression, pipeline parallelism."""
 from repro.parallel.sharding import (  # noqa: F401
-    param_specs, data_specs, decode_state_specs, opt_specs, ShardingRules)
+    param_specs, data_specs, decode_state_specs, opt_specs, ShardingRules,
+    serve_rules, serve_state_specs)

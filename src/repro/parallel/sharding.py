@@ -226,6 +226,75 @@ def decode_state_specs(state: Params, mesh: Mesh,
     return jax.tree_util.tree_map_with_path(visit, state)
 
 
+def serve_rules() -> ShardingRules:
+    """Logical->mesh map for the SERVING path (DESIGN.md §10).
+
+    Training FSDP-shards weight d_model over "data"; a serving step is
+    latency-bound and its weights are read every step, so here "data"
+    carries only the slot batch and weights replicate across it.  Heads
+    / ff / experts / vocab shard over "model" (tensor parallel), and —
+    unlike the training decode rules — the KV cache shards along its
+    KV-HEAD axis, not the sequence: with CLOVER's per-head rank plan
+    the head axis is where bytes and FLOPs live, and the rank-balanced
+    head partition (core/prune.rank_balanced_partition) equalizes them
+    per shard.  KV_SEQ stays unsharded: page ids are host-global (one
+    ``PageAllocator``), every shard holds the same page rows for its
+    own heads.
+    """
+    return ShardingRules(rules={
+        BATCH: "data",
+        EMBED: None,
+        HEADS: "model",
+        KV_HEADS: "model",
+        FF: "model",
+        EXPERTS: "model",
+        VOCAB: "model",
+        KV_SEQ: None,
+    })
+
+
+def serve_state_specs(state: Params, mesh: Mesh, *, paged: bool,
+                      rules: Optional[ShardingRules] = None) -> Params:
+    """PartitionSpec tree for the serving engine's decode state.
+
+    KV leaves shard along the KV-HEAD axis (axis -2 in both layouts:
+    dense ``(nb, B, T, KV, r)`` and paged ``(nb, n_pages+1, PT, KV,
+    r)``); the dense layout additionally shards slots over "data".  The
+    paged pool's page-row axis is replicated — page ids are global, the
+    host-side allocator/trie address the same rows on every shard.
+    Recurrent (mamba/rwkv) leaves shard only their slot axis over
+    "data" (their inner dims replicate across "model" — O(1) per
+    token, not worth a collective); the index vector replicates.
+    """
+    rules = rules or serve_rules()
+
+    def visit(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        if getattr(path[-1], "key", "") == "index":
+            return P()
+        if "kv" in names:
+            axes = ((None, None, None, KV_HEADS, None) if paged
+                    else (None, BATCH, None, KV_HEADS, None))
+        else:
+            axes = (None, BATCH) + (None,) * (leaf.ndim - 2)
+        axes = tuple(axes)[:leaf.ndim]
+        axes = axes + (None,) * (leaf.ndim - len(axes))
+        # normalize to jax's canonical form (size-1 mesh axes and
+        # trailing Nones dropped) so the init placement is the SAME jit
+        # cache key as the constrained step outputs — a cosmetic spec
+        # difference would silently double every compiled shape
+        def extent(m):
+            return (math.prod(mesh.shape[a] for a in m)
+                    if isinstance(m, tuple) else mesh.shape[m])
+        spec = tuple(m if m is None or extent(m) > 1 else None
+                     for m in rules.spec(axes, leaf.shape, mesh))
+        while spec and spec[-1] is None:
+            spec = spec[:-1]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, state)
+
+
 def opt_specs(param_spec_tree: Params) -> Params:
     """Optimizer moments inherit the param sharding; scalars replicate."""
     return param_spec_tree

@@ -1,5 +1,21 @@
 """Serving: batched engine over (optionally paged) CLOVER-rank KV
-caches with copy-on-write prefix caching."""
-from repro.serve.engine import (  # noqa: F401
-    Engine, EngineConfig, PageAllocator, PrefixCache, Request, Scheduler,
-    greedy_reference)
+caches with copy-on-write prefix caching and rank-balanced tensor
+parallelism.
+
+Package layout (DESIGN.md §10):
+  * ``config``    — ``EngineConfig``
+  * ``memory``    — ``PageAllocator``, ``PrefixCache`` (host-global)
+  * ``scheduler`` — ``Request``, ``Scheduler``, slot phases
+  * ``executor``  — ``Executor`` protocol, ``LocalExecutor``,
+    ``ShardedExecutor`` (compiled entries + device placement)
+  * ``engine``    — ``Engine`` orchestration, ``greedy_reference``
+
+The names below are compatibility re-exports: ``from repro.serve
+import Engine, PageAllocator, ...`` keeps working across the split.
+"""
+from repro.serve.config import EngineConfig  # noqa: F401
+from repro.serve.engine import Engine, greedy_reference  # noqa: F401
+from repro.serve.executor import (  # noqa: F401
+    Executor, LocalExecutor, ShardedExecutor)
+from repro.serve.memory import PageAllocator, PrefixCache  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401

@@ -1,0 +1,94 @@
+"""Engine configuration — the one dataclass every serve module reads.
+
+Lives in its own module so ``memory`` / ``scheduler`` / ``executor`` /
+``engine`` can all import it without cycles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    slots: int = 4                      # concurrent sequences
+    max_len: int = 512                  # KV capacity per slot
+    eos_id: int = -1                    # -1: never stop on token
+    prefill_chunk: int = 64             # prompt tokens consumed per chunk step
+    # -- paged KV cache (DESIGN.md §6) --------------------------------
+    paged: bool = False                 # page the KV cache
+    page_tokens: int = 8                # tokens per KV page
+    # pool size in pages; 0 -> slots * ceil(capacity / page_tokens),
+    # i.e. no memory pressure (every slot can reach full capacity).
+    # Size it below that to overcommit: admission then gates on free
+    # pages and exhaustion preempts the youngest sequence.
+    n_pages: int = 0
+    # -- automatic prefix caching (DESIGN.md §9, requires paged) ------
+    # share KV pages across requests with a common page-aligned token
+    # prefix (system prompts, few-shot templates, replayed chats): a
+    # host-side trie indexes retired/prefilled full-page runs, admission
+    # maps hits read-only and skips their prefill chunks, and writes
+    # into a shared page copy-on-write it first (kernels/page_copy.py).
+    # Attention-only architectures only (recurrent state is not
+    # page-addressable).
+    prefix_cache: bool = False
+    # -- self-speculative decoding (DESIGN.md §8) ---------------------
+    # 0 disables; k > 0: every pure-decode step, a rank-sliced DRAFT
+    # pass over the SAME weights proposes k tokens per slot and one
+    # (slots, k+1) verify step accepts a greedy prefix — up to k+1
+    # tokens per step instead of 1.  Greedy streams stay exactly
+    # token-identical to the non-speculative engine; requires an
+    # attention-only architecture (recurrent state cannot roll back).
+    spec_k: int = 0
+    # fraction of every head's CURRENT rank the draft slices off (the
+    # leading directions are kept — CLOVER's factors are sorted, so the
+    # draft's cache view is literally cache[..., :r]; no second cache)
+    draft_rank_ratio: float = 0.5
+    # -- rank-balanced tensor parallelism (DESIGN.md §10) -------------
+    # > 1 selects the ShardedExecutor: params and KV/page pools shard
+    # along heads over a ("data", "model") host mesh with model=tp,
+    # the head -> shard assignment planned by
+    # ``core.prune.rank_balanced_partition`` so every shard carries
+    # ~equal pruned FLOPs/bytes.  tp must divide jax.device_count()
+    # (CPU tests: XLA_FLAGS=--xla_force_host_platform_device_count=N).
+    # Greedy streams are token-identical to tp=1; scheduling is
+    # unchanged (parallelism never alters WHICH tokens are computed).
+    tp: int = 1
+
+    @property
+    def chunk(self) -> int:
+        """Effective chunk size — the ONE clamp both the Scheduler's
+        planning and the Engine's capacity/page-table sizing use."""
+        return max(1, min(self.prefill_chunk, self.max_len))
+
+    @property
+    def spec_window(self) -> int:
+        """Verify-step window width (pending token + k drafts)."""
+        return self.spec_k + 1
+
+    @property
+    def capacity(self) -> int:
+        """Per-slot KV capacity: max_len rounded up to a chunk multiple
+        PLUS spare room, so every window write [index, index+W) with
+        index <= max_len stays in bounds — dense dynamic_update_slice
+        never clamps (a clamped write would shift backwards over valid
+        history) and paged position->page lookups never fall off the
+        table.  W is the chunk size or, with speculation on, the
+        (k+1)-wide verify window whose rejected tail transiently
+        overhangs the committed length.  The spare tail is beyond every
+        causal horizon, hence never readable."""
+        C = self.chunk
+        spare = max(C, self.spec_window if self.spec_k > 0 else 1)
+        return ((self.max_len + C - 1) // C * C
+                + (spare + C - 1) // C * C)
+
+    @property
+    def table_pages(self) -> int:
+        """Static per-slot page-table width (paged mode)."""
+        pt = self.page_tokens
+        return (self.capacity + pt - 1) // pt
+
+    @property
+    def pool_pages(self) -> int:
+        """Resolved pool size: ``n_pages``, or the no-pressure default
+        where every slot can reach full capacity."""
+        return self.n_pages or self.slots * self.table_pages

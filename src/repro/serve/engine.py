@@ -1,708 +1,50 @@
-"""Chunked-prefill continuous batching over CLOVER-rank KV caches.
+"""Engine: chunked-prefill continuous batching over CLOVER-rank KV
+caches — the ORCHESTRATOR of the serve package.
 
-The engine owns one decode-state tree (KV caches at the pruned ranks
-r_qk/r_vo — the paper's memory win applies to every cached token) with a
-fixed number of slots.  Each engine step every slot is either decoding
-one token or consuming a fixed-size CHUNK of its prompt, so prefill
-interleaves with decode instead of stalling it, and the whole engine
-compiles exactly TWO step shapes regardless of the prompt-length mix:
+Each engine step every slot is either decoding one token or consuming a
+fixed-size chunk of its prompt, so prefill interleaves with decode and
+the engine compiles exactly TWO step shapes regardless of the
+prompt-length mix (plus two with speculation, plus one once a
+copy-on-write page clone fires).  The division of labor:
 
-  * chunk step  — (slots, C) tokens with per-slot valid lengths; each
-    slot writes its window into its caches at its own offset.  Decoding
-    slots ride along with length 1 (a chunk step of one valid token IS a
-    decode step), so admission never stalls generation.
-  * decode step — (slots,) one token per slot; the cheap shape used
-    whenever no slot has prompt tokens left to chunk.
+  * ``scheduler.Scheduler``  — WHAT happens: admission, phase tracking,
+    chunk planning, preemption, retirement (host numpy).
+  * ``memory.PageAllocator`` / ``memory.PrefixCache`` — WHERE K/V
+    lives: refcounted pages, copy-on-write prefix sharing (host).
+  * ``executor.LocalExecutor`` / ``executor.ShardedExecutor`` — HOW a
+    planned step executes: compiled entries, device placement,
+    donation, tensor parallelism (DESIGN.md §10).  The engine never
+    touches a mesh, a sharding or a jit cache — swap the executor and
+    nothing here changes.
 
-KV layout is either DENSE (``EngineConfig.paged=False``: per-slot
-``(slots, capacity, KV, r)`` caches — every slot reserves full capacity
-regardless of its actual length) or PAGED (``paged=True``: one global
-pool ``(n_pages + 1, page_tokens, KV, r)`` per attention layer plus
-host-side per-slot page tables, managed by ``PageAllocator``).  Paging
-converts CLOVER's bytes-per-token win into CONCURRENCY: smaller rank ->
-more tokens per page -> more resident sequences per HBM byte, so a pool
-sized like a dense ``slots x max_len`` cache admits strictly more
-simultaneous sequences when real lengths are shorter than max_len.
-Admission is gated on free pages (not free slots), sequences grow
-on demand during decode, and on pool exhaustion the YOUNGEST sequence is
-preempted and requeued (its pages freed, its generated tokens folded
-into the effective prompt so the greedy stream continues exactly on
-re-admission) instead of crashing.  Both layouts compile the same two
-step shapes; every paged result is checkable against the dense engine
-token-for-token.
-
-PAGED mode can additionally share pages ACROSS sequences
-(``EngineConfig.prefix_cache``, DESIGN.md §9): a host-side trie
-(``PrefixCache``) indexes full-page runs of finished / prefilled /
-preempted sequences by their page-aligned token prefix, admission maps
-the longest hit read-only into the new slot's table and resumes chunked
-prefill at the first uncached token (TTFT collapses to one step on full
-hits), and any write landing in a shared page copy-on-writes it first
-(``kernels/page_copy.py``) so speculative rollback, preemption and
-chunk padding can never mutate a page another sequence reads.  Because
-CLOVER pruning makes each page denser in tokens, every shared
-system-prompt page multiplies the rank win: the same pool bytes admit
-strictly more concurrent sequences.
-
-Scheduling policy lives in ``Scheduler``: admission from a FIFO queue
-into free slots, per-slot phase tracking (PREFILL -> [TAIL ->] DECODE),
-retirement on eos / max_new_tokens (freeing pages in paged mode).
-Architectures with recurrent state (mamba / rwkv mixers or rwkv
-channel-mix) cannot take padded windows — padding tokens would advance
-their recurrent state — so for those the scheduler only chunks FULL
-windows and feeds the remainder (< C prompt tokens) through decode steps
-(TAIL phase); decoding slots hold during their chunk steps and their
-states are merged back unchanged.
-
-Everything is shape-static and works unchanged on CPU (tests) and under
-a mesh with sharded state.
+KV layout is DENSE (``EngineConfig.paged=False``: per-slot caches) or
+PAGED (one global pool per attention layer + host page tables); paged
+mode optionally shares pages across sequences by page-aligned token
+prefix (``prefix_cache``, DESIGN.md §9) and every pure-decode step can
+run self-speculatively (``spec_k``, DESIGN.md §8).  ``tp > 1`` serves
+the same streams over head-sharded params/pools (DESIGN.md §10).  All
+compositions emit greedy streams token-identical to the isolated
+whole-prompt reference (``greedy_reference``).
 """
 from __future__ import annotations
 
 import collections
 import time
-from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig, MIXER_ATTN, MLP_RWKV
+from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+from repro.serve.config import EngineConfig
+from repro.serve.executor import (Executor, LocalExecutor, ShardedExecutor,
+                                  is_recurrent)
+from repro.serve.memory import PageAllocator, PrefixCache
+from repro.serve.scheduler import Request, Scheduler
 
 Params = Dict[str, Any]
-
-# slot phases
-PREFILL = "prefill"     # prompt tokens remain; consumed chunk-wise
-TAIL = "tail"           # recurrent archs: < C prompt tokens remain,
-                        # fed one-by-one through the decode step
-DECODE = "decode"       # generating one token per engine step
-
-
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                  # (len,) int32
-    max_new_tokens: int = 16
-    temperature: float = 0.0            # 0 = greedy
-    # filled by the engine:
-    generated: List[int] = field(default_factory=list)
-    done: bool = False
-    # prefix-cache hit size at the LAST admission: prompt tokens whose
-    # K/V came from shared pages (their prefill chunks were skipped)
-    cached_tokens: int = 0
-    # serving metrics (monotonic clock): submit time, one stamp per
-    # emitted token (token_times[0] is first-token / end of prefill)
-    t_submit: float = 0.0
-    token_times: List[float] = field(default_factory=list)
-
-
-@dataclass(frozen=True)
-class EngineConfig:
-    slots: int = 4                      # concurrent sequences
-    max_len: int = 512                  # KV capacity per slot
-    eos_id: int = -1                    # -1: never stop on token
-    prefill_chunk: int = 64             # prompt tokens consumed per chunk step
-    # -- paged KV cache (DESIGN.md §6) --------------------------------
-    paged: bool = False                 # page the KV cache
-    page_tokens: int = 8                # tokens per KV page
-    # pool size in pages; 0 -> slots * ceil(capacity / page_tokens),
-    # i.e. no memory pressure (every slot can reach full capacity).
-    # Size it below that to overcommit: admission then gates on free
-    # pages and exhaustion preempts the youngest sequence.
-    n_pages: int = 0
-    # -- automatic prefix caching (DESIGN.md §9, requires paged) ------
-    # share KV pages across requests with a common page-aligned token
-    # prefix (system prompts, few-shot templates, replayed chats): a
-    # host-side trie indexes retired/prefilled full-page runs, admission
-    # maps hits read-only and skips their prefill chunks, and writes
-    # into a shared page copy-on-write it first (kernels/page_copy.py).
-    # Attention-only architectures only (recurrent state is not
-    # page-addressable).
-    prefix_cache: bool = False
-    # -- self-speculative decoding (DESIGN.md §8) ---------------------
-    # 0 disables; k > 0: every pure-decode step, a rank-sliced DRAFT
-    # pass over the SAME weights proposes k tokens per slot and one
-    # (slots, k+1) verify step accepts a greedy prefix — up to k+1
-    # tokens per step instead of 1.  Greedy streams stay exactly
-    # token-identical to the non-speculative engine; requires an
-    # attention-only architecture (recurrent state cannot roll back).
-    spec_k: int = 0
-    # fraction of every head's CURRENT rank the draft slices off (the
-    # leading directions are kept — CLOVER's factors are sorted, so the
-    # draft's cache view is literally cache[..., :r]; no second cache)
-    draft_rank_ratio: float = 0.5
-
-    @property
-    def chunk(self) -> int:
-        """Effective chunk size — the ONE clamp both the Scheduler's
-        planning and the Engine's capacity/page-table sizing use."""
-        return max(1, min(self.prefill_chunk, self.max_len))
-
-    @property
-    def spec_window(self) -> int:
-        """Verify-step window width (pending token + k drafts)."""
-        return self.spec_k + 1
-
-    @property
-    def capacity(self) -> int:
-        """Per-slot KV capacity: max_len rounded up to a chunk multiple
-        PLUS spare room, so every window write [index, index+W) with
-        index <= max_len stays in bounds — dense dynamic_update_slice
-        never clamps (a clamped write would shift backwards over valid
-        history) and paged position->page lookups never fall off the
-        table.  W is the chunk size or, with speculation on, the
-        (k+1)-wide verify window whose rejected tail transiently
-        overhangs the committed length.  The spare tail is beyond every
-        causal horizon, hence never readable."""
-        C = self.chunk
-        spare = max(C, self.spec_window if self.spec_k > 0 else 1)
-        return ((self.max_len + C - 1) // C * C
-                + (spare + C - 1) // C * C)
-
-
-class PageAllocator:
-    """Refcounted free-list allocator over the global KV page pool.
-
-    Host-side owner of the page tables for the device pools built by
-    ``T.init_decode_state_paged``: ``n_pages`` real pages plus one spare
-    garbage row (id ``sentinel == n_pages``) that un-allocated
-    page-table entries address, so padded windows and idle slots write
-    harmlessly off to the side instead of into another slot's pages.
-
-    With prefix caching (DESIGN.md §9) a page can be referenced by
-    several slot tables at once AND by the host-side prefix trie
-    (``PrefixCache``): ``refcount[p]`` counts every such reference, and
-    a page returns to the free list exactly when its count hits zero.
-    Shared pages are read-only to their mappers; a slot that must write
-    one first clones it (``cow``) and repoints its own table entry.
-
-    Invariants (property-tested in tests/test_property.py):
-      * refcounts are >= 0 and a page is free iff its count is 0;
-      * no page is both on the free list and mapped/indexed anywhere;
-      * ``free_pages + unique mapped-or-indexed pages == n_pages``;
-      * ``ensure`` is all-or-nothing; ``release`` decrefs exactly the
-        slot's pages (no double-free).
-    """
-
-    def __init__(self, n_pages: int, page_tokens: int, slots: int,
-                 table_pages: int):
-        assert n_pages >= 1 and page_tokens >= 1 and table_pages >= 1
-        self.n_pages = n_pages
-        self.page_tokens = page_tokens
-        self.table_pages = table_pages          # static page-table width
-        self.sentinel = n_pages                 # the garbage-sink row
-        self.free_list: List[int] = list(range(n_pages))
-        self.refcount: List[int] = [0] * n_pages
-        self.tables: List[List[int]] = [[] for _ in range(slots)]
-
-    @property
-    def free_pages(self) -> int:
-        return len(self.free_list)
-
-    def used_pages(self) -> int:
-        """UNIQUE pages in use (shared pages count once — the number
-        actually unavailable to new sequences)."""
-        return self.n_pages - len(self.free_list)
-
-    def utilization(self) -> float:
-        return self.used_pages() / max(1, self.n_pages)
-
-    def pages_for(self, n_tokens: int) -> int:
-        return -(-int(n_tokens) // self.page_tokens)
-
-    # -- refcounting ---------------------------------------------------
-    def _alloc_page(self) -> int:
-        page = self.free_list.pop()
-        assert self.refcount[page] == 0, page
-        self.refcount[page] = 1
-        return page
-
-    def incref(self, page: int):
-        assert 0 <= page < self.n_pages and self.refcount[page] > 0, \
-            f"incref of unowned page {page}"
-        self.refcount[page] += 1
-
-    def decref(self, page: int) -> bool:
-        """Drop one reference; True if the page was freed."""
-        assert self.refcount[page] > 0, f"double free of page {page}"
-        self.refcount[page] -= 1
-        if self.refcount[page] == 0:
-            self.free_list.append(page)
-            return True
-        return False
-
-    def ensure(self, slot: int, n_tokens: int) -> bool:
-        """Grow ``slot``'s table to cover positions [0, n_tokens);
-        all-or-nothing.  Returns False on pool exhaustion (caller
-        evicts/preempts) or if the static table width would overflow."""
-        want = self.pages_for(n_tokens)
-        need = want - len(self.tables[slot])
-        if need <= 0:
-            return True
-        if need > len(self.free_list) or want > self.table_pages:
-            return False
-        for _ in range(need):
-            self.tables[slot].append(self._alloc_page())
-        return True
-
-    def map_shared(self, slot: int, pages: List[int]) -> bool:
-        """Append already-owned pages (a prefix-trie hit) READ-ONLY to
-        the end of ``slot``'s table; each gains one reference.  The
-        mapper must never scatter into them without ``cow`` first."""
-        if len(self.tables[slot]) + len(pages) > self.table_pages:
-            return False
-        for p in pages:
-            self.incref(p)
-            self.tables[slot].append(p)
-        return True
-
-    def cow(self, slot: int, idx: int) -> Optional[Tuple[int, int]]:
-        """Copy-on-write fault on table entry ``idx``: if the page is
-        shared, allocate a fresh page, repoint the slot's entry and
-        drop its reference on the old one.  Returns (src, dst) for the
-        caller's device-side content copy, or None when the page was
-        exclusively owned (no copy needed).  Caller must check
-        ``free_pages`` first; raises on an empty pool."""
-        old = self.tables[slot][idx]
-        if self.refcount[old] == 1:
-            return None
-        new = self._alloc_page()
-        self.tables[slot][idx] = new
-        self.decref(old)
-        return (old, new)
-
-    def release(self, slot: int) -> int:
-        """Drop the slot's reference on all of its pages.  Returns the
-        number of pages unmapped (shared pages survive via their other
-        references — e.g. the prefix trie's)."""
-        pages = self.tables[slot]
-        self.tables[slot] = []
-        for p in pages:
-            self.decref(p)
-        return len(pages)
-
-    def table_array(self) -> np.ndarray:
-        """(slots, table_pages) int32 device view; sentinel-padded."""
-        t = np.full((len(self.tables), self.table_pages), self.sentinel,
-                    np.int32)
-        for s, pages in enumerate(self.tables):
-            t[s, :len(pages)] = pages
-        return t
-
-
-class PrefixCache:
-    """Host-side radix index over PAGE-ALIGNED token prefixes
-    (DESIGN.md §9) — automatic prefix caching for the paged engine.
-
-    Each node covers exactly one full KV page: the node for the first
-    ``i`` pages of a token stream is keyed on ``(salt, stream[: i *
-    page_tokens])``, and holds the pool page whose K/V encode those
-    ``page_tokens`` positions given the preceding prefix.  ``salt``
-    folds in the model's rank plan (prune ratio / CLOVER ranks / page
-    size), so caches produced under different pruning never alias even
-    if the engine were rebuilt over the same allocator.
-
-    The trie holds one reference on every indexed page (see
-    ``PageAllocator``).  ``match`` walks the longest cached run for a
-    prompt and bumps each node's LRU clock; ``insert`` publishes a
-    finished/preempted/prefilled sequence's full-page run (first writer
-    wins — an existing node keeps its page); ``evict`` reclaims LRU
-    leaf nodes whose page no slot maps (refcount == 1: only the trie's
-    own reference is left).
-    """
-
-    def __init__(self, alloc: PageAllocator, salt: Tuple = ()):
-        self.alloc = alloc
-        self.pt = alloc.page_tokens
-        # the salt IS the root: two caches with different rank plans
-        # have disjoint key spaces from the first page on
-        self._root = ("root", salt)
-        # radix keying: (parent node id, this page's pt tokens) -> node
-        # {"id", "page", "clock", "children", "parent_key"} — each walk
-        # step hashes ONE page of tokens, so match/insert are O(L), not
-        # O(L^2) re-serializations of the whole prefix per depth
-        self.nodes: Dict[tuple, dict] = {}
-        self._next_id = 1
-        self._clock = 0
-        self.inserted = 0
-        self.evicted = 0
-
-    def _chunk(self, tokens: np.ndarray, i: int) -> bytes:
-        """Page ``i``'s token content (0-based), as a hashable key."""
-        return np.asarray(tokens[i * self.pt:(i + 1) * self.pt],
-                          np.int32).tobytes()
-
-    def __len__(self) -> int:
-        return len(self.nodes)
-
-    def pages(self) -> set:
-        return {n["page"] for n in self.nodes.values()}
-
-    def match(self, tokens: np.ndarray) -> List[int]:
-        """Longest cached page run that is a prefix of ``tokens``.
-        Returns the page ids in position order (possibly empty) and
-        LRU-touches every node on the path."""
-        self._clock += 1
-        pages: List[int] = []
-        parent = self._root
-        for i in range(len(tokens) // self.pt):
-            node = self.nodes.get((parent, self._chunk(tokens, i)))
-            if node is None:
-                break
-            node["clock"] = self._clock
-            pages.append(node["page"])
-            parent = node["id"]
-        return pages
-
-    def insert(self, tokens: np.ndarray, pages: List[int]):
-        """Publish a full-page run: page ``i`` holds K/V for positions
-        [i*pt, (i+1)*pt) of ``tokens``.  Existing nodes win (their page
-        stays; the duplicate remains the caller's private copy)."""
-        n = min(len(tokens) // self.pt, len(pages))
-        self._clock += 1
-        parent_id, parent_key = self._root, None
-        for i in range(n):
-            key = (parent_id, self._chunk(tokens, i))
-            node = self.nodes.get(key)
-            if node is None:
-                self.alloc.incref(pages[i])
-                node = {"id": self._next_id, "page": pages[i],
-                        "clock": self._clock, "children": 0,
-                        "parent_key": parent_key}
-                self._next_id += 1
-                self.nodes[key] = node
-                if parent_key is not None:
-                    self.nodes[parent_key]["children"] += 1
-                self.inserted += 1
-            else:
-                node["clock"] = self._clock
-            parent_id, parent_key = node["id"], key
-
-    def evict(self, n_pages: int) -> int:
-        """Free up to ``n_pages`` pool pages by dropping LRU LEAF nodes
-        nobody maps (page refcount == 1).  Leaf-first keeps every
-        surviving node's prefix path intact.  One scan builds the
-        clock-ordered candidate list; a parent whose last child is
-        dropped re-enters consideration within the same call."""
-        freed = 0
-        candidates = sorted(
-            (k for k, nd in self.nodes.items()
-             if nd["children"] == 0
-             and self.alloc.refcount[nd["page"]] == 1),
-            key=lambda k: self.nodes[k]["clock"], reverse=True)
-        while freed < n_pages and candidates:
-            key = candidates.pop()
-            node = self.nodes.get(key)
-            if (node is None or node["children"] != 0
-                    or self.alloc.refcount[node["page"]] != 1):
-                continue            # state moved under us: re-derived
-            self.nodes.pop(key)
-            pk = node["parent_key"]
-            if pk is not None and pk in self.nodes:
-                parent = self.nodes[pk]
-                parent["children"] -= 1
-                if (parent["children"] == 0
-                        and self.alloc.refcount[parent["page"]] == 1):
-                    # keep clock order: parents are older than the
-                    # children that just left, append-then-sort is
-                    # overkill for the one element — insert at the end
-                    # (oldest side) of the reversed list
-                    candidates.append(pk)
-                    candidates.sort(
-                        key=lambda k: self.nodes[k]["clock"],
-                        reverse=True)
-            self.alloc.decref(node["page"])
-            self.evicted += 1
-            freed += 1
-        return freed
-
-
-class Scheduler:
-    """Admission / chunking / preemption / retirement policy with
-    per-slot phases.
-
-    Host-side bookkeeping only — the device sees nothing but the two
-    fixed step shapes the engine compiles.  With a ``PageAllocator``
-    (paged mode) admission is gated on free pages for the effective
-    prompt, retirement frees pages, and ``preempt`` requeues a sequence
-    at the queue head with its generated tokens folded into the
-    effective prompt (greedy continuation is exact).
-
-    With a ``PrefixCache`` (paged + ``EngineConfig.prefix_cache``)
-    admission additionally matches the longest cached page-aligned
-    prefix of the effective prompt, maps those pages READ-ONLY into the
-    slot's table and resumes chunked prefill at the first uncached
-    token (``resume``); prefill completion / preemption / retirement
-    publish the sequence's full-page run back into the trie so later
-    requests (including the preempted sequence itself) skip the
-    redundant prefill compute.
-    """
-
-    def __init__(self, ecfg: EngineConfig, recurrent: bool,
-                 allocator: Optional[PageAllocator] = None,
-                 prefix: Optional["PrefixCache"] = None):
-        self.ecfg = ecfg
-        self.chunk = ecfg.chunk
-        self.recurrent = recurrent
-        self.alloc = allocator
-        self.prefix = prefix
-        self.queue: collections.deque = collections.deque()
-        n = ecfg.slots
-        self.slot_req: List[Optional[Request]] = [None] * n
-        # effective prompt per slot: the request's prompt plus any
-        # tokens generated before a preemption (greedy continuation)
-        self.slot_prompt: List[Optional[np.ndarray]] = [None] * n
-        self.phase: List[Optional[str]] = [None] * n
-        self.pos = np.zeros(n, np.int64)        # prompt tokens consumed
-        self.fresh = np.zeros(n, bool)          # needs state reset
-        self.last_token = np.zeros(n, np.int32)
-        self.slot_seq = np.zeros(n, np.int64)   # admission order (age)
-        # prefix-cache resume point per slot: the first position THIS
-        # tenure writes (0 without a hit).  Positions below it are
-        # served by read-only shared pages.
-        self.resume = np.zeros(n, np.int64)
-        self._admit_counter = 0
-        self.preemptions = 0
-        self.prefix_hits = 0
-        self.prefix_hit_tokens = 0
-
-    # -- admission -----------------------------------------------------
-    def submit(self, req: Request):
-        req.t_submit = time.monotonic()
-        self.queue.append(req)
-
-    def admit(self):
-        for s in range(self.ecfg.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue[0]
-                eff = (req.prompt if not req.generated else
-                       np.concatenate([np.asarray(req.prompt, np.int32),
-                                       np.asarray(req.generated, np.int32)]))
-                L = len(eff)
-                remaining = req.max_new_tokens - len(req.generated)
-                assert L > 0, "empty prompt"
-                assert L + remaining <= self.ecfg.max_len, \
-                    "request exceeds KV capacity"
-                resume = 0
-                if self.alloc is not None:
-                    # speculative verify windows transiently overhang
-                    # the committed length by up to spec_k tokens
-                    slack = self.ecfg.spec_k
-                    assert (self.alloc.pages_for(L + remaining + slack)
-                            <= self.alloc.n_pages), \
-                        "request exceeds page pool"
-                    if self.prefix is not None:
-                        pages = self.prefix.match(eff)
-                        if pages and self.alloc.map_shared(s, pages):
-                            # at least one token must remain to prefill
-                            # (its logits seed generation); a FULL hit
-                            # resumes at L-1 and the rewrite of that
-                            # position COWs the shared last page
-                            pt = self.alloc.page_tokens
-                            resume = min(len(pages) * pt, L - 1)
-                    ok = self.alloc.ensure(s, L)
-                    if not ok and self.prefix is not None:
-                        # cached-but-idle prefixes are reclaimable
-                        # bytes: evict LRU trie pages nobody maps and
-                        # retry (matched pages are slot-mapped now, so
-                        # eviction can never touch THIS hit)
-                        short = (self.alloc.pages_for(L)
-                                 - len(self.alloc.tables[s])
-                                 - self.alloc.free_pages)
-                        if short > 0 and self.prefix.evict(short) > 0:
-                            ok = self.alloc.ensure(s, L)
-                    if not ok:
-                        # FIFO head-of-line: wait for pages (undo the
-                        # shared mapping so the trie can evict them)
-                        self.alloc.release(s)
-                        break
-                self.queue.popleft()
-                req.cached_tokens = resume
-                if resume > 0:
-                    self.prefix_hits += 1
-                    self.prefix_hit_tokens += resume
-                self.slot_req[s] = req
-                self.slot_prompt[s] = eff
-                self.pos[s] = resume
-                self.resume[s] = resume
-                self.fresh[s] = True
-                self.slot_seq[s] = self._admit_counter
-                self._admit_counter += 1
-                self.phase[s] = self._prefill_phase(L, resume)
-
-    def _prefill_phase(self, L: int, pos: int) -> str:
-        if self.recurrent and L - pos < self.chunk:
-            return TAIL          # padded window would corrupt state
-        return PREFILL
-
-    # -- planning ------------------------------------------------------
-    def has_chunk_work(self) -> bool:
-        return any(p == PREFILL for p in self.phase)
-
-    def planned_writes(self, decode_width: int = 1) -> np.ndarray:
-        """(slots,) KV positions the NEXT step will write per active
-        slot — what must be page-covered before the step runs.  TAIL
-        and PREFILL writes always land inside the prompt coverage
-        allocated at admission; only decode growth can demand pages.
-        ``decode_width`` > 1 is a speculative round: every decoding
-        slot writes a (k+1)-wide draft+verify window."""
-        n, C = self.ecfg.slots, self.chunk
-        take = np.zeros(n, np.int64)
-        chunk_step = self.has_chunk_work()
-        for s, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            if chunk_step:
-                if self.phase[s] == PREFILL:
-                    take[s] = min(C, len(self.slot_prompt[s])
-                                  - int(self.pos[s]))
-                elif self.phase[s] == DECODE and not self.recurrent:
-                    take[s] = 1
-            else:
-                take[s] = decode_width
-        return take
-
-    def plan_chunk(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Build the (slots, C) window batch.  PREFILL slots consume up
-        to C prompt tokens (recurrent archs: exactly C — guaranteed by
-        the phase); DECODE slots ride with length 1 on attention-only
-        archs; everything else idles with length 0."""
-        n, C = self.ecfg.slots, self.chunk
-        tokens = np.zeros((n, C), np.int32)
-        lengths = np.zeros(n, np.int32)
-        for s, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            if self.phase[s] == PREFILL:
-                prompt = self.slot_prompt[s]
-                take = min(C, len(prompt) - int(self.pos[s]))
-                tokens[s, :take] = prompt[self.pos[s]:self.pos[s] + take]
-                lengths[s] = take
-            elif self.phase[s] == DECODE and not self.recurrent:
-                tokens[s, 0] = self.last_token[s]
-                lengths[s] = 1
-        fresh = self.fresh & (lengths > 0)
-        self.fresh &= ~fresh
-        return tokens, lengths, fresh
-
-    def plan_decode(self) -> Tuple[np.ndarray, np.ndarray]:
-        """One token per slot: TAIL slots feed their next prompt token,
-        DECODE slots their last sampled token."""
-        n = self.ecfg.slots
-        tokens = np.zeros(n, np.int32)
-        active = np.zeros(n, bool)
-        for s, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            active[s] = True
-            if self.phase[s] == TAIL:
-                tokens[s] = self.slot_prompt[s][self.pos[s]]
-            else:
-                tokens[s] = self.last_token[s]
-        fresh = self.fresh & active
-        self.fresh &= ~fresh
-        return tokens, fresh
-
-    # -- post-step transitions ----------------------------------------
-    def advance_chunk(self, lengths: np.ndarray) -> List[int]:
-        """Apply a chunk step's progress.  Returns slots whose logits
-        row is a real next-token distribution to sample from."""
-        sample = []
-        for s, req in enumerate(self.slot_req):
-            if req is None or lengths[s] == 0:
-                continue
-            if self.phase[s] == PREFILL:
-                self.pos[s] += int(lengths[s])
-                if self.pos[s] == len(self.slot_prompt[s]):
-                    self.phase[s] = DECODE
-                    # the prompt's K/V is fully written: publish its
-                    # full-page run so CONCURRENT requests with the
-                    # same prefix already share it
-                    self._publish(s, len(self.slot_prompt[s]))
-                    sample.append(s)
-                else:
-                    self.phase[s] = self._prefill_phase(
-                        len(self.slot_prompt[s]), int(self.pos[s]))
-            else:                                   # riding decode slot
-                sample.append(s)
-        return sample
-
-    def advance_decode(self) -> List[int]:
-        sample = []
-        for s, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            if self.phase[s] == TAIL:
-                self.pos[s] += 1
-                if self.pos[s] == len(self.slot_prompt[s]):
-                    self.phase[s] = DECODE
-                    sample.append(s)
-            else:
-                sample.append(s)
-        return sample
-
-    # -- preemption / retirement --------------------------------------
-    def _publish(self, s: int, n_valid: int):
-        """Publish slot ``s``'s first ``n_valid`` cached positions (its
-        committed K/V) into the prefix trie, rounded DOWN to full
-        pages.  Keyed on the sequence's actual token stream (prompt +
-        generated) — content-addressed, so it is correct for any
-        sampling temperature and any preemption history."""
-        if self.prefix is None:
-            return
-        req = self.slot_req[s]
-        stream = np.asarray(req.prompt, np.int32)
-        if req.generated:
-            stream = np.concatenate(
-                [stream, np.asarray(req.generated, np.int32)])
-        n_full = int(n_valid) // self.alloc.page_tokens
-        if n_full > 0:
-            self.prefix.insert(stream, self.alloc.tables[s][:n_full])
-
-    def preempt(self, s: int, n_valid: int = 0):
-        """Release slot ``s`` (decref its pages) and requeue its request
-        at the queue HEAD.  Generated tokens are kept on the request;
-        they join the effective prompt on re-admission, so the
-        re-prefill reproduces the stream exactly and generation
-        continues from where it stopped.  With a prefix cache the
-        committed full-page run (``n_valid`` positions) is published
-        first, so re-admission resumes from the trie instead of
-        re-prefilling — pages are decref'd, not freed."""
-        req = self.slot_req[s]
-        assert req is not None
-        if self.alloc is not None:
-            self._publish(s, n_valid)
-            self.alloc.release(s)
-        self.slot_req[s] = None
-        self.slot_prompt[s] = None
-        self.phase[s] = None
-        self.queue.appendleft(req)
-        self.preemptions += 1
-
-    def retire(self, written: Optional[np.ndarray] = None):
-        """Retire finished DECODE slots.  ``written`` (engine's host
-        mirror of per-slot committed cache lengths) bounds what the
-        prefix trie may index on retirement."""
-        for s, req in enumerate(self.slot_req):
-            if req is None or self.phase[s] != DECODE:
-                continue
-            if (len(req.generated) >= req.max_new_tokens
-                    or (self.ecfg.eos_id >= 0 and req.generated
-                        and req.generated[-1] == self.ecfg.eos_id)):
-                req.done = True
-                if self.alloc is not None:
-                    if written is not None:
-                        self._publish(s, int(written[s]))
-                    self.alloc.release(s)
-                self.slot_req[s] = None
-                self.slot_prompt[s] = None
-                self.phase[s] = None
-
-    @property
-    def busy(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.slot_req)
 
 
 def greedy_reference(params: Params, cfg: ArchConfig, prompt,
@@ -720,85 +62,19 @@ def greedy_reference(params: Params, cfg: ArchConfig, prompt,
     return gen
 
 
-def _is_recurrent(cfg: ArchConfig) -> bool:
-    return any(mixer != MIXER_ATTN or mlp == MLP_RWKV
-               for mixer, mlp in cfg.pattern)
-
-
-def _mask_like(flags: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
-    """(B,) bool -> broadcastable to a stacked state leaf (nb, B, ...)."""
-    return flags.reshape((1, flags.shape[0]) + (1,) * (leaf.ndim - 2))
-
-
-def _is_kv(path) -> bool:
-    return any(getattr(p, "key", None) == "kv" for p in path)
-
-
-def _reset_fresh(state: Params, fresh: jnp.ndarray,
-                 resume: jnp.ndarray) -> Params:
-    """Zero recurrent state of freshly admitted slots and set their
-    index to ``resume`` (0 normally; the first uncached position on a
-    prefix-cache hit — the cached prefix's K/V is already present in
-    the slot's read-only shared pages).  KV caches keep their stale
-    contents — masked by the per-slot index (dense: the slot's own
-    region; paged: freshly allocated pages hold a previous owner's
-    data, masked until overwritten by the new one)."""
-
-    def z(path, leaf):
-        if _is_kv(path):
-            return leaf
-        return jnp.where(_mask_like(fresh, leaf), jnp.zeros_like(leaf), leaf)
-
-    return {"blocks": jax.tree_util.tree_map_with_path(z, state["blocks"]),
-            "index": jnp.where(fresh, resume, state["index"])}
-
-
-def _merge_inactive(old_blocks, new_blocks, active: jnp.ndarray):
-    """Keep inactive slots' recurrent state across a chunk step (their
-    padded garbage window must not advance it).  KV caches are taken
-    wholesale: inactive slots' garbage writes land at [index, index+C),
-    which is either masked (beyond each slot's causal horizon),
-    overwritten by that slot's own future writes before it becomes
-    readable, or (paged) routed via sentinel table entries into the
-    pool's garbage row."""
-
-    def sel(path, old, new):
-        if _is_kv(path):
-            return new
-        return jnp.where(_mask_like(active, old), new, old)
-
-    return jax.tree_util.tree_map_with_path(sel, old_blocks, new_blocks)
-
-
 class Engine:
     def __init__(self, params: Params, cfg: ArchConfig, ecfg: EngineConfig,
-                 rng: Optional[jax.Array] = None):
-        self.params = params
+                 rng: Optional[jax.Array] = None,
+                 executor: Optional[Executor] = None):
         self.cfg = cfg
         self.ecfg = ecfg
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        cap = ecfg.capacity        # see EngineConfig.capacity
-        if ecfg.paged:
-            pt = ecfg.page_tokens
-            table_pages = (cap + pt - 1) // pt
-            n_pages = ecfg.n_pages or ecfg.slots * table_pages
-            self.alloc: Optional[PageAllocator] = PageAllocator(
-                n_pages, pt, ecfg.slots, table_pages)
-            self.state = T.init_decode_state_paged(cfg, ecfg.slots,
-                                                   n_pages, pt)
-        else:
-            self.alloc = None
-            self.state = T.init_decode_state(cfg, ecfg.slots, cap)
-            # per-slot positions: (slots,) index vector so slots at
-            # different depths coexist in one batch
-            self.state["index"] = jnp.zeros((ecfg.slots,), jnp.int32)
-        recurrent = _is_recurrent(cfg)
+        recurrent = is_recurrent(cfg)
         if ecfg.spec_k > 0 and recurrent:
             raise ValueError(
                 "speculative decoding requires an attention-only "
                 "architecture: recurrent (mamba/rwkv) state cannot roll "
                 "back rejected draft tokens")
-        self.prefix: Optional[PrefixCache] = None
         if ecfg.prefix_cache:
             if not ecfg.paged:
                 raise ValueError("prefix_cache requires paged=True: only "
@@ -809,12 +85,26 @@ class Engine:
                     "architecture: recurrent (mamba/rwkv) state is not "
                     "page-addressable, so a cached page run cannot "
                     "reconstruct it")
-            # the trie key folds in the rank plan: caches produced under
-            # a different prune ratio / CLOVER rank / page size must
+        if executor is None:
+            executor = (ShardedExecutor(params, cfg, ecfg) if ecfg.tp > 1
+                        else LocalExecutor(params, cfg, ecfg))
+        self.exe = executor
+        self.state = executor.init_state()
+        if ecfg.paged:
+            self.alloc: Optional[PageAllocator] = PageAllocator(
+                ecfg.pool_pages, ecfg.page_tokens, ecfg.slots,
+                ecfg.table_pages)
+        else:
+            self.alloc = None
+        self.prefix: Optional[PrefixCache] = None
+        if ecfg.prefix_cache:
+            # the trie key folds in the rank plan AND the executor's
+            # head-partition plan: caches produced under a different
+            # prune ratio / CLOVER rank / page size / head layout must
             # never alias (their K/V live in a different basis)
             salt = (cfg.name, cfg.qk_dim, cfg.vo_dim, cfg.clover.enabled,
                     cfg.clover.qk_rank, cfg.clover.vo_rank,
-                    ecfg.page_tokens)
+                    ecfg.page_tokens) + tuple(executor.plan_salt())
             self.prefix = PrefixCache(self.alloc, salt=salt)
         self.sched = Scheduler(ecfg, recurrent, self.alloc, self.prefix)
         # host mirror of state["index"] (tokens written per slot this
@@ -828,78 +118,13 @@ class Engine:
         self.spec_rounds = 0
         self.accept_hist: Dict[int, int] = collections.defaultdict(int)
 
-        def chunk_fn(params, tokens, lengths, fresh, resume, pages, wfloor,
-                     state):
-            st = _reset_fresh(state, fresh, resume)
-            logits, new = T.prefill_chunk(params, cfg, tokens, st, lengths,
-                                          pages=pages, write_floor=wfloor)
-            blocks = _merge_inactive(st["blocks"], new["blocks"],
-                                     lengths > 0)
-            return logits, {"blocks": blocks, "index": new["index"]}
-
-        def decode_fn(params, tok, fresh, resume, pages, wfloor, state):
-            return T.decode_step(params, cfg, tok,
-                                 _reset_fresh(state, fresh, resume),
-                                 pages=pages, write_floor=wfloor)
-
-        self._chunk = jax.jit(chunk_fn)
-        self._decode = jax.jit(decode_fn)
-        # batched page-content clone backing copy-on-write faults: the
-        # ONE extra compiled shape prefix caching adds (a no-op without
-        # it — compiled_shapes() counts it only once it runs)
-        kimpl = (cfg.kernel_impl
-                 if cfg.kernel_impl in ("pallas", "interpret") else "ref")
-
-        def copy_fn(blocks, src, dst):
-            from repro.kernels import ops as kops
-
-            def cp(path, leaf):
-                if _is_kv(path):
-                    return kops.page_copy(leaf, src, dst, impl=kimpl)
-                return leaf
-
-            return jax.tree_util.tree_map_with_path(cp, blocks)
-
-        self._copy = jax.jit(copy_fn) if ecfg.paged else None
-        self._draft = self._verify = None
-        if ecfg.spec_k > 0:
-            from repro.core.prune import draft_ranks
-            dr = draft_ranks(cfg, ecfg.draft_rank_ratio)
-            # full-width "draft" degenerates to the exact model — skip
-            # the slicing so XLA compiles the identical program
-            self.draft_rank = (None if dr == (cfg.qk_dim, cfg.vo_dim)
-                               else dr)
-
-            def draft_fn(params, tok, pages, wfloor, state):
-                return T.decode_step(params, cfg, tok, state, pages=pages,
-                                     write_floor=wfloor,
-                                     draft_rank=self.draft_rank)
-
-            def verify_fn(params, tokens, lengths, pages, wfloor, state):
-                return T.verify_chunk(params, cfg, tokens, state, lengths,
-                                      pages=pages, write_floor=wfloor)
-
-            self._draft = jax.jit(draft_fn)
-            self._verify = jax.jit(verify_fn)
-
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.sched.submit(req)
 
     def compiled_shapes(self) -> Optional[int]:
-        """Total jit cache entries across all step functions — the
-        engine's contract is that this never exceeds 2 without
-        speculation (dense AND paged: the page table is shape-static),
-        4 with it (one draft shape + one verify shape on top), plus at
-        most 1 for the fixed-width page-copy batch once a prefix-cache
-        copy-on-write fault has fired.  Returns None if the jit cache
-        isn't introspectable (private API drift)."""
-        fns = [f for f in (self._chunk, self._decode, self._copy,
-                           self._draft, self._verify) if f is not None]
-        sizes = [getattr(f, "_cache_size", None) for f in fns]
-        if any(s is None for s in sizes):
-            return None
-        return sum(s() for s in sizes)
+        """Executor jit-cache total (see Executor.compiled_shapes)."""
+        return self.exe.compiled_shapes()
 
     def _sample(self, logits: np.ndarray, temp: float) -> int:
         if temp <= 0:
@@ -956,10 +181,9 @@ class Engine:
         for i in range(0, len(pairs), W):
             batch = list(pairs[i:i + W])
             batch += [(snt, snt)] * (W - len(batch))
-            src = jnp.asarray([p[0] for p in batch], jnp.int32)
-            dst = jnp.asarray([p[1] for p in batch], jnp.int32)
-            self.state["blocks"] = self._copy(self.state["blocks"],
-                                              src, dst)
+            src = np.asarray([p[0] for p in batch], np.int32)
+            dst = np.asarray([p[1] for p in batch], np.int32)
+            self.state = self.exe.page_copy(self.state, src, dst)
 
     def _ensure_pages(self, decode_width: int = 1):
         """Cover every active slot's upcoming writes with pages (COW
@@ -1006,12 +230,12 @@ class Engine:
         and every active request is greedy (the acceptance rule below
         is exact only for argmax sampling)."""
         sched = self.sched
-        if self._draft is None or sched.has_chunk_work():
+        if not self.exe.spec_enabled or sched.has_chunk_work():
             return False
         reqs = [r for r in sched.slot_req if r is not None]
         return bool(reqs) and all(r.temperature <= 0 for r in reqs)
 
-    def _spec_round(self, pages) -> None:
+    def _spec_round(self, pages, wfloor) -> None:
         """One speculative round over all active slots (all in DECODE):
         the rank-sliced DRAFT pass proposes ``k`` tokens per slot
         autoregressively, then ONE (slots, k+1) verify window scores
@@ -1035,20 +259,16 @@ class Engine:
         tok = sched.last_token.copy()
         drafts = np.zeros((slots, k), np.int32)
         dstate = self.state
-        wfloor = (jnp.asarray(sched.resume.astype(np.int32))
-                  if self.alloc is not None else None)
         for j in range(k):
-            logits, dstate = self._draft(self.params, jnp.asarray(tok),
-                                         pages, wfloor, dstate)
+            logits, dstate = self.exe.draft_step(dstate, tok, pages, wfloor)
             tok = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
             drafts[:, j] = tok
         tokens = np.zeros((slots, W), np.int32)
         tokens[:, 0] = sched.last_token        # pending, not yet cached
         tokens[:, 1:] = drafts
         lengths = np.where(active, W, 0).astype(np.int32)
-        logits, self.state = self._verify(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths), pages,
-            wfloor, self.state)
+        logits, self.state = self.exe.verify_chunk(
+            self.state, tokens, lengths, pages, wfloor)
         targets = np.argmax(np.asarray(logits), axis=-1)       # (slots, W)
         now = time.monotonic()
         self.spec_rounds += 1
@@ -1074,7 +294,8 @@ class Engine:
             sched.last_token[s] = targets[s, a]
             self.written[s] = n0[s] + a + 1
         # roll back: commit per-slot lengths (idle slots advanced by 0)
-        self.state["index"] = jnp.asarray(self.written.astype(np.int32))
+        self.state = self.exe.commit_index(self.state,
+                                           self.written.astype(np.int32))
 
     @property
     def accepted_per_round(self) -> float:
@@ -1094,16 +315,16 @@ class Engine:
         pages = wfloor = None
         # newly admitted slots restart their tenure at their resume
         # point — 0, or the first uncached position on a prefix hit
-        # (the device index follows via _reset_fresh at plan time; the
-        # host mirror drives page coverage, COW detection AND the
-        # speculative rollback's index commit)
+        # (the device index follows via the executor's fresh-reset at
+        # plan time; the host mirror drives page coverage, COW
+        # detection AND the speculative rollback's index commit)
         for s in range(self.ecfg.slots):
             if sched.slot_req[s] is not None and sched.fresh[s]:
                 self.written[s] = int(sched.resume[s])
-        resume = jnp.asarray(sched.resume.astype(np.int32))
+        resume = sched.resume.astype(np.int32)
         if self.alloc is not None:
             self._ensure_pages(self.ecfg.spec_window if spec else 1)
-            pages = jnp.asarray(self.alloc.table_array())
+            pages = self.alloc.table_array()
             # defense in depth: scatter-writes below each slot's resume
             # point are rerouted to the garbage row on device, so even
             # a host-side COW bug cannot corrupt a shared cached prefix
@@ -1114,18 +335,16 @@ class Engine:
             [r for r in sched.slot_req if r is not None]))
         if sched.has_chunk_work():
             tokens, lengths, fresh = sched.plan_chunk()
-            logits, self.state = self._chunk(
-                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-                jnp.asarray(fresh), resume, pages, wfloor, self.state)
+            logits, self.state = self.exe.prefill_chunk(
+                self.state, tokens, lengths, fresh, resume, pages, wfloor)
             self.written += lengths        # device: index += lengths
             self._emit(sched.advance_chunk(lengths), np.asarray(logits))
         elif spec and any(r is not None for r in sched.slot_req):
-            self._spec_round(pages)
+            self._spec_round(pages, wfloor)
         elif any(r is not None for r in sched.slot_req):
             tokens, fresh = sched.plan_decode()
-            logits, self.state = self._decode(
-                self.params, jnp.asarray(tokens), jnp.asarray(fresh),
-                resume, pages, wfloor, self.state)
+            logits, self.state = self.exe.decode_step(
+                self.state, tokens, fresh, resume, pages, wfloor)
             self.written += 1              # device: index += 1, all slots
             self._emit(sched.advance_decode(), np.asarray(logits))
         else:

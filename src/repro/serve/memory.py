@@ -1,0 +1,274 @@
+"""KV-page memory management: the refcounted page allocator and the
+copy-on-write prefix-cache trie (DESIGN.md §6, §9).
+
+Both are HOST-side and layout-global: one ``PageAllocator`` (and one
+``PrefixCache``) serves the whole engine regardless of parallelism —
+page ids are the same on every model shard, each shard just stores its
+own heads' slice of every page (``parallel.sharding.serve_state_specs``).
+That is why the trie can stay host-global under tensor parallelism
+while the pools it indexes are sharded along heads (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class PageAllocator:
+    """Refcounted free-list allocator over the global KV page pool.
+
+    Host-side owner of the page tables for the device pools built by
+    ``T.init_decode_state_paged``: ``n_pages`` real pages plus one spare
+    garbage row (id ``sentinel == n_pages``) that un-allocated
+    page-table entries address, so padded windows and idle slots write
+    harmlessly off to the side instead of into another slot's pages.
+
+    With prefix caching (DESIGN.md §9) a page can be referenced by
+    several slot tables at once AND by the host-side prefix trie
+    (``PrefixCache``): ``refcount[p]`` counts every such reference, and
+    a page returns to the free list exactly when its count hits zero.
+    Shared pages are read-only to their mappers; a slot that must write
+    one first clones it (``cow``) and repoints its own table entry.
+
+    Invariants (property-tested in tests/test_property.py):
+      * refcounts are >= 0 and a page is free iff its count is 0;
+      * no page is both on the free list and mapped/indexed anywhere;
+      * ``free_pages + unique mapped-or-indexed pages == n_pages``;
+      * ``ensure`` is all-or-nothing; ``release`` decrefs exactly the
+        slot's pages (no double-free).
+    """
+
+    def __init__(self, n_pages: int, page_tokens: int, slots: int,
+                 table_pages: int):
+        assert n_pages >= 1 and page_tokens >= 1 and table_pages >= 1
+        self.n_pages = n_pages
+        self.page_tokens = page_tokens
+        self.table_pages = table_pages          # static page-table width
+        self.sentinel = n_pages                 # the garbage-sink row
+        self.free_list: List[int] = list(range(n_pages))
+        self.refcount: List[int] = [0] * n_pages
+        self.tables: List[List[int]] = [[] for _ in range(slots)]
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free_list)
+
+    def used_pages(self) -> int:
+        """UNIQUE pages in use (shared pages count once — the number
+        actually unavailable to new sequences)."""
+        return self.n_pages - len(self.free_list)
+
+    def utilization(self) -> float:
+        return self.used_pages() / max(1, self.n_pages)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_tokens)
+
+    # -- refcounting ---------------------------------------------------
+    def _alloc_page(self) -> int:
+        page = self.free_list.pop()
+        assert self.refcount[page] == 0, page
+        self.refcount[page] = 1
+        return page
+
+    def incref(self, page: int):
+        assert 0 <= page < self.n_pages and self.refcount[page] > 0, \
+            f"incref of unowned page {page}"
+        self.refcount[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one reference; True if the page was freed."""
+        assert self.refcount[page] > 0, f"double free of page {page}"
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self.free_list.append(page)
+            return True
+        return False
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table to cover positions [0, n_tokens);
+        all-or-nothing.  Returns False on pool exhaustion (caller
+        evicts/preempts) or if the static table width would overflow."""
+        want = self.pages_for(n_tokens)
+        need = want - len(self.tables[slot])
+        if need <= 0:
+            return True
+        if need > len(self.free_list) or want > self.table_pages:
+            return False
+        for _ in range(need):
+            self.tables[slot].append(self._alloc_page())
+        return True
+
+    def map_shared(self, slot: int, pages: List[int]) -> bool:
+        """Append already-owned pages (a prefix-trie hit) READ-ONLY to
+        the end of ``slot``'s table; each gains one reference.  The
+        mapper must never scatter into them without ``cow`` first."""
+        if len(self.tables[slot]) + len(pages) > self.table_pages:
+            return False
+        for p in pages:
+            self.incref(p)
+            self.tables[slot].append(p)
+        return True
+
+    def cow(self, slot: int, idx: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write fault on table entry ``idx``: if the page is
+        shared, allocate a fresh page, repoint the slot's entry and
+        drop its reference on the old one.  Returns (src, dst) for the
+        caller's device-side content copy, or None when the page was
+        exclusively owned (no copy needed).  Caller must check
+        ``free_pages`` first; raises on an empty pool."""
+        old = self.tables[slot][idx]
+        if self.refcount[old] == 1:
+            return None
+        new = self._alloc_page()
+        self.tables[slot][idx] = new
+        self.decref(old)
+        return (old, new)
+
+    def release(self, slot: int) -> int:
+        """Drop the slot's reference on all of its pages.  Returns the
+        number of pages unmapped (shared pages survive via their other
+        references — e.g. the prefix trie's)."""
+        pages = self.tables[slot]
+        self.tables[slot] = []
+        for p in pages:
+            self.decref(p)
+        return len(pages)
+
+    def table_array(self) -> np.ndarray:
+        """(slots, table_pages) int32 device view; sentinel-padded."""
+        t = np.full((len(self.tables), self.table_pages), self.sentinel,
+                    np.int32)
+        for s, pages in enumerate(self.tables):
+            t[s, :len(pages)] = pages
+        return t
+
+
+class PrefixCache:
+    """Host-side radix index over PAGE-ALIGNED token prefixes
+    (DESIGN.md §9) — automatic prefix caching for the paged engine.
+
+    Each node covers exactly one full KV page: the node for the first
+    ``i`` pages of a token stream is keyed on ``(salt, stream[: i *
+    page_tokens])``, and holds the pool page whose K/V encode those
+    ``page_tokens`` positions given the preceding prefix.  ``salt``
+    folds in the model's rank plan (prune ratio / CLOVER ranks / page
+    size) AND — under tensor parallelism — the executor's head-partition
+    plan, so caches produced under different pruning or a different
+    head->shard layout never alias even if the engine were rebuilt over
+    the same allocator.
+
+    The trie holds one reference on every indexed page (see
+    ``PageAllocator``).  ``match`` walks the longest cached run for a
+    prompt and bumps each node's LRU clock; ``insert`` publishes a
+    finished/preempted/prefilled sequence's full-page run (first writer
+    wins — an existing node keeps its page); ``evict`` reclaims LRU
+    leaf nodes whose page no slot maps (refcount == 1: only the trie's
+    own reference is left).
+    """
+
+    def __init__(self, alloc: PageAllocator, salt: Tuple = ()):
+        self.alloc = alloc
+        self.pt = alloc.page_tokens
+        # the salt IS the root: two caches with different rank plans
+        # have disjoint key spaces from the first page on
+        self._root = ("root", salt)
+        # radix keying: (parent node id, this page's pt tokens) -> node
+        # {"id", "page", "clock", "children", "parent_key"} — each walk
+        # step hashes ONE page of tokens, so match/insert are O(L), not
+        # O(L^2) re-serializations of the whole prefix per depth
+        self.nodes: Dict[tuple, dict] = {}
+        self._next_id = 1
+        self._clock = 0
+        self.inserted = 0
+        self.evicted = 0
+
+    def _chunk(self, tokens: np.ndarray, i: int) -> bytes:
+        """Page ``i``'s token content (0-based), as a hashable key."""
+        return np.asarray(tokens[i * self.pt:(i + 1) * self.pt],
+                          np.int32).tobytes()
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def pages(self) -> set:
+        return {n["page"] for n in self.nodes.values()}
+
+    def match(self, tokens: np.ndarray) -> List[int]:
+        """Longest cached page run that is a prefix of ``tokens``.
+        Returns the page ids in position order (possibly empty) and
+        LRU-touches every node on the path."""
+        self._clock += 1
+        pages: List[int] = []
+        parent = self._root
+        for i in range(len(tokens) // self.pt):
+            node = self.nodes.get((parent, self._chunk(tokens, i)))
+            if node is None:
+                break
+            node["clock"] = self._clock
+            pages.append(node["page"])
+            parent = node["id"]
+        return pages
+
+    def insert(self, tokens: np.ndarray, pages: List[int]):
+        """Publish a full-page run: page ``i`` holds K/V for positions
+        [i*pt, (i+1)*pt) of ``tokens``.  Existing nodes win (their page
+        stays; the duplicate remains the caller's private copy)."""
+        n = min(len(tokens) // self.pt, len(pages))
+        self._clock += 1
+        parent_id, parent_key = self._root, None
+        for i in range(n):
+            key = (parent_id, self._chunk(tokens, i))
+            node = self.nodes.get(key)
+            if node is None:
+                self.alloc.incref(pages[i])
+                node = {"id": self._next_id, "page": pages[i],
+                        "clock": self._clock, "children": 0,
+                        "parent_key": parent_key}
+                self._next_id += 1
+                self.nodes[key] = node
+                if parent_key is not None:
+                    self.nodes[parent_key]["children"] += 1
+                self.inserted += 1
+            else:
+                node["clock"] = self._clock
+            parent_id, parent_key = node["id"], key
+
+    def evict(self, n_pages: int) -> int:
+        """Free up to ``n_pages`` pool pages by dropping LRU LEAF nodes
+        nobody maps (page refcount == 1).  Leaf-first keeps every
+        surviving node's prefix path intact.  One scan builds the
+        clock-ordered candidate list; a parent whose last child is
+        dropped re-enters consideration within the same call."""
+        freed = 0
+        candidates = sorted(
+            (k for k, nd in self.nodes.items()
+             if nd["children"] == 0
+             and self.alloc.refcount[nd["page"]] == 1),
+            key=lambda k: self.nodes[k]["clock"], reverse=True)
+        while freed < n_pages and candidates:
+            key = candidates.pop()
+            node = self.nodes.get(key)
+            if (node is None or node["children"] != 0
+                    or self.alloc.refcount[node["page"]] != 1):
+                continue            # state moved under us: re-derived
+            self.nodes.pop(key)
+            pk = node["parent_key"]
+            if pk is not None and pk in self.nodes:
+                parent = self.nodes[pk]
+                parent["children"] -= 1
+                if (parent["children"] == 0
+                        and self.alloc.refcount[parent["page"]] == 1):
+                    # keep clock order: parents are older than the
+                    # children that just left, append-then-sort is
+                    # overkill for the one element — insert at the end
+                    # (oldest side) of the reversed list
+                    candidates.append(pk)
+                    candidates.sort(
+                        key=lambda k: self.nodes[k]["clock"],
+                        reverse=True)
+            self.alloc.decref(node["page"])
+            self.evicted += 1
+            freed += 1
+        return freed

@@ -1,0 +1,329 @@
+"""Scheduling policy: admission, chunk planning, preemption, retirement.
+
+Everything here is HOST-side numpy bookkeeping — the device sees
+nothing but the fixed step shapes the executor compiles, and nothing in
+this module depends on the KV layout beyond the allocator/trie handles
+it is given, or on the parallelism degree at all (the same Scheduler
+drives the local and the sharded executor — DESIGN.md §10's "planning
+is layout-agnostic" contract).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.config import EngineConfig
+from repro.serve.memory import PageAllocator, PrefixCache
+
+# slot phases
+PREFILL = "prefill"     # prompt tokens remain; consumed chunk-wise
+TAIL = "tail"           # recurrent archs: < C prompt tokens remain,
+                        # fed one-by-one through the decode step
+DECODE = "decode"       # generating one token per engine step
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0            # 0 = greedy
+    # filled by the engine:
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+    # prefix-cache hit size at the LAST admission: prompt tokens whose
+    # K/V came from shared pages (their prefill chunks were skipped)
+    cached_tokens: int = 0
+    # serving metrics (monotonic clock): submit time, one stamp per
+    # emitted token (token_times[0] is first-token / end of prefill)
+    t_submit: float = 0.0
+    token_times: List[float] = field(default_factory=list)
+
+
+class Scheduler:
+    """Admission / chunking / preemption / retirement policy with
+    per-slot phases.
+
+    With a ``PageAllocator`` (paged mode) admission is gated on free
+    pages for the effective prompt, retirement frees pages, and
+    ``preempt`` requeues a sequence at the queue head with its
+    generated tokens folded into the effective prompt (greedy
+    continuation is exact).
+
+    With a ``PrefixCache`` (paged + ``EngineConfig.prefix_cache``)
+    admission additionally matches the longest cached page-aligned
+    prefix of the effective prompt, maps those pages READ-ONLY into the
+    slot's table and resumes chunked prefill at the first uncached
+    token (``resume``); prefill completion / preemption / retirement
+    publish the sequence's full-page run back into the trie so later
+    requests (including the preempted sequence itself) skip the
+    redundant prefill compute.
+    """
+
+    def __init__(self, ecfg: EngineConfig, recurrent: bool,
+                 allocator: Optional[PageAllocator] = None,
+                 prefix: Optional[PrefixCache] = None):
+        self.ecfg = ecfg
+        self.chunk = ecfg.chunk
+        self.recurrent = recurrent
+        self.alloc = allocator
+        self.prefix = prefix
+        self.queue: collections.deque = collections.deque()
+        n = ecfg.slots
+        self.slot_req: List[Optional[Request]] = [None] * n
+        # effective prompt per slot: the request's prompt plus any
+        # tokens generated before a preemption (greedy continuation)
+        self.slot_prompt: List[Optional[np.ndarray]] = [None] * n
+        self.phase: List[Optional[str]] = [None] * n
+        self.pos = np.zeros(n, np.int64)        # prompt tokens consumed
+        self.fresh = np.zeros(n, bool)          # needs state reset
+        self.last_token = np.zeros(n, np.int32)
+        self.slot_seq = np.zeros(n, np.int64)   # admission order (age)
+        # prefix-cache resume point per slot: the first position THIS
+        # tenure writes (0 without a hit).  Positions below it are
+        # served by read-only shared pages.
+        self.resume = np.zeros(n, np.int64)
+        self._admit_counter = 0
+        self.preemptions = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+
+    # -- admission -----------------------------------------------------
+    def submit(self, req: Request):
+        req.t_submit = time.monotonic()
+        self.queue.append(req)
+
+    def admit(self):
+        for s in range(self.ecfg.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue[0]
+                eff = (req.prompt if not req.generated else
+                       np.concatenate([np.asarray(req.prompt, np.int32),
+                                       np.asarray(req.generated, np.int32)]))
+                L = len(eff)
+                remaining = req.max_new_tokens - len(req.generated)
+                assert L > 0, "empty prompt"
+                assert L + remaining <= self.ecfg.max_len, \
+                    "request exceeds KV capacity"
+                resume = 0
+                if self.alloc is not None:
+                    # speculative verify windows transiently overhang
+                    # the committed length by up to spec_k tokens
+                    slack = self.ecfg.spec_k
+                    assert (self.alloc.pages_for(L + remaining + slack)
+                            <= self.alloc.n_pages), \
+                        "request exceeds page pool"
+                    if self.prefix is not None:
+                        pages = self.prefix.match(eff)
+                        if pages and self.alloc.map_shared(s, pages):
+                            # at least one token must remain to prefill
+                            # (its logits seed generation); a FULL hit
+                            # resumes at L-1 and the rewrite of that
+                            # position COWs the shared last page
+                            pt = self.alloc.page_tokens
+                            resume = min(len(pages) * pt, L - 1)
+                    ok = self.alloc.ensure(s, L)
+                    if not ok and self.prefix is not None:
+                        # cached-but-idle prefixes are reclaimable
+                        # bytes: evict LRU trie pages nobody maps and
+                        # retry (matched pages are slot-mapped now, so
+                        # eviction can never touch THIS hit)
+                        short = (self.alloc.pages_for(L)
+                                 - len(self.alloc.tables[s])
+                                 - self.alloc.free_pages)
+                        if short > 0 and self.prefix.evict(short) > 0:
+                            ok = self.alloc.ensure(s, L)
+                    if not ok:
+                        # FIFO head-of-line: wait for pages (undo the
+                        # shared mapping so the trie can evict them)
+                        self.alloc.release(s)
+                        break
+                self.queue.popleft()
+                req.cached_tokens = resume
+                if resume > 0:
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += resume
+                self.slot_req[s] = req
+                self.slot_prompt[s] = eff
+                self.pos[s] = resume
+                self.resume[s] = resume
+                self.fresh[s] = True
+                self.slot_seq[s] = self._admit_counter
+                self._admit_counter += 1
+                self.phase[s] = self._prefill_phase(L, resume)
+
+    def _prefill_phase(self, L: int, pos: int) -> str:
+        if self.recurrent and L - pos < self.chunk:
+            return TAIL          # padded window would corrupt state
+        return PREFILL
+
+    # -- planning ------------------------------------------------------
+    def has_chunk_work(self) -> bool:
+        return any(p == PREFILL for p in self.phase)
+
+    def planned_writes(self, decode_width: int = 1) -> np.ndarray:
+        """(slots,) KV positions the NEXT step will write per active
+        slot — what must be page-covered before the step runs.  TAIL
+        and PREFILL writes always land inside the prompt coverage
+        allocated at admission; only decode growth can demand pages.
+        ``decode_width`` > 1 is a speculative round: every decoding
+        slot writes a (k+1)-wide draft+verify window."""
+        n, C = self.ecfg.slots, self.chunk
+        take = np.zeros(n, np.int64)
+        chunk_step = self.has_chunk_work()
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if chunk_step:
+                if self.phase[s] == PREFILL:
+                    take[s] = min(C, len(self.slot_prompt[s])
+                                  - int(self.pos[s]))
+                elif self.phase[s] == DECODE and not self.recurrent:
+                    take[s] = 1
+            else:
+                take[s] = decode_width
+        return take
+
+    def plan_chunk(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Build the (slots, C) window batch.  PREFILL slots consume up
+        to C prompt tokens (recurrent archs: exactly C — guaranteed by
+        the phase); DECODE slots ride with length 1 on attention-only
+        archs; everything else idles with length 0."""
+        n, C = self.ecfg.slots, self.chunk
+        tokens = np.zeros((n, C), np.int32)
+        lengths = np.zeros(n, np.int32)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.phase[s] == PREFILL:
+                prompt = self.slot_prompt[s]
+                take = min(C, len(prompt) - int(self.pos[s]))
+                tokens[s, :take] = prompt[self.pos[s]:self.pos[s] + take]
+                lengths[s] = take
+            elif self.phase[s] == DECODE and not self.recurrent:
+                tokens[s, 0] = self.last_token[s]
+                lengths[s] = 1
+        fresh = self.fresh & (lengths > 0)
+        self.fresh &= ~fresh
+        return tokens, lengths, fresh
+
+    def plan_decode(self) -> Tuple[np.ndarray, np.ndarray]:
+        """One token per slot: TAIL slots feed their next prompt token,
+        DECODE slots their last sampled token."""
+        n = self.ecfg.slots
+        tokens = np.zeros(n, np.int32)
+        active = np.zeros(n, bool)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            active[s] = True
+            if self.phase[s] == TAIL:
+                tokens[s] = self.slot_prompt[s][self.pos[s]]
+            else:
+                tokens[s] = self.last_token[s]
+        fresh = self.fresh & active
+        self.fresh &= ~fresh
+        return tokens, fresh
+
+    # -- post-step transitions ----------------------------------------
+    def advance_chunk(self, lengths: np.ndarray) -> List[int]:
+        """Apply a chunk step's progress.  Returns slots whose logits
+        row is a real next-token distribution to sample from."""
+        sample = []
+        for s, req in enumerate(self.slot_req):
+            if req is None or lengths[s] == 0:
+                continue
+            if self.phase[s] == PREFILL:
+                self.pos[s] += int(lengths[s])
+                if self.pos[s] == len(self.slot_prompt[s]):
+                    self.phase[s] = DECODE
+                    # the prompt's K/V is fully written: publish its
+                    # full-page run so CONCURRENT requests with the
+                    # same prefix already share it
+                    self._publish(s, len(self.slot_prompt[s]))
+                    sample.append(s)
+                else:
+                    self.phase[s] = self._prefill_phase(
+                        len(self.slot_prompt[s]), int(self.pos[s]))
+            else:                                   # riding decode slot
+                sample.append(s)
+        return sample
+
+    def advance_decode(self) -> List[int]:
+        sample = []
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.phase[s] == TAIL:
+                self.pos[s] += 1
+                if self.pos[s] == len(self.slot_prompt[s]):
+                    self.phase[s] = DECODE
+                    sample.append(s)
+            else:
+                sample.append(s)
+        return sample
+
+    # -- preemption / retirement --------------------------------------
+    def _publish(self, s: int, n_valid: int):
+        """Publish slot ``s``'s first ``n_valid`` cached positions (its
+        committed K/V) into the prefix trie, rounded DOWN to full
+        pages.  Keyed on the sequence's actual token stream (prompt +
+        generated) — content-addressed, so it is correct for any
+        sampling temperature and any preemption history."""
+        if self.prefix is None:
+            return
+        req = self.slot_req[s]
+        stream = np.asarray(req.prompt, np.int32)
+        if req.generated:
+            stream = np.concatenate(
+                [stream, np.asarray(req.generated, np.int32)])
+        n_full = int(n_valid) // self.alloc.page_tokens
+        if n_full > 0:
+            self.prefix.insert(stream, self.alloc.tables[s][:n_full])
+
+    def preempt(self, s: int, n_valid: int = 0):
+        """Release slot ``s`` (decref its pages) and requeue its request
+        at the queue HEAD.  Generated tokens are kept on the request;
+        they join the effective prompt on re-admission, so the
+        re-prefill reproduces the stream exactly and generation
+        continues from where it stopped.  With a prefix cache the
+        committed full-page run (``n_valid`` positions) is published
+        first, so re-admission resumes from the trie instead of
+        re-prefilling — pages are decref'd, not freed."""
+        req = self.slot_req[s]
+        assert req is not None
+        if self.alloc is not None:
+            self._publish(s, n_valid)
+            self.alloc.release(s)
+        self.slot_req[s] = None
+        self.slot_prompt[s] = None
+        self.phase[s] = None
+        self.queue.appendleft(req)
+        self.preemptions += 1
+
+    def retire(self, written: Optional[np.ndarray] = None):
+        """Retire finished DECODE slots.  ``written`` (engine's host
+        mirror of per-slot committed cache lengths) bounds what the
+        prefix trie may index on retirement."""
+        for s, req in enumerate(self.slot_req):
+            if req is None or self.phase[s] != DECODE:
+                continue
+            if (len(req.generated) >= req.max_new_tokens
+                    or (self.ecfg.eos_id >= 0 and req.generated
+                        and req.generated[-1] == self.ecfg.eos_id)):
+                req.done = True
+                if self.alloc is not None:
+                    if written is not None:
+                        self._publish(s, int(written[s]))
+                    self.alloc.release(s)
+                self.slot_req[s] = None
+                self.slot_prompt[s] = None
+                self.phase[s] = None
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)

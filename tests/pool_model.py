@@ -15,7 +15,7 @@ without hypothesis installed:
 """
 import numpy as np
 
-from repro.serve import PageAllocator, PrefixCache
+from repro.serve.memory import PageAllocator, PrefixCache
 
 
 class PoolLifecycle:

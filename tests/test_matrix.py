@@ -12,7 +12,15 @@ wrappers over ``run_layout_case``).
 The prefix-cache layout runs its trace TWICE through one engine: the
 cold pass fills the trie, the warm replay must hit it (every request
 resumes past cached pages) and still match the oracle token-for-token.
+
+The ``tp`` axis replays cells through the rank-balanced
+``ShardedExecutor`` (DESIGN.md §10) — parallelism changes WHERE the
+math runs, never WHICH tokens come out, so tp > 1 cells assert the
+same byte-identical streams.  They need ``jax.device_count() >= tp``
+(the CI sharded leg forces 4 host devices via XLA_FLAGS; single-device
+runs skip them).
 """
+import dataclasses
 import functools
 
 import jax
@@ -27,6 +35,7 @@ from repro.serve import Engine, EngineConfig, Request, greedy_reference
 LAYOUTS = ("dense", "paged", "prefix")
 SPEC_KS = (0, 2)
 PRUNES = (0.0, 0.5)
+TPS = (1, 2)
 MAX_NEW = 4
 
 
@@ -59,7 +68,7 @@ def _trace(prune: float):
         map(tuple, refs))
 
 
-def run_layout_case(layout: str, spec_k: int, prune: float):
+def run_layout_case(layout: str, spec_k: int, prune: float, tp: int = 1):
     """Run one matrix cell and assert stream identity vs the oracle.
     Returns the engine for wrapper tests that check extra properties."""
     params, cfg = _pruned_model(prune)
@@ -69,7 +78,7 @@ def run_layout_case(layout: str, spec_k: int, prune: float):
                         spec_k=spec_k, draft_rank_ratio=0.5,
                         paged=(layout != "dense"),
                         page_tokens=4,
-                        prefix_cache=(layout == "prefix"))
+                        prefix_cache=(layout == "prefix"), tp=tp)
     eng = Engine(params, cfg, ecfg)
     passes = 2 if layout == "prefix" else 1
     for pass_i in range(passes):
@@ -89,10 +98,39 @@ def run_layout_case(layout: str, spec_k: int, prune: float):
 @pytest.mark.parametrize("prune", PRUNES)
 @pytest.mark.parametrize("spec_k", SPEC_KS)
 @pytest.mark.parametrize("layout", LAYOUTS)
-def test_layout_exactness_matrix(layout, spec_k, prune):
-    eng = run_layout_case(layout, spec_k, prune)
-    # the compile contract survives every cell: 2 base shapes, +1 page
-    # copy once a COW fired, +2 with speculation
+@pytest.mark.parametrize("tp", TPS)
+def test_layout_exactness_matrix(tp, layout, spec_k, prune):
+    if tp > jax.device_count() or jax.device_count() % tp:
+        pytest.skip(f"tp={tp} needs a device count divisible by {tp} "
+                    f"(have {jax.device_count()}; run under XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    eng = run_layout_case(layout, spec_k, prune, tp=tp)
+    # the compile contract survives every cell PER PARALLELISM DEGREE:
+    # 2 base shapes, +1 page copy once a COW fired, +2 with speculation
     budget = 2 + (1 if layout == "prefix" else 0) + (2 if spec_k else 0)
     shapes = eng.compiled_shapes()
     assert shapes is None or 2 <= shapes <= budget
+    assert eng.exe.tp == tp
+
+
+@pytest.mark.parametrize("layout", ("dense", "prefix"))
+def test_tp_streams_identical_to_local(layout):
+    """tp=2 cells must be TOKEN-IDENTICAL to the tp=1 engine (not just
+    to the oracle): same requests, same engine config, executor
+    swapped.  Compares the full request streams side by side."""
+    if jax.device_count() < 2 or jax.device_count() % 2:
+        pytest.skip("needs an even device count >= 2 (CI sharded leg)")
+    params, cfg = _pruned_model(0.5)
+    prompts_t, _ = _trace(0.5)
+    prompts = [np.asarray(p, np.int32) for p in prompts_t]
+    base = EngineConfig(slots=2, max_len=32, prefill_chunk=4,
+                        paged=(layout != "dense"), page_tokens=4,
+                        prefix_cache=(layout == "prefix"))
+    streams = []
+    for ecfg in (base, dataclasses.replace(base, tp=2)):
+        eng = Engine(params, cfg, ecfg)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=MAX_NEW)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        streams.append([tuple(r.generated) for r in reqs])
+    assert streams[0] == streams[1]

@@ -11,8 +11,8 @@ from repro.configs import get_config
 from repro.core import clover_decompose, clover_prune
 from repro.kernels import ops, ref
 from repro.models import init_lm_params
-from repro.serve import (Engine, EngineConfig, PageAllocator, Request,
-                         greedy_reference)
+from repro.serve import Engine, EngineConfig, Request, greedy_reference
+from repro.serve.memory import PageAllocator
 
 
 def _streams(params, cfg, ecfg, prompts, max_new=4):

@@ -14,8 +14,8 @@ from repro.configs import get_config
 from repro.kernels import ops, ref
 from repro.models import init_lm_params
 from repro.models import transformer as T
-from repro.serve import (Engine, EngineConfig, PageAllocator, PrefixCache,
-                         Request, greedy_reference)
+from repro.serve import Engine, EngineConfig, Request, greedy_reference
+from repro.serve.memory import PageAllocator, PrefixCache
 
 from pool_model import PoolLifecycle
 

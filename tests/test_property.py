@@ -20,7 +20,8 @@ from repro.core.decompose import svd_tall
 from repro.kernels import ops, ref
 from repro.models import init_lm_params
 from repro.optim import warmup_cosine
-from repro.serve import Engine, EngineConfig, PageAllocator, Request
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve.memory import PageAllocator
 
 from pool_model import PoolLifecycle  # noqa: E402  (tests/pool_model.py)
 

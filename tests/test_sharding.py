@@ -74,6 +74,22 @@ def test_decode_state_specs_structure():
     assert len(flat) == len(jax.tree_util.tree_leaves(st))
 
 
+def test_make_host_mesh_rejects_nondivisible_model():
+    """A tp degree that does not divide the device count must die with
+    a CLEAR ValueError naming both numbers — not jax.make_mesh's
+    cryptic reshape failure."""
+    n = jax.device_count()
+    bad = n + 1                          # never divides n (n >= 1)
+    with pytest.raises(ValueError, match=f"model={bad} does not divide"):
+        make_host_mesh(model=bad)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_host_mesh(model=0)
+    with pytest.raises(ValueError, match="devices"):
+        make_host_mesh(data=n + 1, model=1)
+    mesh = make_host_mesh(model=1)       # the happy path still works
+    assert mesh.shape == {"data": n, "model": 1}
+
+
 # ---------------------------------------------------------------------------
 # multi-device equivalence: sharded pjit train step == single-device step
 # ---------------------------------------------------------------------------
