@@ -50,6 +50,17 @@ Four scenarios connect the paper's rank pruning to the serving path:
    otherwise the tp > 1 cells are skipped with a warning and the perf
    gate flags their missing baseline keys.
 
+   The ``tp_kernel_*`` cells replay the same trace with
+   ``kernel_impl="interpret"``: since the Pallas hot path moved under
+   shard_map (``kernels.ops.resolve(impl, mesh)``), the sharded
+   executor COMPILES the flash-decode/page-copy kernels per shard
+   instead of silently demoting to XLA.  Gated: streams token-identical
+   to the tp=1 XLA run, the kernel path actually compiled
+   (``Engine.exe.kernel_report()``), deterministic ``tokens_per_step``
+   and the two-shape contract; each degree also publishes an ungated
+   per-shard paged flash-decode kernel timing
+   (``paged_decode_kernel_ms_wall``).
+
 What must hold on CPU (timings vary, orderings don't):
   * both engines compile exactly TWO step shapes each over the whole
     mixed-length trace (the two-shape contract survives paging), plus
@@ -100,6 +111,7 @@ if ("jax" not in sys.modules
                                ).strip()
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -205,6 +217,33 @@ def _serve_trace(params, cfg, trace, ecfg: EngineConfig):
                 "tokens_per_s_wall"]:
             best = (reqs, m)
     return eng, best[0], best[1]
+
+
+def _paged_kernel_wall_ms(dispatch, cfg) -> float:
+    """Best-of-3 wall time (ms) of ONE jitted paged flash-decode call on
+    engine-shaped synthetic operands — no scheduler, no engine — so the
+    tp_kernel cells publish what the (possibly shard_map'd) hot kernel
+    itself costs per step.  Wall number: INFORMATIONAL, never gated."""
+    rng = np.random.default_rng(7)
+    B, H, KV, d = N_REQUESTS, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    n_pp = MAX_LEN // PAGE_TOKENS
+    n_pages = B * n_pp + 1
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n_pages, PAGE_TOKENS, KV, d)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, PAGE_TOKENS, KV, d)),
+                     jnp.float32)
+    table = jnp.asarray(rng.integers(0, n_pages - 1, (B, n_pp)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, MAX_LEN, B), jnp.int32)
+    f = jax.jit(lambda *x: dispatch.paged_decode_attention(
+        *x, scale=d ** -0.5))
+    f(q, kp, vp, table, lens).block_until_ready()      # compile
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.monotonic()
+        f(q, kp, vp, table, lens).block_until_ready()
+        best = min(best, time.monotonic() - t0)
+    return round(best * 1e3, 3)
 
 
 def _prefix_replay(params, cfg, ecfg: EngineConfig, sys_prompt, tails):
@@ -474,6 +513,45 @@ def run(verbose: bool = True):
             checks[f"tp_{tag}_tp{tp}_rank_balance_bound"] = (
                 plan is not None and plan.balance <= 1.15)
         metrics[f"tp_{tag}"] = tp_m
+
+        # -- shard_map'd kernel cells ----------------------------------
+        # same paged trace with kernel_impl="interpret": the executors
+        # now COMPILE the Pallas hot path (per shard when tp > 1, via
+        # kernels.ops.resolve(impl, mesh)) instead of silently demoting
+        # to XLA.  Streams must stay token-identical to the tp=1 XLA
+        # paged run; kernel_report() proves the kernel path actually
+        # compiled; each degree also reports the raw per-shard paged
+        # flash-decode kernel wall time (informational).
+        tpk_m = {}
+        for tp in TP_DEGREES:
+            if jax.device_count() < tp or jax.device_count() % tp:
+                print(f"tp_kernel_{tag}_tp{tp}: SKIPPED — needs {tp} "
+                      f"devices, have {jax.device_count()}; the perf "
+                      "gate will flag the missing keys")
+                continue
+            eng_k, reqs_k, m_k = _serve_trace(
+                params, cfg, trace,
+                dataclasses.replace(paged_cfg, tp=tp,
+                                    kernel_impl="interpret"))
+            report = eng_k.exe.kernel_report()
+            tpk_m[f"tp{tp}"] = {
+                "tokens_per_step": m_k["tokens_per_step"],     # GATED
+                "tokens_per_s_wall": m_k["tokens_per_s_wall"],
+                "decode_kernel": report["decode_step"],
+                "paged_decode_kernel_ms_wall": _paged_kernel_wall_ms(
+                    eng_k.exe.dispatch, cfg),
+            }
+            for kname, val in tpk_m[f"tp{tp}"].items():
+                rows.append((f"tp_kernel_{tag}_tp{tp}", kname, val))
+            checks[f"tp_kernel_{tag}_tp{tp}_matches_tp1"] = all(
+                t.generated == p.generated
+                for t, p in zip(reqs_k, reqs_p))
+            checks[f"tp_kernel_{tag}_tp{tp}_compiles_kernel_path"] = (
+                report["decode_step"].startswith("interpret")
+                and report["page_copy"].startswith("interpret"))
+            checks[f"tp_kernel_{tag}_tp{tp}_two_shapes_per_degree"] = (
+                eng_k.compiled_shapes() in (2, None))
+        metrics[f"tp_kernel_{tag}"] = tpk_m
 
     # the tentpole composition: prune 0.5 admits more concurrent
     # sequences than 0.0 at the same pool byte budget

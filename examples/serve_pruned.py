@@ -21,12 +21,18 @@ With ``--tp N`` the paged trace is replayed once more through the
 rank-balanced ShardedExecutor (DESIGN.md §10): params and KV page
 pools shard along heads over a ("data", "model") host mesh, the
 head -> shard assignment planned so every shard carries ~equal pruned
-FLOPs/bytes, and the streams must again be token-identical.
+FLOPs/bytes, and the streams must again be token-identical.  The
+replay prints ``Engine.exe.kernel_report()`` — which kernel impl each
+compiled entry (decode step, prefill chunk, draft/verify, page copy)
+ACTUALLY used, e.g. ``interpret+shard_map(model=2)`` when the Pallas
+hot path compiled per shard; ``--kernel-impl`` overrides the dispatch
+(``ref | xla | pallas | interpret``).
 
 Run:  PYTHONPATH=src python examples/serve_pruned.py
       PYTHONPATH=src python examples/serve_pruned.py --spec-k 4
       XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-          PYTHONPATH=src python examples/serve_pruned.py --tp 2
+          PYTHONPATH=src python examples/serve_pruned.py \
+          --tp 2 --kernel-impl interpret
 """
 import argparse
 import dataclasses
@@ -54,6 +60,12 @@ def main():
                          "replay (must divide jax.device_count(); on "
                          "CPU export XLA_FLAGS=--xla_force_host_"
                          "platform_device_count=N first)")
+    ap.add_argument("--kernel-impl", default="",
+                    choices=("", "ref", "xla", "pallas", "interpret"),
+                    help="kernel dispatch override for the sharded "
+                         "replay (default: inherit the arch config; "
+                         "'interpret' compiles the Pallas hot path "
+                         "per shard)")
     args = ap.parse_args()
     cfg = get_config("musicgen-large").reduced()
     params = init_lm_params(cfg, jax.random.PRNGKey(0))
@@ -135,7 +147,8 @@ def main():
                             EngineConfig(slots=4, max_len=96,
                                          prefill_chunk=8, paged=True,
                                          page_tokens=8, n_pages=8),
-                            tp=args.tp))
+                            tp=args.tp,
+                            kernel_impl=args.kernel_impl))
             reqs_t = [Request(uid=r.uid, prompt=r.prompt,
                               max_new_tokens=r.max_new_tokens)
                       for r in reqs]
@@ -146,6 +159,9 @@ def main():
             print(f"tensor-parallel replay (tp={args.tp}): match={match} "
                   f"({et.compiled_shapes()} compiled step shapes, "
                   f"{et.sched.preemptions} preemptions)")
+            print("  kernel dispatch per compiled entry:")
+            for entry, impl in et.exe.kernel_report().items():
+                print(f"    {entry:>13}: {impl}")
             used = et.alloc.used_pages()
             for s, frac in enumerate(et.exe.shard_load_fractions()):
                 heads = plan.kv_assign[s] if plan is not None else "all"

@@ -1,19 +1,41 @@
-"""Public kernel entry points: padding, backend dispatch, jit.
+"""Public kernel entry points: padding, backend dispatch, jit, meshes.
 
-On TPU the Pallas kernels compile natively; on CPU they run in interpret
-mode (Python-level execution of the kernel body) when ``interpret=True``
-is requested, otherwise the pure-jnp reference executes (XLA-fused, much
-faster on CPU — the default for model code so smoke tests stay quick).
-The dry-run never traces through these (model code calls them only under
-``attn_impl="pallas"``).
+The dispatch surface is ``resolve(impl, mesh=None)`` -> a frozen
+``KernelDispatch`` whose methods are the kernel entry points.  It is
+resolved once per (impl alias, platform, mesh):
+
+* ``impl`` aliases: ``"ref"`` (pure-jnp oracles), ``"xla"`` (model code
+  takes its einsum paths; these entry points fall back to the oracles),
+  ``"pallas"`` (native Pallas; resolves to ``"interpret"`` off
+  TPU/GPU, where no native lowering exists), ``"interpret"`` (Pallas
+  kernels in interpret mode — the CPU validation path).
+* ``mesh``: when set, the serving hot-path kernels (flash-decode,
+  paged-decode, page-copy, full-sequence attention) run PER SHARD
+  under ``shard_map`` with serve-rules operand specs (slot batch over
+  "data", KV heads over "model" — ``parallel.sharding.kernel_axes``).
+  Per-(slot, kv-head) grid cells are independent, so the sharded
+  outputs are bitwise identical to the single-device kernels.  Page
+  ids stay HOST-GLOBAL: the pools' page-row axis is replicated
+  (``serve_state_specs``), so scalar-prefetched page tables need no
+  shard-local translation — each shard dereferences the same rows and
+  reads its own head slice.
+
+The module-level functions (``clover_attention`` et al.) are the thin
+string-alias compatibility layer over ``resolve`` — existing call
+sites and tests that pass ``impl="interpret"`` keep working unchanged.
+The recurrent kernels (``mamba_scan``, ``wkv6``) never shard: they
+carry cross-step state and have no shard_map partitioning (the
+executors reject that combination loudly instead).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import ref as _ref
 from repro.kernels.clover_attention import flash_attention as _flash
@@ -21,6 +43,8 @@ from repro.kernels.decode_attention import flash_decode as _decode
 from repro.kernels.paged_decode_attention import (
     paged_flash_decode as _paged_decode)
 from repro.kernels.wkv6 import wkv6 as _wkv6
+
+IMPLS = ("ref", "xla", "pallas", "interpret")
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int,
@@ -34,6 +58,265 @@ def _pad_to(x: jnp.ndarray, axis: int, multiple: int,
     return jnp.pad(x, widths, constant_values=value)
 
 
+# ---------------------------------------------------------------------------
+# per-shard kernel bodies (shape-local: safe inside shard_map, where
+# every padded/blocked axis — seq, pages, rank — is unsharded)
+# ---------------------------------------------------------------------------
+
+def _clover_body(q, k, v, *, causal, scale, block_q, block_k, interpret):
+    S, T = q.shape[1], k.shape[1]
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, T))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    # padded K tail is masked only by causality -> require causal when padded
+    assert causal or (S % bq == 0 and T % bk == 0), \
+        "non-causal pallas path requires block-aligned shapes"
+    out = _flash(qp, kp, vp, causal=causal, scale=scale, block_q=bq,
+                 block_k=bk, interpret=interpret)
+    return out[:, :S]
+
+
+def _decode_body(q, k, v, lengths, *, scale, block_t, interpret):
+    T = k.shape[1]
+    bt = min(block_t, max(8, T))
+    kp = _pad_to(k, 1, bt)
+    vp = _pad_to(v, 1, bt)
+    return _decode(q, kp, vp, lengths, scale=scale, block_t=bt,
+                   interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# the dispatch object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelDispatch:
+    """Frozen kernel dispatch: WHICH implementation runs, and WHERE.
+
+    Built by ``resolve()`` and threaded through ``ArchConfig
+    .kernel_impl`` / ``attn_impl`` in place of the old bare strings
+    (both forms remain accepted — ``resolve`` is idempotent).  ``impl``
+    is the canonical backend; ``requested`` records the alias resolve()
+    was handed (e.g. "pallas" that canonicalized to "interpret" on
+    CPU).  With ``mesh`` set, the hot-path methods run under
+    ``shard_map`` per shard; hashable, so configs holding one stay
+    hashable.
+    """
+    impl: str
+    mesh: Optional[Mesh] = None
+    requested: str = ""
+
+    def __post_init__(self):
+        if self.impl not in IMPLS:
+            raise ValueError(f"unknown kernel impl {self.impl!r}: "
+                             f"expected one of {IMPLS}")
+
+    @property
+    def kernel_path(self) -> bool:
+        """True when the Pallas kernel bodies run (native or interpret)."""
+        return self.impl in ("pallas", "interpret")
+
+    @property
+    def interpret(self) -> bool:
+        return self.impl == "interpret"
+
+    def describe(self) -> str:
+        """Human-readable tag for reports: impl plus, when the mesh
+        actually splits heads, the shard_map degree."""
+        if (self.kernel_path and self.mesh is not None
+                and self.mesh.shape.get("model", 1) > 1):
+            return f"{self.impl}+shard_map(model=" \
+                   f"{self.mesh.shape['model']})"
+        return self.impl
+
+    def _axes(self, *, batch: int, kv_heads: int):
+        from repro.parallel.sharding import kernel_axes
+        return kernel_axes(self.mesh, batch=batch, kv_heads=kv_heads)
+
+    def _shard(self, body, in_specs, out_specs):
+        from repro.parallel.sharding import shard_map_call
+        return shard_map_call(body, self.mesh, in_specs, out_specs)
+
+    # -- attention family ----------------------------------------------
+    def clover_attention(self, q, k, v, *, causal: bool = True,
+                         scale: Optional[float] = None,
+                         block_q: int = 128,
+                         block_k: int = 128) -> jnp.ndarray:
+        """Asymmetric-head-width GQA attention.
+
+        q (B,S,H,dq), k (B,T,KV,dq), v (B,T,KV,dv) -> (B,S,H,dv).
+        """
+        if not self.kernel_path:
+            return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
+        body = functools.partial(_clover_body, causal=causal, scale=scale,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=self.interpret)
+        b, m = self._axes(batch=q.shape[0], kv_heads=k.shape[2])
+        if b is None and m is None:
+            return body(q, k, v)
+        fn = self._shard(body,
+                         in_specs=(P(b, None, m, None), P(b, None, m, None),
+                                   P(b, None, m, None)),
+                         out_specs=P(b, None, m, None))
+        return fn(q, k, v)
+
+    def decode_attention(self, q, k, v, lengths, *,
+                         scale: Optional[float] = None,
+                         block_t: int = 256) -> jnp.ndarray:
+        """Flash-decoding vs a (possibly CLOVER-rank) KV cache.
+
+        q (B,H,dq), k (B,T,KV,dq), v (B,T,KV,dv), lengths (B,)
+        -> (B,H,dv).
+        """
+        if not self.kernel_path:
+            return _ref.decode_attention_ref(q, k, v, lengths, scale=scale)
+        body = functools.partial(_decode_body, scale=scale, block_t=block_t,
+                                 interpret=self.interpret)
+        b, m = self._axes(batch=q.shape[0], kv_heads=k.shape[2])
+        if b is None and m is None:
+            return body(q, k, v, lengths)
+        fn = self._shard(body,
+                         in_specs=(P(b, m, None), P(b, None, m, None),
+                                   P(b, None, m, None), P(b)),
+                         out_specs=P(b, m, None))
+        return fn(q, k, v, lengths)
+
+    def paged_decode_attention(self, q, k_pool, v_pool, page_table,
+                               lengths, *,
+                               scale: Optional[float] = None) -> jnp.ndarray:
+        """Flash-decoding vs a PAGED (possibly CLOVER-rank) KV cache.
+
+        q (B,H,dq), k_pool (N,page_tokens,KV,dq), v_pool (N,page_tokens,
+        KV,dv), page_table (B,n_p) int32, lengths (B,) -> (B,H,dv).
+
+        No padding is needed: the pool's ``page_tokens`` axis IS the
+        block size, and page-table entries past each slot's in-use
+        pages are never dereferenced (the kernel clamps its sequential
+        axis per row).  Under a mesh the pools split along KV heads
+        only; their page-row axis is REPLICATED, so the host-global
+        page ids in ``page_table`` are valid row indices on every
+        shard — the scalar-prefetched table crosses the shard_map
+        boundary untranslated.
+        """
+        if not self.kernel_path:
+            return _ref.paged_decode_attention_ref(q, k_pool, v_pool,
+                                                   page_table, lengths,
+                                                   scale=scale)
+        body = functools.partial(_paged_decode, scale=scale,
+                                 interpret=self.interpret)
+        b, m = self._axes(batch=q.shape[0], kv_heads=k_pool.shape[2])
+        if b is None and m is None:
+            return body(q, k_pool, v_pool, page_table, lengths)
+        fn = self._shard(body,
+                         in_specs=(P(b, m, None), P(None, None, m, None),
+                                   P(None, None, m, None), P(b, None),
+                                   P(b)),
+                         out_specs=P(b, m, None))
+        return fn(q, k_pool, v_pool, page_table, lengths)
+
+    def page_copy(self, pool, src, dst) -> jnp.ndarray:
+        """Batched KV-page clone — the device half of copy-on-write
+        prefix caching (serve.engine, DESIGN.md §9).
+
+        pool (n_blocks, N, page_tokens, KV, r), src/dst (m,) int32
+        pool-row ids -> pool with row ``dst[i]`` a copy of row
+        ``src[i]``, all other rows untouched.  Pure DMA, no compute.
+        On the non-kernel paths this is the jnp oracle ("xla" included
+        — there is no einsum equivalent to fall back to).  Under a
+        mesh each shard clones its own KV-head slice of the same
+        host-global rows.
+        """
+        if not self.kernel_path:
+            return _ref.page_copy_ref(pool, src, dst)
+        from repro.kernels.page_copy import page_copy as _page_copy
+        body = functools.partial(_page_copy, interpret=self.interpret)
+        _, m = self._axes(batch=1, kv_heads=pool.shape[3])
+        if m is None:
+            return body(pool, src, dst)
+        fn = self._shard(body,
+                         in_specs=(P(None, None, None, m, None), P(), P()),
+                         out_specs=P(None, None, None, m, None))
+        return fn(pool, src, dst)
+
+    # -- recurrent kernels (never shard_map'd: cross-step state) -------
+    def mamba_scan(self, dt, A, Bmat, C, x, h0=None, *, chunk: int = 128,
+                   tile: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Mamba-1 selective scan.  dt,x (B,S,dI); A (dI,dS); B,C
+        (B,S,dS).  Padding is state-neutral: dt=0 on the tail gives
+        decay exp(0)=1 and zero input, so h_end is exact; padded
+        outputs are sliced away."""
+        if not self.kernel_path:
+            return _ref.mamba_scan_ref(dt, A, Bmat, C, x, h0)
+        from repro.kernels.mamba_scan import mamba_scan as _pallas_scan
+        S, dI = x.shape[1], x.shape[2]
+        c = min(chunk, max(8, S))
+        dtp = _pad_to(dt, 1, c)
+        xp = _pad_to(x, 1, c)
+        Bp = _pad_to(Bmat, 1, c)
+        Cp = _pad_to(C, 1, c)
+        t = tile
+        while dI % t:
+            t //= 2
+        y, h_end = _pallas_scan(dtp, A, Bp, Cp, xp, h0, chunk=c,
+                                tile=max(1, t), interpret=self.interpret)
+        return y[:, :S], h_end
+
+    def wkv6(self, r, k, v, logw, u, s0=None, *,
+             chunk: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """RWKV-6 wkv.  r,k,v,logw (B,H,T,d), u (H,d), s0 (B,H,d,d)|None.
+        Padding is state-neutral: logw=0 (decay 1) and k=0 (no update)
+        on the padded tail leave S_end exact."""
+        if not self.kernel_path:
+            return _ref.wkv6_ref(r, k, v, logw, u, s0)
+        T = r.shape[2]
+        c = min(chunk, max(8, T))
+        rp = _pad_to(r, 2, c)
+        kp = _pad_to(k, 2, c)
+        vp = _pad_to(v, 2, c)
+        lwp = _pad_to(logw, 2, c)
+        out, s_end = _wkv6(rp, kp, vp, lwp, u, s0, chunk=c,
+                           interpret=self.interpret)
+        return out[:, :, :T], s_end
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve(impl: str, mesh: Optional[Mesh]) -> KernelDispatch:
+    if impl not in IMPLS:
+        raise ValueError(f"unknown kernel impl {impl!r}: expected one "
+                         f"of {IMPLS} (or an already-resolved "
+                         "KernelDispatch)")
+    canon = impl
+    if impl == "pallas" and jax.local_devices()[0].platform not in (
+            "tpu", "gpu"):
+        canon = "interpret"     # no native Pallas lowering here
+    return KernelDispatch(impl=canon, mesh=mesh, requested=impl)
+
+
+def resolve(impl: Union[str, KernelDispatch],
+            mesh: Optional[Mesh] = None) -> KernelDispatch:
+    """impl alias (or already-resolved dispatch) -> ``KernelDispatch``.
+
+    Cached per (alias, mesh) and resolved against the local platform
+    once.  Idempotent: a ``KernelDispatch`` passes straight through
+    (gaining ``mesh`` only if it had none), so config fields may hold
+    either form and every consumer just calls ``resolve`` again.
+    Unknown aliases raise ``ValueError`` here — at config time, not at
+    trace time.
+    """
+    if isinstance(impl, KernelDispatch):
+        if mesh is None or impl.mesh is not None:
+            return impl
+        return dataclasses.replace(impl, mesh=mesh)
+    return _resolve(str(impl), mesh)
+
+
+# ---------------------------------------------------------------------------
+# string-alias compatibility layer: the original jitted entry points,
+# now thin delegates to resolve(impl) (single device — no mesh)
+# ---------------------------------------------------------------------------
+
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "scale", "block_q", "block_k", "impl"))
@@ -45,21 +328,9 @@ def clover_attention(q, k, v, *, causal: bool = True,
 
     q (B,S,H,dq), k (B,T,KV,dq), v (B,T,KV,dv) -> (B,S,H,dv).
     """
-    if impl == "ref":
-        return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
-    B, S, H, dq = q.shape
-    T = k.shape[1]
-    bq = min(block_q, max(8, S))
-    bk = min(block_k, max(8, T))
-    qp = _pad_to(q, 1, bq)
-    kp = _pad_to(k, 1, bk)
-    vp = _pad_to(v, 1, bk)
-    # padded K tail is masked only by causality -> require causal when padded
-    assert causal or (S % bq == 0 and T % bk == 0), \
-        "non-causal pallas path requires block-aligned shapes"
-    out = _flash(qp, kp, vp, causal=causal, scale=scale, block_q=bq,
-                 block_k=bk, interpret=(impl == "interpret"))
-    return out[:, :S]
+    return resolve(impl).clover_attention(q, k, v, causal=causal,
+                                          scale=scale, block_q=block_q,
+                                          block_k=block_k)
 
 
 @functools.partial(
@@ -70,14 +341,8 @@ def decode_attention(q, k, v, lengths, *, scale: Optional[float] = None,
 
     q (B,H,dq), k (B,T,KV,dq), v (B,T,KV,dv), lengths (B,) -> (B,H,dv).
     """
-    if impl == "ref":
-        return _ref.decode_attention_ref(q, k, v, lengths, scale=scale)
-    T = k.shape[1]
-    bt = min(block_t, max(8, T))
-    kp = _pad_to(k, 1, bt)
-    vp = _pad_to(v, 1, bt)
-    return _decode(q, kp, vp, lengths, scale=scale, block_t=bt,
-                   interpret=(impl == "interpret"))
+    return resolve(impl).decode_attention(q, k, v, lengths, scale=scale,
+                                          block_t=block_t)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "impl"))
@@ -88,78 +353,33 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
 
     q (B,H,dq), k_pool (N,page_tokens,KV,dq), v_pool (N,page_tokens,KV,dv),
     page_table (B,n_p) int32, lengths (B,) -> (B,H,dv).
-
-    No padding is needed: the pool's ``page_tokens`` axis IS the block
-    size, and page-table entries past each slot's in-use pages are never
-    dereferenced (the kernel clamps its sequential axis per row).
     """
-    if impl == "ref":
-        return _ref.paged_decode_attention_ref(q, k_pool, v_pool,
-                                               page_table, lengths,
-                                               scale=scale)
-    return _paged_decode(q, k_pool, v_pool, page_table, lengths,
-                         scale=scale, interpret=(impl == "interpret"))
+    return resolve(impl).paged_decode_attention(q, k_pool, v_pool,
+                                                page_table, lengths,
+                                                scale=scale)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
 def page_copy(pool, src, dst, *, impl: str = "ref") -> jnp.ndarray:
-    """Batched KV-page clone — the device half of copy-on-write prefix
-    caching (serve.engine, DESIGN.md §9).
+    """Batched KV-page clone (copy-on-write prefix caching).
 
     pool (n_blocks, N, page_tokens, KV, r), src/dst (m,) int32 pool-row
-    ids -> pool with row ``dst[i]`` a copy of row ``src[i]``, all other
-    rows untouched.  Pure DMA, no compute: the Pallas kernel is a
-    scalar-prefetched row-to-row block move with the pool aliased
-    through (in-place on TPU).
+    ids -> pool with row ``dst[i]`` a copy of row ``src[i]``.
     """
-    if impl == "ref":
-        return _ref.page_copy_ref(pool, src, dst)
-    from repro.kernels.page_copy import page_copy as _page_copy
-    return _page_copy(pool, src, dst, interpret=(impl == "interpret"))
+    return resolve(impl).page_copy(pool, src, dst)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "tile", "impl"))
 def mamba_scan(dt, A, Bmat, C, x, h0=None, *, chunk: int = 128,
                tile: int = 512,
                impl: str = "ref") -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Mamba-1 selective scan.  dt,x (B,S,dI); A (dI,dS); B,C (B,S,dS).
-
-    Padding is state-neutral: dt=0 on the tail gives decay exp(0)=1 and
-    zero input, so h_end is exact; padded outputs are sliced away."""
-    if impl == "ref":
-        return _ref.mamba_scan_ref(dt, A, Bmat, C, x, h0)
-    from repro.kernels.mamba_scan import mamba_scan as _pallas_scan
-    B, S, dI = x.shape
-    c = min(chunk, max(8, S))
-    dtp = _pad_to(dt, 1, c)
-    xp = _pad_to(x, 1, c)
-    Bp = _pad_to(Bmat, 1, c)
-    Cp = _pad_to(C, 1, c)
-    t = tile
-    while dI % t:
-        t //= 2
-    y, h_end = _pallas_scan(dtp, A, Bp, Cp, xp, h0, chunk=c,
-                            tile=max(1, t),
-                            interpret=(impl == "interpret"))
-    return y[:, :S], h_end
+    """Mamba-1 selective scan.  dt,x (B,S,dI); A (dI,dS); B,C (B,S,dS)."""
+    return resolve(impl).mamba_scan(dt, A, Bmat, C, x, h0, chunk=chunk,
+                                    tile=tile)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "impl"))
 def wkv6(r, k, v, logw, u, s0=None, *, chunk: int = 64,
          impl: str = "ref") -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """RWKV-6 wkv.  r,k,v,logw (B,H,T,d), u (H,d), s0 (B,H,d,d)|None.
-
-    Padding is state-neutral: logw=0 (decay 1) and k=0 (no update) on the
-    padded tail leave S_end exact; padded outputs are sliced away.
-    """
-    if impl == "ref":
-        return _ref.wkv6_ref(r, k, v, logw, u, s0)
-    B, H, T, d = r.shape
-    c = min(chunk, max(8, T))
-    rp = _pad_to(r, 2, c)
-    kp = _pad_to(k, 2, c)
-    vp = _pad_to(v, 2, c)
-    lwp = _pad_to(logw, 2, c)
-    out, s_end = _wkv6(rp, kp, vp, lwp, u, s0, chunk=c,
-                       interpret=(impl == "interpret"))
-    return out[:, :, :T], s_end
+    """RWKV-6 wkv.  r,k,v,logw (B,H,T,d), u (H,d), s0 (B,H,d,d)|None."""
+    return resolve(impl).wkv6(r, k, v, logw, u, s0, chunk=chunk)

@@ -24,6 +24,18 @@ import jax.numpy as jnp
 Params = Dict[str, Any]
 
 
+def kernel_dispatch(impl: Any):
+    """``impl`` (alias string or resolved ``kernels.ops.KernelDispatch``)
+    -> dispatch object, or None for the plain einsum paths.  The bare
+    "xla"/"ref" strings short-circuit WITHOUT importing the kernels
+    package, so default model code never pays the Pallas import."""
+    if isinstance(impl, str) and impl in ("xla", "ref"):
+        return None
+    from repro.kernels import ops as kops
+    d = kops.resolve(impl)
+    return d if d.kernel_path else None
+
+
 # ---------------------------------------------------------------------------
 # initializers / norms
 # ---------------------------------------------------------------------------
@@ -203,7 +215,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
               cache_index: Optional[jnp.ndarray] = None,
               page_table: Optional[jnp.ndarray] = None,
               write_floor: Optional[jnp.ndarray] = None,
-              attn_impl: str = "xla",
+              attn_impl: Any = "xla",
               draft_rank: Optional[Tuple[int, int]] = None,
               ) -> Tuple[jnp.ndarray, Optional[Params]]:
     """GQA attention.
@@ -267,8 +279,12 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
         q = apply_rope(q, cos, sin, rot)
         k = apply_rope(k, cos, sin, rot)
 
-    use_pallas = (attn_impl in ("pallas", "interpret")
-                  and cfg.attn_logit_softcap == 0)
+    # ``attn_impl`` is an alias string or a resolved KernelDispatch (the
+    # executors thread a mesh-aware one through cfg.kernel_impl, so the
+    # flash kernels run per shard under shard_map when params are
+    # sharded).  Softcapped logits have no kernel: einsum path.
+    dispatch = kernel_dispatch(attn_impl)
+    use_pallas = dispatch is not None and cfg.attn_logit_softcap == 0
 
     new_cache = None
     if kv_cache is not None and page_table is not None:
@@ -299,13 +315,11 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
               .reshape(kv_cache["v"].shape))
         new_cache = {"k": ck, "v": cv}
         if use_pallas and S == 1:  # paged flash-decoding: the hot path
-            from repro.kernels import ops as kops
             lengths = (cache_index + 1).astype(jnp.int32)
-            ctx = kops.paged_decode_attention(
+            ctx = dispatch.paged_decode_attention(
                 q[:, 0], ck[..., :dq].astype(x.dtype),
                 cv[..., :dv].astype(x.dtype),
-                page_table, lengths, scale=scale,
-                impl=attn_impl)[:, None]                    # (B,1,H,dv)
+                page_table, lengths, scale=scale)[:, None]  # (B,1,H,dv)
             if "s_vo" in params:
                 ctx = jnp.einsum("bshv,hvw->bshw", ctx,
                                  params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
@@ -343,12 +357,11 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
                 kv_cache["v"], vw, cache_index, axis=1)
         new_cache = {"k": ck, "v": cv}
         if use_pallas and S == 1:  # flash-decoding against the cache
-            from repro.kernels import ops as kops
             lengths = jnp.broadcast_to(cache_index + 1, (B,)).astype(jnp.int32)
-            ctx = kops.decode_attention(
+            ctx = dispatch.decode_attention(
                 q[:, 0], ck[..., :dq].astype(x.dtype),
                 cv[..., :dv].astype(x.dtype), lengths,
-                scale=scale, impl=attn_impl)[:, None]          # (B,1,H,dv)
+                scale=scale)[:, None]                          # (B,1,H,dv)
             if "s_vo" in params:
                 ctx = jnp.einsum("bshv,hvw->bshw", ctx,
                                  params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
@@ -377,9 +390,8 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
         mask = kv_pos[None, None, :] <= qpos[:, :, None]      # (B, S, T)
     else:
         if use_pallas:  # full-sequence causal flash kernel
-            from repro.kernels import ops as kops
-            ctx = kops.clover_attention(q, k, v, causal=True, scale=scale,
-                                        impl=attn_impl)        # (B,S,H,dv)
+            ctx = dispatch.clover_attention(q, k, v, causal=True,
+                                            scale=scale)       # (B,S,H,dv)
             if "s_vo" in params:
                 ctx = jnp.einsum("bshv,hvw->bshw", ctx,
                                  params["s_vo"][..., :dv, :dv].astype(ctx.dtype))

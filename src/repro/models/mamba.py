@@ -157,10 +157,10 @@ def mamba_forward(params: Params, cfg, x: jnp.ndarray, *,
 
     if state is None:
         h0 = jnp.zeros((B, dI, dS), jnp.float32)
-        if getattr(cfg, "kernel_impl", "xla") in ("pallas", "interpret"):
-            from repro.kernels import ops as kops
-            y, h_end = kops.mamba_scan(dt, A, Bf, Cf, xcf, h0,
-                                       impl=cfg.kernel_impl)
+        from repro.models.layers import kernel_dispatch
+        dispatch = kernel_dispatch(getattr(cfg, "kernel_impl", "xla"))
+        if dispatch is not None:
+            y, h_end = dispatch.mamba_scan(dt, A, Bf, Cf, xcf, h0)
         else:
             y, h_end = _selective_scan(dt, A, Bf, Cf, xcf, h0,
                                        unroll=getattr(cfg, "unroll_layers",

@@ -195,10 +195,10 @@ def rwkv_timemix_forward(params: Params, cfg, x: jnp.ndarray, *,
 
     S0 = (state["wkv"].astype(jnp.float32) if state is not None
           else jnp.zeros((B, H, dh, dh), jnp.float32))
-    if getattr(cfg, "kernel_impl", "xla") in ("pallas", "interpret"):
-        from repro.kernels import ops as kops
-        out, S_end = kops.wkv6(rf, kf, vf, lwf, u, S0,
-                               impl=cfg.kernel_impl)
+    from repro.models.layers import kernel_dispatch
+    dispatch = kernel_dispatch(getattr(cfg, "kernel_impl", "xla"))
+    if dispatch is not None:
+        out, S_end = dispatch.wkv6(rf, kf, vf, lwf, u, S0)
     else:
         out, S_end = wkv6_chunked(rf, kf, vf, lwf, u, S0,
                                   unroll=getattr(cfg, "unroll_layers",

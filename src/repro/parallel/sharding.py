@@ -295,6 +295,50 @@ def serve_state_specs(state: Params, mesh: Mesh, *, paged: bool,
     return jax.tree_util.tree_map_with_path(visit, state)
 
 
+def kernel_axes(mesh: Optional[Mesh], *, batch: int, kv_heads: int,
+                rules: Optional[ShardingRules] = None
+                ) -> Tuple[Optional[str], Optional[str]]:
+    """(batch_axis, head_axis) mesh axes for per-shard KERNEL operand
+    specs — the shard_map boundary of the serving hot path
+    (kernels.ops.KernelDispatch).
+
+    Reuses ``serve_rules()``: the slot batch splits over "data", KV
+    heads over "model" — the same layout ``serve_state_specs`` gives
+    the KV/page pools, so the shard_map'd kernels read the pool slices
+    already resident on each shard.  A dim that does not divide its
+    mesh axis (or whose axis has extent 1) degrades to None exactly as
+    the rules do for placement: the kernel then runs replicated along
+    that axis — correct, just not parallel.  ``mesh=None`` -> fully
+    local (None, None).
+    """
+    if mesh is None:
+        return None, None
+    rules = rules or serve_rules()
+
+    def pick(logical: str, dim: int) -> Optional[str]:
+        m = rules.mesh_axes(logical, mesh)
+        if m is None or isinstance(m, tuple):
+            # serving kernels split over single named axes only
+            return None
+        return m if (mesh.shape[m] > 1 and dim % mesh.shape[m] == 0) \
+            else None
+
+    return pick(BATCH, batch), pick(KV_HEADS, kv_heads)
+
+
+def shard_map_call(body, mesh: Mesh, in_specs, out_specs):
+    """Version-compat shard_map: ``jax.shard_map`` (jax >= 0.5) or the
+    0.4.x experimental spelling — the same idiom parallel.pipeline
+    uses.  Replication checking is off: the kernel bodies contain
+    pallas_call, which the checker cannot see through."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def opt_specs(param_spec_tree: Params) -> Params:
     """Optimizer moments inherit the param sharding; scalars replicate."""
     return param_spec_tree

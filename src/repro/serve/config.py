@@ -53,6 +53,23 @@ class EngineConfig:
     # Greedy streams are token-identical to tp=1; scheduling is
     # unchanged (parallelism never alters WHICH tokens are computed).
     tp: int = 1
+    # -- kernel dispatch (kernels.ops.resolve, DESIGN.md §10) ---------
+    # "" inherits ArchConfig.kernel_impl; any other alias overrides it
+    # for this engine: "ref" | "xla" | "pallas" | "interpret".  The
+    # executor resolves the alias ONCE per (platform, mesh) into a
+    # frozen KernelDispatch — under tp > 1 the flash-decode /
+    # paged-decode / page-copy kernels then run per shard via
+    # shard_map.  Unknown aliases fail here, loudly, not at trace time.
+    kernel_impl: str = ""
+
+    def __post_init__(self):
+        if self.kernel_impl not in ("",) + self._IMPLS:
+            raise ValueError(
+                f"EngineConfig.kernel_impl={self.kernel_impl!r}: expected "
+                "'' (inherit ArchConfig.kernel_impl) or one of "
+                f"{self._IMPLS}")
+
+    _IMPLS = ("ref", "xla", "pallas", "interpret")
 
     @property
     def chunk(self) -> int:

@@ -29,6 +29,7 @@ whole-prompt reference (``greedy_reference``).
 from __future__ import annotations
 
 import collections
+import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -40,7 +41,7 @@ from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.serve.config import EngineConfig
 from repro.serve.executor import (Executor, LocalExecutor, ShardedExecutor,
-                                  is_recurrent)
+                                  is_recurrent, validate_kernel_parallelism)
 from repro.serve.memory import PageAllocator, PrefixCache
 from repro.serve.scheduler import Request, Scheduler
 
@@ -66,6 +67,11 @@ class Engine:
     def __init__(self, params: Params, cfg: ArchConfig, ecfg: EngineConfig,
                  rng: Optional[jax.Array] = None,
                  executor: Optional[Executor] = None):
+        if ecfg.kernel_impl:        # per-engine kernel dispatch override
+            cfg = dataclasses.replace(cfg, kernel_impl=ecfg.kernel_impl)
+        # impossible (impl, parallelism, arch) combos fail HERE, loudly,
+        # before any executor state exists or anything compiles
+        validate_kernel_parallelism(cfg, ecfg.tp)
         self.cfg = cfg
         self.ecfg = ecfg
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)

@@ -20,11 +20,12 @@ the same ``Engine``/``Scheduler`` drive both executors below.
   head -> shard assignment planned by
   ``core.prune.rank_balanced_partition`` so every shard carries ~equal
   pruned FLOPs/bytes.  The same step functions compile under the mesh
-  (GSPMD partitions the per-head einsums; the ambient-mesh
-  ``constrain`` hints in models/ keep activations batch-sharded), so
-  the two-shape contract holds PER PARALLELISM DEGREE.  Scheduling,
-  page ids and the prefix trie stay host-global — each shard stores
-  its own heads' slice of every page.
+  (GSPMD partitions the per-head einsums; the Pallas hot-path kernels
+  run per shard via shard_map — ``kernels.ops.resolve(impl, mesh)``;
+  the ambient-mesh ``constrain`` hints in models/ keep activations
+  batch-sharded), so the two-shape contract holds PER PARALLELISM
+  DEGREE.  Scheduling, page ids and the prefix trie stay host-global —
+  each shard stores its own heads' slice of every page.
 
 Donation: the decode state is the big buffer (KV pools); every step
 consumes the previous state and the engine drops its reference, so the
@@ -53,6 +54,32 @@ Params = Dict[str, Any]
 def is_recurrent(cfg: ArchConfig) -> bool:
     return any(mixer != MIXER_ATTN or mlp == MLP_RWKV
                for mixer, mlp in cfg.pattern)
+
+
+def validate_kernel_parallelism(cfg: ArchConfig, tp: int) -> None:
+    """Loud, early rejection of (kernel impl, parallelism) combos that
+    cannot work — replacing the silent ``kernel_impl="xla"`` demotion
+    the sharded executor used to ship (which hid a 100% kernel-coverage
+    loss under tp > 1).  Since the attention kernels moved under
+    shard_map, only one genuinely-impossible combo remains: recurrent
+    (mamba/rwkv) token mixers carry cross-step state per head, and
+    their kernels (``mamba_scan``/``wkv6``) have no shard_map
+    partitioning — there is no per-shard state threading to run them
+    on.  Attention kernels compose with any tp; KV-head counts that do
+    not divide the mesh degrade per kernel to replicated execution
+    (correct, just not parallel — see ``parallel.sharding
+    .kernel_axes``).  Also rejects unknown impl aliases (via
+    ``kernels.ops.resolve``) before anything compiles."""
+    from repro.kernels import ops as kops
+    dispatch = kops.resolve(cfg.kernel_impl)    # raises on bad aliases
+    if tp > 1 and dispatch.kernel_path and is_recurrent(cfg):
+        raise ValueError(
+            f"kernel_impl={dispatch.requested or dispatch.impl!r} with "
+            f"tp={tp} is unsupported on recurrent (mamba/rwkv) "
+            "architectures: mamba_scan/wkv6 carry cross-step recurrent "
+            "state and are not shard_map-partitioned, so the kernel "
+            "path cannot run per shard.  Use kernel_impl='xla' for "
+            "sharded recurrent serving.")
 
 
 def _mask_like(flags: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
@@ -188,6 +215,8 @@ class LocalExecutor:
         self.recurrent = is_recurrent(cfg)
         self.params = self._place_params(params)
         cfg = self._compile_cfg(cfg)
+        # the ONE resolved dispatch every compiled entry traces with
+        self.dispatch = cfg.kernel_impl
         donate = _donation_supported()
 
         def jit(fn, state_argnum=None):
@@ -216,15 +245,12 @@ class LocalExecutor:
         # batched page-content clone backing copy-on-write faults: the
         # ONE extra compiled shape prefix caching adds (a no-op without
         # it — compiled_shapes() counts it only once it runs)
-        kimpl = (cfg.kernel_impl
-                 if cfg.kernel_impl in ("pallas", "interpret") else "ref")
+        dispatch = self.dispatch
 
         def copy_fn(blocks, src, dst):
-            from repro.kernels import ops as kops
-
             def cp(path, leaf):
                 if _is_kv(path):
-                    return kops.page_copy(leaf, src, dst, impl=kimpl)
+                    return dispatch.page_copy(leaf, src, dst)
                 return leaf
 
             return self._pin_blocks(
@@ -274,8 +300,12 @@ class LocalExecutor:
         return blocks
 
     def _compile_cfg(self, cfg: ArchConfig) -> ArchConfig:
-        """The config the step functions are traced with."""
-        return cfg
+        """The config the step functions are traced with:
+        ``kernel_impl`` resolved once into a frozen ``KernelDispatch``
+        (platform-canonical; no mesh on a single device)."""
+        from repro.kernels import ops as kops
+        return dataclasses.replace(cfg,
+                                   kernel_impl=kops.resolve(cfg.kernel_impl))
 
     def _ctx(self):
         """Mesh context the compiled calls run under (no-op locally)."""
@@ -356,6 +386,25 @@ class LocalExecutor:
     def plan_salt(self) -> Tuple:
         return ()
 
+    def kernel_report(self) -> Dict[str, str]:
+        """What each compiled entry ACTUALLY runs — ground truth for
+        ``examples/serve_pruned`` reporting (the old executor could
+        claim "pallas" while silently tracing XLA under tp > 1).  The
+        hot one-token steps (decode/draft) take the flash-decode
+        kernels on the kernel path; chunked prefill/verify windows
+        (S > 1) always take the masked einsum path."""
+        d = self.dispatch
+        hot = (d.describe()
+               if (d.kernel_path and not self.recurrent
+                   and self.cfg.attn_logit_softcap == 0) else "xla")
+        rep = {"decode_step": hot, "prefill_chunk": "xla"}
+        if self._draft is not None:
+            rep["draft_step"] = hot
+            rep["verify_chunk"] = "xla"
+        if self._copy is not None:
+            rep["page_copy"] = d.describe() if d.kernel_path else "ref"
+        return rep
+
 
 class ShardedExecutor(LocalExecutor):
     """Rank-balanced tensor-parallel executor (DESIGN.md §10).
@@ -383,10 +432,19 @@ class ShardedExecutor(LocalExecutor):
     (the sharding rules drop non-divisible dims) — correct, just not
     parallel.
 
-    Pallas step kernels are not yet partitioned under GSPMD, so the
-    sharded step functions compile the XLA paths (see
-    ``_compile_cfg``); kernels return per-shard once they move under
-    ``shard_map``.
+    Pallas step kernels run PER SHARD: ``_compile_cfg`` resolves
+    ``kernel_impl`` against the executor's mesh, so the flash-decode /
+    paged-decode / page-copy calls inside the step functions trace
+    under ``shard_map`` with serve-rules operand specs
+    (``kernels.ops.KernelDispatch``).  Page ids stay host-global — the
+    pools' page-row axis is replicated, so the scalar-prefetched page
+    tables cross the shard boundary untranslated and each shard reads
+    its own KV-head slice of the same rows.  Per-(slot, kv-head) grid
+    cells are independent, so per-shard kernel outputs are bitwise
+    identical to the single-device kernels.  The one combo that cannot
+    run per shard — recurrent kernels under tp > 1 — is rejected with
+    a ``ValueError`` up front (``validate_kernel_parallelism``), never
+    silently demoted.
     """
 
     def __init__(self, params: Params, cfg: ArchConfig,
@@ -397,6 +455,7 @@ class ShardedExecutor(LocalExecutor):
         tp = int(tp if tp is not None else ecfg.tp)
         if tp < 1:
             raise ValueError(f"tensor-parallel degree must be >= 1: {tp}")
+        validate_kernel_parallelism(cfg, tp)    # before anything compiles
         self.mesh = make_host_mesh(model=tp)    # clear error on misfit
         has_attn = any(m == MIXER_ATTN for m, _ in cfg.pattern)
         if plan is None and has_attn and cfg.n_kv_heads % tp == 0:
@@ -441,9 +500,13 @@ class ShardedExecutor(LocalExecutor):
         return {"blocks": state["blocks"], "index": idx}
 
     def _compile_cfg(self, cfg: ArchConfig) -> ArchConfig:
-        if cfg.kernel_impl in ("pallas", "interpret"):
-            return dataclasses.replace(cfg, kernel_impl="xla")
-        return cfg
+        """Resolve ``kernel_impl`` AGAINST THE MESH: the step functions
+        then trace the Pallas/interpret kernels per shard via shard_map
+        (the silent ``kernel_impl="xla"`` demotion that used to live
+        here is gone)."""
+        from repro.kernels import ops as kops
+        return dataclasses.replace(
+            cfg, kernel_impl=kops.resolve(cfg.kernel_impl, mesh=self.mesh))
 
     def _ctx(self):
         return self.mesh      # Mesh is a reusable context manager

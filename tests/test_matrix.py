@@ -113,6 +113,38 @@ def test_layout_exactness_matrix(tp, layout, spec_k, prune):
     assert eng.exe.tp == tp
 
 
+def test_tp2_interpret_kernel_cell():
+    """tp=2 paged+prefix+spec with ``kernel_impl="interpret"``: the
+    sharded executor now COMPILES the Pallas kernel paths per shard
+    (the silent XLA demotion is gone), and the stream must still match
+    the dense tp=1 whole-prompt oracle token-for-token — across a cold
+    pass and a warm prefix-cache replay (which drives the shard_map'd
+    page-copy kernel through COW faults)."""
+    if jax.device_count() < 2 or jax.device_count() % 2:
+        pytest.skip("needs an even device count >= 2 (CI sharded leg)")
+    params, cfg = _pruned_model(0.5)
+    prompts_t, refs = _trace(0.5)
+    prompts = [np.asarray(p, np.int32) for p in prompts_t]
+    ecfg = EngineConfig(slots=2, max_len=32, prefill_chunk=4,
+                        spec_k=2, draft_rank_ratio=0.5, paged=True,
+                        page_tokens=4, prefix_cache=True, tp=2,
+                        kernel_impl="interpret")
+    eng = Engine(params, cfg, ecfg)
+    report = eng.exe.kernel_report()
+    assert report["decode_step"] == "interpret+shard_map(model=2)"
+    assert report["page_copy"] == "interpret+shard_map(model=2)"
+    for pass_i in range(2):
+        reqs = [Request(uid=100 * pass_i + i, prompt=p, max_new_tokens=MAX_NEW)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        for r, want in zip(reqs, refs):
+            assert r.done and tuple(r.generated) == want, (pass_i, r.uid)
+        if pass_i == 1:
+            assert all(r.cached_tokens > 0 for r in reqs[:-1])
+    shapes = eng.compiled_shapes()
+    assert shapes is None or 2 <= shapes <= 5   # 2 base +2 spec +1 COW
+
+
 @pytest.mark.parametrize("layout", ("dense", "prefix"))
 def test_tp_streams_identical_to_local(layout):
     """tp=2 cells must be TOKEN-IDENTICAL to the tp=1 engine (not just
