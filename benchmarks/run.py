@@ -1,9 +1,12 @@
 """Benchmark driver: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run``          # all
-``PYTHONPATH=src python -m benchmarks.run table1``   # one
+``PYTHONPATH=src python -m benchmarks.run``                  # all
+``PYTHONPATH=src python -m benchmarks.run table1``           # substring
+``PYTHONPATH=src python -m benchmarks.run --only serve_bench``  # exact
 Each module returns {..., "checks": {name: bool}}; the driver reports
-every check and exits non-zero if any reproduced claim fails.
+every check and exits non-zero if any reproduced claim fails OR any
+module crashes (a raise is recorded as that module's failure, the
+remaining modules still run, and the exit code is non-zero).
 
 Perf modules (``*_bench``) additionally get a machine-readable dump
 ``BENCH_<stem>.json`` (e.g. BENCH_serve.json, BENCH_kernel.json) written
@@ -40,13 +43,35 @@ def _write_bench_json(name: str, out: dict, elapsed_s: float) -> str:
 
 
 def main(argv=None) -> int:
-    argv = argv if argv is not None else sys.argv[1:]
+    argv = list(argv if argv is not None else sys.argv[1:])
+    # --only <module>: exact-name filter (repeatable) for local
+    # iteration; bare args remain substring filters
+    only, subs = [], []
+    i = 0
+    while i < len(argv):
+        if argv[i] == "--only":
+            if i + 1 >= len(argv):
+                print("--only requires a module name")
+                return 2
+            only.append(argv[i + 1])
+            i += 2
+        elif argv[i].startswith("--only="):
+            only.append(argv[i].split("=", 1)[1])
+            i += 1
+        else:
+            subs.append(argv[i])
+            i += 1
+    unknown = [m for m in only if m not in MODULES]
+    if unknown:
+        print(f"--only: unknown modules {unknown}; known: {MODULES}")
+        return 2
     selected = [m for m in MODULES
-                if not argv or any(a in m for a in argv)]
+                if (m in only if only else
+                    (not subs or any(a in m for a in subs)))]
     if not selected:
         # a typo'd selector must not report ALL CHECKS PASS (CI runs
         # this driver with explicit module names)
-        print(f"no benchmark modules match {argv}; known: {MODULES}")
+        print(f"no benchmark modules match {subs}; known: {MODULES}")
         return 2
     failures = []
     for name in selected:

@@ -61,6 +61,22 @@ Four scenarios connect the paper's rank pruning to the serving path:
    per-shard paged flash-decode kernel timing
    (``paged_decode_kernel_ms_wall``).
 
+6. **Overload + chaos** (DESIGN.md §11) — a bursty two-priority trace
+   (low-priority burst, then a high-priority burst that must overtake
+   it) against a TIGHT page budget, replayed twice: fault-free and
+   under a PINNED deterministic ``FaultPlan`` (seed ``CHAOS_SEED``),
+   both with pinned mid-trace cancels and per-step allocator/trie
+   invariant checks.  Gated: zero invariant violations; every request
+   terminal with the pool fully free at drain; every DONE stream
+   token-identical to the fault-free uncontended replay and every
+   early exit a PREFIX of it; high-priority p95 TTFT (deterministic
+   engine steps) strictly better than low-priority; the fault run
+   actually injects and recovers.  The faulted run's ``engine.stats()``
+   lands in ``CHAOS_serve.json`` (CI uploads it).  Setting
+   ``SERVE_BENCH_SCENARIO=chaos`` runs ONLY this scenario (the CI
+   chaos-smoke job; its partial BENCH_serve.json is never fed to
+   compare.py).
+
 What must hold on CPU (timings vary, orderings don't):
   * both engines compile exactly TWO step shapes each over the whole
     mixed-length trace (the two-shape contract survives paging), plus
@@ -94,6 +110,7 @@ the driver also writes the machine-readable BENCH_serve.json)
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import sys
 import time
@@ -117,7 +134,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import clover_decompose, clover_prune
 from repro.models import init_lm_params
-from repro.serve import Engine, EngineConfig, Request, greedy_reference
+from repro.serve import (DONE, Engine, EngineConfig, FaultPlan, Request,
+                         greedy_reference)
 
 PRUNE_RATIOS = (0.0, 0.5)      # fraction of every head's rank removed
 N_REQUESTS = 8
@@ -141,6 +159,12 @@ PREFIX_POOL_PAGES = 28
 PREFIX_SPEC_KS = (0, 4)
 # scenario 5: tensor-parallel degrees (tp=1 reuses the paged run)
 TP_DEGREES = (1, 2)
+# scenario 6: overload/chaos trace — the PINNED fault seed CI runs with
+CHAOS_SEED = 20260807
+CHAOS_REQUESTS = 14
+CHAOS_POOL_PAGES = 8           # < 3 full sequences' worth: the three
+CHAOS_INTENSITY = 0.06         # slots contend for pages, not just slots
+CHAOS_MAX_STEPS = 3000
 
 
 def _poisson_trace(rng: np.random.Generator, n: int, vocab: int,
@@ -305,6 +329,161 @@ def _prefix_replay(params, cfg, ecfg: EngineConfig, sys_prompt, tails):
     return eng, best[0], best[1]
 
 
+def _chaos_trace(vocab: int):
+    """Pinned scenario-6 trace: a low-priority burst at step 0, two
+    high-priority waves (steps 6 and 32) that must overtake the queued
+    lows, low-priority stragglers at step 30 (under the second high
+    wave), and two mid-trace cancels (one mid-decode, one queued —
+    both deterministic).  Odd-uid lows carry deadlines that become
+    unmeetable under the priority contention and get shed; even-uid
+    lows have none, so the ones stuck behind the high waves record the
+    large TTFTs the priority-SLO gate compares against."""
+    rng = np.random.default_rng(CHAOS_SEED)
+    specs, arrivals = [], {}
+    for uid in range(CHAOS_REQUESTS):
+        high = uid % 3 == 2
+        specs.append(dict(
+            uid=uid,
+            prompt=rng.integers(0, vocab,
+                                int(rng.integers(4, 13))).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 9)),
+            priority=2 if high else 0,
+            deadline_steps=(int(rng.integers(8, 21))
+                            if not high and uid % 2 == 1 else None)))
+        if high:
+            arrivals[uid] = 6 if uid < 8 else 32
+        else:
+            arrivals[uid] = 0 if uid < 7 else 30
+    cancels = {8: 3, 34: 9}
+    return specs, arrivals, cancels
+
+
+def _chaos_run(params, cfg, specs, arrivals, cancels,
+               faults: "FaultPlan | None"):
+    """Replay the pinned overload trace once.  Returns (engine,
+    requests, metrics, invariants_ok): the allocator/trie invariants
+    are re-verified after EVERY step; a violation is recorded as a
+    failed check instead of crashing the whole benchmark module."""
+    ecfg = EngineConfig(slots=3, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                        paged=True, page_tokens=PAGE_TOKENS,
+                        n_pages=CHAOS_POOL_PAGES, step_retries=1,
+                        quarantine_steps=2, watchdog_steps=32)
+    eng = Engine(params, cfg, ecfg, faults=faults)
+    reqs = [Request(**s) for s in specs]
+    pending = sorted(reqs, key=lambda r: (arrivals[r.uid], r.uid))
+    invariants_ok = True
+    t0 = time.monotonic()
+    step = 0
+    while step < CHAOS_MAX_STEPS:
+        while pending and arrivals[pending[0].uid] <= step:
+            eng.submit(pending.pop(0))
+        if step in cancels:
+            eng.cancel(cancels[step])
+        eng.step()
+        try:
+            eng.alloc.assert_consistent(context=f"chaos step {step}")
+        except AssertionError:
+            invariants_ok = False
+        step += 1
+        if not pending and not eng.sched.busy:
+            break
+    wall = time.monotonic() - t0
+    c = eng.stats()["counters"]
+    n_tok = sum(len(r.generated) for r in reqs)
+    m = {
+        # GATED: tokens emitted per engine step across shedding,
+        # cancellation and (in the faulted run) the pinned fault
+        # schedule — deterministic because every decision is seeded
+        "tokens_per_step": round(n_tok / max(1, step), 4),
+        "tokens_per_s_wall": round(n_tok / max(wall, 1e-9), 2),
+        "steps": step,
+        "done": c.get("done", 0),
+        "shed": c.get("shed", 0),
+        "timed_out": c.get("timed_out", 0),
+        "cancelled": c.get("cancelled", 0),
+        "preemptions": eng.sched.preemptions,
+        "ttft_steps_p95_high": eng.metrics.ttft_p95_steps(2),
+        "ttft_steps_p95_low": eng.metrics.ttft_p95_steps(0),
+    }
+    if faults is not None:
+        m["faults_injected"] = faults.total_injected
+        m["retries"] = c.get("retries", 0)
+        m["quarantines"] = c.get("quarantines", 0)
+        m["watchdog_sheds"] = c.get("watchdog_sheds", 0)
+    return eng, reqs, m, invariants_ok
+
+
+def _scenario_chaos(params0, cfg0, rows, checks, metrics):
+    """Scenario 6 (DESIGN.md §11): the pinned two-priority overload
+    trace, fault-free and under the pinned ``FaultPlan``, gated on the
+    exactness contract + the priority SLO; writes CHAOS_serve.json."""
+    dp, dcfg, _ = clover_decompose(params0, cfg0, peft=False)
+    params, cfg = clover_prune(dp, dcfg, qk_ratio=0.5, vo_ratio=0.5)
+    specs, arrivals, cancels = _chaos_trace(cfg0.vocab_size)
+
+    # fault-free UNCONTENDED replay: the oracle every surviving stream
+    # must match token-for-token (no priorities, deadlines, faults or
+    # page pressure — greedy streams don't depend on co-tenants)
+    ref_eng = Engine(params, cfg, EngineConfig(
+        slots=4, max_len=MAX_LEN, prefill_chunk=CHUNK))
+    ref_reqs = [Request(uid=s["uid"], prompt=s["prompt"],
+                        max_new_tokens=s["max_new_tokens"])
+                for s in specs]
+    ref_eng.run(ref_reqs)
+    assert all(r.status == DONE for r in ref_reqs)
+    ref = {r.uid: r.generated for r in ref_reqs}
+
+    chaos_m = {}
+    for mode, faults in (
+            ("nofault", None),
+            ("faulted", FaultPlan.chaos(seed=CHAOS_SEED,
+                                        intensity=CHAOS_INTENSITY))):
+        eng, reqs, m, inv_ok = _chaos_run(params, cfg, specs, arrivals,
+                                          cancels, faults)
+        chaos_m[mode] = m
+        for k, v in m.items():
+            rows.append((f"chaos_{mode}", k, v))
+        checks[f"chaos_{mode}_invariants_hold"] = inv_ok
+        # every request terminal, each seen exactly once by metrics
+        checks[f"chaos_{mode}_all_terminal"] = (
+            all(r.done for r in reqs)
+            and eng.metrics.n_terminal == len(reqs))
+        # shed/timed-out/cancelled requests must leave no trace: with
+        # no prefix cache, drain returns the pool to fully free
+        checks[f"chaos_{mode}_pool_fully_free"] = (
+            eng.alloc.free_pages == eng.alloc.n_pages)
+        # exactness: DONE == oracle, every early exit a PREFIX of it
+        checks[f"chaos_{mode}_done_matches_replay"] = all(
+            r.generated == ref[r.uid]
+            for r in reqs if r.status == DONE)
+        checks[f"chaos_{mode}_partials_are_prefixes"] = all(
+            r.generated == ref[r.uid][:len(r.generated)]
+            for r in reqs if r.status != DONE)
+        if mode == "nofault":
+            # the priority SLO: under overload, high-priority p95 TTFT
+            # (deterministic engine steps) strictly beats low-priority
+            hi, lo = m["ttft_steps_p95_high"], m["ttft_steps_p95_low"]
+            checks["chaos_high_priority_ttft_p95_better"] = (
+                hi is not None and lo is not None and hi < lo)
+            # the trace must actually exercise the overload machinery
+            # even before faults — a future trace edit that quietly
+            # stops shedding/cancelling would otherwise gate nothing
+            checks["chaos_overload_exercised"] = (
+                m["shed"] + m["timed_out"] + m["cancelled"] > 0)
+        else:
+            checks["chaos_faults_injected"] = m["faults_injected"] > 0
+            checks["chaos_recovery_exercised"] = (
+                m["retries"] + m["quarantines"] > 0)
+            # CI uploads the faulted run's full stats as an artifact
+            payload = {"seed": CHAOS_SEED, "intensity": CHAOS_INTENSITY,
+                       "stats": eng.stats(), "metrics": m}
+            with open("CHAOS_serve.json", "w") as fh:
+                json.dump(payload, fh, indent=2, sort_keys=True,
+                          default=float)
+            print("  wrote CHAOS_serve.json")
+    metrics["chaos"] = chaos_m
+
+
 def _kv_tokens_per_unpruned_token(cfg0, cfg) -> float:
     """How many tokens of cfg's (pruned-rank) cache fit in the HBM of
     one unpruned-rank token — bytes/token scales with r_qk + r_vo."""
@@ -314,6 +493,23 @@ def _kv_tokens_per_unpruned_token(cfg0, cfg) -> float:
 def run(verbose: bool = True):
     cfg0 = get_config("musicgen-large").reduced()
     params0 = init_lm_params(cfg0, jax.random.PRNGKey(0))
+
+    # SERVE_BENCH_SCENARIO=chaos runs ONLY scenario 6 (the CI
+    # chaos-smoke job).  Unknown values fail loudly — a typo in CI
+    # must not silently run the whole module and pass.
+    only = os.environ.get("SERVE_BENCH_SCENARIO", "").strip().lower()
+    if only and only != "chaos":
+        raise ValueError(
+            f"unknown SERVE_BENCH_SCENARIO={only!r}; supported: 'chaos'")
+    if only == "chaos":
+        rows, checks, metrics = [], {}, {}
+        _scenario_chaos(params0, cfg0, rows, checks, metrics)
+        if verbose:
+            print("case,metric,value")
+            for tag, k, v in rows:
+                print(f"{tag},{k},{v}")
+        return {"rows": rows, "checks": checks, "metrics": metrics}
+
     rng = np.random.default_rng(0)
     trace = _poisson_trace(rng, N_REQUESTS, cfg0.vocab_size)
     # burst of LONG prompts: everything arrives up front, so concurrency
@@ -563,6 +759,9 @@ def run(verbose: bool = True):
     # full-model step, not just the bonus token every time)
     checks["spec_accepted_per_round_gt1_prune0.50_k4"] = (
         spec_accept[0.5] > 1.0)
+
+    # -- overload + chaos (DESIGN.md §11) ------------------------------
+    _scenario_chaos(params0, cfg0, rows, checks, metrics)
 
     if verbose:
         print("case,metric,value")

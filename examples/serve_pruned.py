@@ -28,8 +28,20 @@ ACTUALLY used, e.g. ``interpret+shard_map(model=2)`` when the Pallas
 hot path compiled per shard; ``--kernel-impl`` overrides the dispatch
 (``ref | xla | pallas | interpret``).
 
+The final section demonstrates GRACEFUL DEGRADATION under overload
+(DESIGN.md §11): a two-priority burst against a deliberately small
+engine, low-priority requests carrying ``--deadline-steps``, one
+request cancelled mid-flight, and — with ``--chaos-seed`` — a
+deterministic fault schedule injected at the host boundaries (allocator
+exhaustion, step failures, NaN logits, page-copy faults) that the
+engine must absorb via bounded retry / quarantine / shedding while
+every surviving stream stays token-exact.  It ends by printing the
+``engine.stats()`` counter + per-priority-class latency table.
+
 Run:  PYTHONPATH=src python examples/serve_pruned.py
       PYTHONPATH=src python examples/serve_pruned.py --spec-k 4
+      PYTHONPATH=src python examples/serve_pruned.py \
+          --chaos-seed 7 --deadline-steps 20
       XLA_FLAGS=--xla_force_host_platform_device_count=4 \
           PYTHONPATH=src python examples/serve_pruned.py \
           --tp 2 --kernel-impl interpret
@@ -44,7 +56,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import clover_decompose, clover_prune
 from repro.models import init_lm_params
-from repro.serve import Engine, EngineConfig, Request, greedy_reference
+from repro.serve import (Engine, EngineConfig, FaultPlan, Request,
+                         greedy_reference)
 
 
 def main():
@@ -66,6 +79,16 @@ def main():
                          "replay (default: inherit the arch config; "
                          "'interpret' compiles the Pallas hot path "
                          "per shard)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a deterministic FaultPlan with this "
+                         "seed into the overload demo (omit = "
+                         "fault-free; same seed = same faults)")
+    ap.add_argument("--deadline-steps", type=int, default=24,
+                    help="deadline (engine steps) on the low-priority "
+                         "half of the overload demo: queued requests "
+                         "that provably cannot meet it are shed when "
+                         "higher-priority work is pending; running "
+                         "ones time out with a partial stream")
     args = ap.parse_args()
     cfg = get_config("musicgen-large").reduced()
     params = init_lm_params(cfg, jax.random.PRNGKey(0))
@@ -194,6 +217,70 @@ def main():
           f"({epc.sched.prefix_hits} hits, "
           f"{len(epc.prefix)} trie nodes, "
           f"{epc.compiled_shapes()} compiled step shapes)")
+
+    # overload + graceful degradation (DESIGN.md §11): a two-priority
+    # burst against a deliberately small engine.  Lows carry
+    # --deadline-steps; one low is cancelled mid-decode; --chaos-seed
+    # adds a deterministic fault schedule at the host boundaries.
+    # Whatever gets shed / times out / is cancelled must leave the
+    # allocator exactly as if it never ran — the surviving streams
+    # stay token-exact (the chaos soak and serve_bench scenario 6
+    # gate this; here we just watch it degrade gracefully).
+    faults = (FaultPlan.chaos(seed=args.chaos_seed, intensity=0.05)
+              if args.chaos_seed is not None else None)
+    eo = Engine(pparams, pcfg,
+                EngineConfig(slots=2, max_len=96, prefill_chunk=8,
+                             paged=True, page_tokens=8, n_pages=8,
+                             step_retries=1, quarantine_steps=2,
+                             watchdog_steps=32),
+                faults=faults)
+    mk = rng.integers  # overload trace: 6 lows burst, 3 highs overtake
+    lows = [Request(uid=100 + i,
+                    prompt=mk(0, cfg.vocab_size,
+                              int(mk(4, 12))).astype(np.int32),
+                    max_new_tokens=8, priority=0,
+                    deadline_steps=args.deadline_steps)
+            for i in range(6)]
+    highs = [Request(uid=200 + i,
+                     prompt=mk(0, cfg.vocab_size,
+                               int(mk(4, 12))).astype(np.int32),
+                     max_new_tokens=8, priority=1)
+             for i in range(3)]
+    for r in lows:
+        eo.submit(r)
+    step = 0
+    while eo.sched.busy and step < 500:
+        if step == 2:                 # high wave jumps the low queue
+            for r in highs:
+                eo.submit(r)
+        if step == 4:                 # client walks away mid-decode
+            eo.cancel(lows[1].uid)
+        eo.step()
+        step += 1
+    chaos = (f"chaos seed {args.chaos_seed}" if faults is not None
+             else "fault-free")
+    print(f"overload demo ({chaos}, deadline {args.deadline_steps} "
+          f"steps): drained in {step} steps")
+    for r in lows + highs:
+        print(f"  uid {r.uid} prio {r.priority}: {r.status:>9} "
+              f"({len(r.generated)}/{r.max_new_tokens} tokens)")
+    st = eo.stats()
+    print("  counters: " + ", ".join(
+        f"{k}={v}" for k, v in sorted(st["counters"].items())))
+    if faults is not None:
+        print(f"  faults injected: {faults.total_injected} "
+              f"(sites {dict(faults.injected)})")
+    hdr = (f"  {'class':>5} {'n':>3} {'ttft_p50':>9} {'ttft_p95':>9} "
+           f"{'itl_p50':>8} {'itl_p95':>8}   (engine steps)")
+    print(hdr)
+    for prio, row in sorted(st["classes"].items()):
+        print(f"  {prio:>5} {row.get('n_ttft_steps', 0):>3} "
+              f"{row.get('ttft_steps_p50', float('nan')):>9.1f} "
+              f"{row.get('ttft_steps_p95', float('nan')):>9.1f} "
+              f"{row.get('itl_steps_p50', float('nan')):>8.1f} "
+              f"{row.get('itl_steps_p95', float('nan')):>8.1f}")
+    print(f"  pool after drain: {eo.alloc.free_pages}/"
+          f"{eo.alloc.n_pages} pages free")
 
 
 if __name__ == "__main__":

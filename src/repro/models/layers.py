@@ -298,7 +298,15 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
         N, PT = kv_cache["k"].shape[0], kv_cache["k"].shape[1]
         P = page_table.shape[1]
         pos = cache_index[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
-        page = jnp.take_along_axis(page_table, pos // PT, axis=1)   # (B, S)
+        # Positions past the table (an idle slot whose index ran beyond
+        # its pages) route to the garbage row EXPLICITLY: an out-of-
+        # bounds take_along_axis index has mode-dependent lowering, and
+        # after the ``page * PT + pos % PT`` arithmetic the scatter dest
+        # can alias another slot's live page.
+        pslot = pos // PT                                           # (B, S)
+        page = jnp.take_along_axis(page_table,
+                                   jnp.clip(pslot, 0, P - 1), axis=1)
+        page = jnp.where(pslot >= P, N - 1, page)
         if write_floor is not None:
             # read-only prefix (prefix-cached shared pages): reroute
             # any sub-floor write to the garbage row N-1.  The engine's

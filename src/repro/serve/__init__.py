@@ -1,13 +1,17 @@
 """Serving: batched engine over (optionally paged) CLOVER-rank KV
-caches with copy-on-write prefix caching and rank-balanced tensor
-parallelism.
+caches with copy-on-write prefix caching, rank-balanced tensor
+parallelism, and an overload-safe robustness layer.
 
-Package layout (DESIGN.md §10):
+Package layout (DESIGN.md §10, §11):
   * ``config``    — ``EngineConfig``
   * ``memory``    — ``PageAllocator``, ``PrefixCache`` (host-global)
-  * ``scheduler`` — ``Request``, ``Scheduler``, slot phases
+  * ``scheduler`` — ``Request``, ``Scheduler``, slot phases, request
+    lifecycle statuses (QUEUED .. DONE/SHED/TIMED_OUT/CANCELLED)
   * ``executor``  — ``Executor`` protocol, ``LocalExecutor``,
     ``ShardedExecutor`` (compiled entries + device placement)
+  * ``faults``    — ``FaultPlan`` deterministic fault injection,
+    ``FaultError``
+  * ``metrics``   — ``ServeMetrics`` behind ``Engine.stats()``
   * ``engine``    — ``Engine`` orchestration, ``greedy_reference``
 
 The names below are compatibility re-exports: ``from repro.serve
@@ -17,5 +21,9 @@ from repro.serve.config import EngineConfig  # noqa: F401
 from repro.serve.engine import Engine, greedy_reference  # noqa: F401
 from repro.serve.executor import (  # noqa: F401
     Executor, LocalExecutor, ShardedExecutor)
+from repro.serve.faults import FaultError, FaultPlan  # noqa: F401
 from repro.serve.memory import PageAllocator, PrefixCache  # noqa: F401
-from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    CANCELLED, DONE, QUEUED, RUNNING, SHED, TERMINAL, TIMED_OUT,
+    Request, Scheduler)

@@ -61,6 +61,24 @@ class EngineConfig:
     # paged-decode / page-copy kernels then run per shard via
     # shard_map.  Unknown aliases fail here, loudly, not at trace time.
     kernel_impl: str = ""
+    # -- robustness (DESIGN.md §11) -----------------------------------
+    # A failed compiled step (raised, or returned non-finite logits) is
+    # retried with the SAME inputs up to step_retries times; when retry
+    # is exhausted the active slots are quarantined for
+    # quarantine_steps engine steps and their requests requeued (exact
+    # continuation — generated tokens fold into the effective prompt,
+    # same as preemption).  The watchdog sheds the lowest-priority
+    # request when no slot makes progress for watchdog_steps
+    # consecutive steps (0 disables), so a wedged engine degrades
+    # instead of spinning to max_steps.
+    step_retries: int = 2
+    quarantine_steps: int = 8
+    watchdog_steps: int = 64
+    # Donating the device state buffer into compiled steps saves a copy
+    # on TPU/GPU but makes same-input retry impossible (the input
+    # buffer is consumed).  Fault injection therefore requires
+    # donate_state=False on donating platforms; CPU never donates.
+    donate_state: bool = True
 
     def __post_init__(self):
         if self.kernel_impl not in ("",) + self._IMPLS:
@@ -68,6 +86,18 @@ class EngineConfig:
                 f"EngineConfig.kernel_impl={self.kernel_impl!r}: expected "
                 "'' (inherit ArchConfig.kernel_impl) or one of "
                 f"{self._IMPLS}")
+        if self.step_retries < 0:
+            raise ValueError(
+                f"EngineConfig.step_retries={self.step_retries}: must be "
+                ">= 0")
+        if self.quarantine_steps < 0:
+            raise ValueError(
+                f"EngineConfig.quarantine_steps={self.quarantine_steps}: "
+                "must be >= 0")
+        if self.watchdog_steps < 0:
+            raise ValueError(
+                f"EngineConfig.watchdog_steps={self.watchdog_steps}: "
+                "must be >= 0 (0 disables the watchdog)")
 
     _IMPLS = ("ref", "xla", "pallas", "interpret")
 

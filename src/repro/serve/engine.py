@@ -25,6 +25,19 @@ run self-speculatively (``spec_k``, DESIGN.md §8).  ``tp > 1`` serves
 the same streams over head-sharded params/pools (DESIGN.md §10).  All
 compositions emit greedy streams token-identical to the isolated
 whole-prompt reference (``greedy_reference``).
+
+ROBUSTNESS (DESIGN.md §11): every compiled call runs behind a guard
+that (a) optionally injects deterministic faults from a ``FaultPlan``
+and (b) always validates the returned logits are finite.  A failed
+call is retried with the SAME inputs (host bookkeeping only mutates
+AFTER a call succeeds, and the state buffer is not donated when faults
+are enabled); on retry exhaustion the step aborts, active slots are
+quarantined and their requests requeued for an exact re-prefill
+continuation.  A progress watchdog sheds the lowest-priority request
+when nothing moves for ``watchdog_steps`` steps, and per-step deadline
+enforcement times out / sheds requests through the scheduler.
+Surviving streams under ANY fault schedule stay token-identical to the
+fault-free replay.
 """
 from __future__ import annotations
 
@@ -42,7 +55,9 @@ from repro.models import transformer as T
 from repro.serve.config import EngineConfig
 from repro.serve.executor import (Executor, LocalExecutor, ShardedExecutor,
                                   is_recurrent, validate_kernel_parallelism)
+from repro.serve.faults import FaultError, FaultPlan
 from repro.serve.memory import PageAllocator, PrefixCache
+from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import Request, Scheduler
 
 Params = Dict[str, Any]
@@ -63,10 +78,16 @@ def greedy_reference(params: Params, cfg: ArchConfig, prompt,
     return gen
 
 
+class _StepAbort(Exception):
+    """A step failed after exhausting its retries: unwind to recovery
+    (quarantine + requeue) without touching host bookkeeping."""
+
+
 class Engine:
     def __init__(self, params: Params, cfg: ArchConfig, ecfg: EngineConfig,
                  rng: Optional[jax.Array] = None,
-                 executor: Optional[Executor] = None):
+                 executor: Optional[Executor] = None,
+                 faults: Optional[FaultPlan] = None):
         if ecfg.kernel_impl:        # per-engine kernel dispatch override
             cfg = dataclasses.replace(cfg, kernel_impl=ecfg.kernel_impl)
         # impossible (impl, parallelism, arch) combos fail HERE, loudly,
@@ -95,6 +116,12 @@ class Engine:
             executor = (ShardedExecutor(params, cfg, ecfg) if ecfg.tp > 1
                         else LocalExecutor(params, cfg, ecfg))
         self.exe = executor
+        if faults is not None and getattr(executor, "donates_state", False):
+            raise ValueError(
+                "fault injection requires EngineConfig.donate_state="
+                "False on this platform: same-input step retry cannot "
+                "reuse a donated state buffer")
+        self.faults = faults
         self.state = executor.init_state()
         if ecfg.paged:
             self.alloc: Optional[PageAllocator] = PageAllocator(
@@ -112,10 +139,22 @@ class Engine:
                     cfg.clover.qk_rank, cfg.clover.vo_rank,
                     ecfg.page_tokens) + tuple(executor.plan_salt())
             self.prefix = PrefixCache(self.alloc, salt=salt)
-        self.sched = Scheduler(ecfg, recurrent, self.alloc, self.prefix)
+        self.metrics = ServeMetrics()
+        self.sched = Scheduler(ecfg, recurrent, self.alloc, self.prefix,
+                               metrics=self.metrics)
         # host mirror of state["index"] (tokens written per slot this
         # tenure) — drives page coverage without device round-trips
         self.written = np.zeros(ecfg.slots, np.int64)
+        # deterministic engine step clock (never resets across run()s)
+        self.steps = 0
+        # progress watchdog: monotone work counters + the last step any
+        # of them moved (tokens committed, prompt tokens prefilled, or
+        # a request reaching a terminal state all count as progress)
+        self._tokens_committed = 0
+        self._prefill_consumed = 0
+        self._last_progress = 0
+        self.watchdog_sheds = 0
+        self._alloc_fault = False
         # serving stats
         self.max_active = 0
         self.peak_page_util = 0.0
@@ -128,9 +167,38 @@ class Engine:
     def submit(self, req: Request):
         self.sched.submit(req)
 
+    def cancel(self, uid: int) -> bool:
+        """Client cancellation: terminal state CANCELLED, pages freed
+        through the preemption decref path, nothing published.  False
+        when ``uid`` is unknown or already terminal."""
+        return self.sched.cancel(uid)
+
     def compiled_shapes(self) -> Optional[int]:
         """Executor jit-cache total (see Executor.compiled_shapes)."""
         return self.exe.compiled_shapes()
+
+    def stats(self) -> dict:
+        """Serving metrics snapshot: lifecycle/fault counters, per-
+        priority-class TTFT/ITL percentiles (deterministic steps and
+        wall clock), scheduler and pool counters."""
+        out = self.metrics.snapshot()
+        out["steps"] = self.steps
+        out["max_active"] = self.max_active
+        out["preemptions"] = self.sched.preemptions
+        out["requeues"] = self.sched.requeues
+        out["watchdog_sheds"] = self.watchdog_sheds
+        if self.prefix is not None:
+            out["prefix_hits"] = self.sched.prefix_hits
+            out["prefix_hit_tokens"] = self.sched.prefix_hit_tokens
+        if self.alloc is not None:
+            out["page_util"] = self.alloc.utilization()
+            out["peak_page_util"] = self.peak_page_util
+            out["free_pages"] = self.alloc.free_pages
+        if self.ecfg.spec_k > 0:
+            out["accepted_per_round"] = self.accepted_per_round
+        if self.faults is not None:
+            out["faults_injected"] = self.faults.summary()
+        return out
 
     def _sample(self, logits: np.ndarray, temp: float) -> int:
         if temp <= 0:
@@ -145,7 +213,90 @@ class Engine:
             tok = self._sample(logits[s], req.temperature)
             req.generated.append(tok)
             req.token_times.append(now)
+            req.token_steps.append(self.steps)
             self.sched.last_token[s] = tok
+            self._tokens_committed += 1
+
+    # -- fault guards (DESIGN.md §11) ----------------------------------
+    def _guarded(self, name: str, active: np.ndarray, fn, *args):
+        """Run a compiled step entry behind the fault boundary: inject
+        scheduled failures, ALWAYS validate the active logits rows are
+        finite, retry with the same inputs on failure (sound because
+        the engine mutates host bookkeeping only after this returns,
+        and the state buffer is not donated).  Raises ``_StepAbort``
+        when retries are exhausted."""
+        retries = (0 if getattr(self.exe, "donates_state", False)
+                   else self.ecfg.step_retries)
+        err = None
+        for attempt in range(retries + 1):
+            try:
+                if self.faults is not None and self.faults.fire("step"):
+                    raise FaultError(f"injected {name} failure")
+                logits, state = fn(*args)
+                logits = np.asarray(logits)
+                if self.faults is not None and self.faults.fire("nan"):
+                    logits = np.where(np.ones_like(logits, bool),
+                                      np.nan, logits)
+                if not np.isfinite(logits[active]).all():
+                    raise FaultError(f"non-finite logits from {name}")
+                if attempt > 0:
+                    self.metrics.bump("faults_recovered")
+                return logits, state
+            except FaultError as e:
+                err = e
+                if attempt < retries:
+                    self.metrics.bump("retries")
+        raise _StepAbort(f"{name}: {err}")
+
+    def _guarded_copy(self, src: np.ndarray, dst: np.ndarray):
+        """Page-content clone behind the same retry discipline."""
+        retries = (0 if getattr(self.exe, "donates_state", False)
+                   else self.ecfg.step_retries)
+        for attempt in range(retries + 1):
+            try:
+                if self.faults is not None \
+                        and self.faults.fire("page_copy"):
+                    raise FaultError("injected page-copy failure")
+                state = self.exe.page_copy(self.state, src, dst)
+                if attempt > 0:
+                    self.metrics.bump("faults_recovered")
+                return state
+            except FaultError:
+                if attempt < retries:
+                    self.metrics.bump("retries")
+        raise _StepAbort("page_copy: injected failure persisted")
+
+    def _recover(self):
+        """Retry-exhausted step: quarantine every active slot until the
+        step clock passes the bench window and requeue its request (no
+        publish — after a fault the device-side pages are suspect; the
+        re-prefill from host-held tokens is an exact continuation,
+        identical to the preemption path)."""
+        until = self.steps + 1 + self.ecfg.quarantine_steps
+        for s in range(self.ecfg.slots):
+            if self.sched.slot_req[s] is not None:
+                self.sched.requeue(s, until)
+        self.metrics.bump("quarantines")
+
+    def _watchdog_shed(self):
+        """No counter moved for ``watchdog_steps`` steps while work was
+        pending: shed the lowest-priority (then youngest) request —
+        queued victims before running ones — instead of spinning to
+        ``max_steps``."""
+        sched = self.sched
+        if sched.queue:
+            victim = min(sched.queue, key=lambda r: (r.priority, -r._seq))
+            sched.shed(("queue", victim.uid))
+        else:
+            cands = [s for s in range(self.ecfg.slots)
+                     if sched.slot_req[s] is not None]
+            if not cands:
+                return
+            victim = min(cands, key=lambda s: (
+                sched.slot_req[s].priority, -sched.slot_seq[s]))
+            sched.shed(("slot", victim))
+        self.watchdog_sheds += 1
+        self.metrics.bump("watchdog_sheds")
 
     # -- paged page-coverage / COW / preemption ------------------------
     def _cover_writes(self, s: int, take_s: int, pairs: List) -> bool:
@@ -161,6 +312,11 @@ class Engine:
         alloc = self.alloc
         if take_s <= 0:
             return True
+        if self.faults is not None and self.faults.fire("alloc"):
+            # injected transient exhaustion: report failure WITHOUT
+            # touching the allocator so the caller's retry is free
+            self._alloc_fault = True
+            return False
         start = int(self.written[s])
         end = start + take_s
         if not alloc.ensure(s, end):
@@ -189,16 +345,17 @@ class Engine:
             batch += [(snt, snt)] * (W - len(batch))
             src = np.asarray([p[0] for p in batch], np.int32)
             dst = np.asarray([p[1] for p in batch], np.int32)
-            self.state = self.exe.page_copy(self.state, src, dst)
+            self.state = self._guarded_copy(src, dst)
 
     def _ensure_pages(self, decode_width: int = 1):
         """Cover every active slot's upcoming writes with pages (COW
         faults included), oldest sequence first (the FIFO head has page
-        priority).  On pool exhaustion the reclaim ladder is: evict LRU
-        unmapped prefix-cache pages first (cached-but-idle prefixes are
-        the cheapest bytes to drop), then preempt-and-requeue the
-        YOUNGEST active sequence (vLLM-style) and retry, instead of
-        crashing mid-trace."""
+        priority).  On pool exhaustion the reclaim ladder is: retry
+        transient INJECTED exhaustion a bounded number of times (a real
+        co-tenant backs off too), then evict LRU unmapped prefix-cache
+        pages (cached-but-idle prefixes are the cheapest bytes to
+        drop), then preempt-and-requeue the YOUNGEST active sequence
+        (vLLM-style) and retry, instead of crashing mid-trace."""
         sched, alloc = self.sched, self.alloc
         take = sched.planned_writes(decode_width)
         order = sorted((s for s in range(self.ecfg.slots)
@@ -206,9 +363,19 @@ class Engine:
                        key=lambda s: sched.slot_seq[s])
         pairs: List[Tuple[int, int]] = []
         for s in order:
+            streak = 0
             while sched.slot_req[s] is not None:
                 if self._cover_writes(s, int(take[s]), pairs):
                     break
+                if self._alloc_fault:
+                    self._alloc_fault = False
+                    if streak < self.ecfg.step_retries:
+                        streak += 1
+                        self.metrics.bump("retries")
+                        continue
+                    # persistent injected exhaustion: escalate to the
+                    # real reclaim ladder below (eviction/preemption
+                    # keep streams exact, so escalation is always safe)
                 # batched shortfall: coverage may be short several
                 # pages (a COW fault on top needs at most one more)
                 short = max(1, alloc.pages_for(
@@ -220,6 +387,12 @@ class Engine:
                            if sched.slot_req[v] is not None]
                 victim = max(victims, key=lambda v: sched.slot_seq[v])
                 if victim == s and len(victims) == 1:
+                    if self.faults is not None:
+                        # only reachable via injected exhaustion
+                        # (admission guarantees a lone sequence fits):
+                        # abort the step and requeue instead of dying
+                        raise _StepAbort(
+                            "injected allocator exhaustion persisted")
                     # admission guarantees a lone sequence always fits
                     raise RuntimeError(
                         f"page pool exhausted: slot {s} needs "
@@ -266,16 +439,19 @@ class Engine:
         drafts = np.zeros((slots, k), np.int32)
         dstate = self.state
         for j in range(k):
-            logits, dstate = self.exe.draft_step(dstate, tok, pages, wfloor)
-            tok = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+            logits, dstate = self._guarded(
+                "draft_step", active, self.exe.draft_step,
+                dstate, tok, pages, wfloor)
+            tok = np.argmax(logits, axis=-1).astype(np.int32)
             drafts[:, j] = tok
         tokens = np.zeros((slots, W), np.int32)
         tokens[:, 0] = sched.last_token        # pending, not yet cached
         tokens[:, 1:] = drafts
         lengths = np.where(active, W, 0).astype(np.int32)
-        logits, self.state = self.exe.verify_chunk(
+        logits, self.state = self._guarded(
+            "verify_chunk", active, self.exe.verify_chunk,
             self.state, tokens, lengths, pages, wfloor)
-        targets = np.argmax(np.asarray(logits), axis=-1)       # (slots, W)
+        targets = np.argmax(logits, axis=-1)                   # (slots, W)
         now = time.monotonic()
         self.spec_rounds += 1
         for s in range(slots):
@@ -296,6 +472,8 @@ class Engine:
             for t in out:
                 req.generated.append(t)
                 req.token_times.append(now)
+                req.token_steps.append(self.steps)
+                self._tokens_committed += 1
             self.accept_hist[len(out)] += 1
             sched.last_token[s] = targets[s, a]
             self.written[s] = n0[s] + a + 1
@@ -312,11 +490,12 @@ class Engine:
                 if n else 0.0)
 
     # ------------------------------------------------------------------
-    def step(self) -> int:
-        """Admit + one chunk, decode, or speculative step over all
-        slots.  Returns the number of active slots after the step."""
+    def _step_inner(self) -> int:
+        """The pre-robustness step body: plan, execute one compiled
+        step, apply its progress, retire.  Raises ``_StepAbort`` (from
+        the guards) with NO host bookkeeping applied for the aborted
+        call — the caller recovers."""
         sched = self.sched
-        sched.admit()
         spec = self._spec_due()
         pages = wfloor = None
         # newly admitted slots restart their tenure at their resume
@@ -327,7 +506,14 @@ class Engine:
         for s in range(self.ecfg.slots):
             if sched.slot_req[s] is not None and sched.fresh[s]:
                 self.written[s] = int(sched.resume[s])
-        resume = sched.resume.astype(np.int32)
+        # pin IDLE rows' index at 0 via the same fresh-reset the newly
+        # admitted rows use: decode steps advance every row's device
+        # index (+1, active or not), so a long-idle slot's index would
+        # otherwise run past its page table and its scatter lane could
+        # alias another slot's live page (see models/layers.py)
+        active_rows = np.array([r is not None for r in sched.slot_req])
+        self.written[~active_rows] = 0
+        resume = np.where(active_rows, sched.resume, 0).astype(np.int32)
         if self.alloc is not None:
             self._ensure_pages(self.ecfg.spec_window if spec else 1)
             pages = self.alloc.table_array()
@@ -337,26 +523,61 @@ class Engine:
             wfloor = resume
             self.peak_page_util = max(self.peak_page_util,
                                       self.alloc.utilization())
-        self.max_active = max(self.max_active, len(
-            [r for r in sched.slot_req if r is not None]))
+        # recompute after _ensure_pages: preemption may have idled slots
+        active = np.array([r is not None for r in sched.slot_req])
+        self.max_active = max(self.max_active, int(active.sum()))
         if sched.has_chunk_work():
             tokens, lengths, fresh = sched.plan_chunk()
-            logits, self.state = self.exe.prefill_chunk(
-                self.state, tokens, lengths, fresh, resume, pages, wfloor)
+            logits, self.state = self._guarded(
+                "prefill_chunk", lengths > 0, self.exe.prefill_chunk,
+                self.state, tokens, lengths, fresh | ~active,
+                resume, pages, wfloor)
             self.written += lengths        # device: index += lengths
-            self._emit(sched.advance_chunk(lengths), np.asarray(logits))
-        elif spec and any(r is not None for r in sched.slot_req):
+            self._prefill_consumed += int(lengths.sum())
+            self._emit(sched.advance_chunk(lengths), logits)
+        elif spec and active.any():
             self._spec_round(pages, wfloor)
-        elif any(r is not None for r in sched.slot_req):
+        elif active.any():
             tokens, fresh = sched.plan_decode()
-            logits, self.state = self.exe.decode_step(
-                self.state, tokens, fresh, resume, pages, wfloor)
+            logits, self.state = self._guarded(
+                "decode_step", active, self.exe.decode_step,
+                self.state, tokens, fresh | ~active,
+                resume, pages, wfloor)
             self.written += 1              # device: index += 1, all slots
-            self._emit(sched.advance_decode(), np.asarray(logits))
+            self._emit(sched.advance_decode(), logits)
         else:
             return 0
         sched.retire(self.written)
         return len([r for r in sched.slot_req if r is not None])
+
+    def _progress_marker(self) -> Tuple[int, int, int]:
+        return (self._tokens_committed, self._prefill_consumed,
+                self.metrics.n_terminal)
+
+    def step(self) -> int:
+        """One engine step: advance the deterministic clock, enforce
+        deadlines, admit, run one compiled step behind the fault
+        boundary, recover from an aborted step, feed the watchdog.
+        Returns the number of active slots after the step."""
+        sched = self.sched
+        sched.now_step = self.steps
+        sched.enforce_deadlines()
+        sched.admit()
+        before = self._progress_marker()
+        try:
+            n_active = self._step_inner()
+        except _StepAbort:
+            self._recover()
+            n_active = 0
+        if self._progress_marker() != before:
+            self._last_progress = self.steps
+        elif (self.ecfg.watchdog_steps > 0 and sched.busy
+              and self.steps - self._last_progress
+              >= self.ecfg.watchdog_steps):
+            self._watchdog_shed()
+            self._last_progress = self.steps
+        self.steps += 1
+        return n_active
 
     def run(self, requests: List[Request], max_steps: int = 100000,
             ) -> List[Request]:

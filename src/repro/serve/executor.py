@@ -217,7 +217,11 @@ class LocalExecutor:
         cfg = self._compile_cfg(cfg)
         # the ONE resolved dispatch every compiled entry traces with
         self.dispatch = cfg.kernel_impl
-        donate = _donation_supported()
+        # donation consumes the input state buffer, which forbids the
+        # engine's same-input step retry (DESIGN.md §11) — EngineConfig
+        # can switch it off; CPU never donates anyway
+        donate = _donation_supported() and ecfg.donate_state
+        self.donates_state = donate
 
         def jit(fn, state_argnum=None):
             if state_argnum is not None and donate:

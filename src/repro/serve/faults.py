@@ -1,0 +1,116 @@
+"""Deterministic fault injection at the engine's host boundaries
+(DESIGN.md §11).
+
+A ``FaultPlan`` is a SEEDED schedule of failures the engine consults at
+four injection sites — the places a production serving host actually
+fails:
+
+  * ``"alloc"``     — ``PageAllocator.ensure`` reports exhaustion even
+                      though pages are free (a racing co-tenant, a
+                      fragmented device heap);
+  * ``"step"``      — a compiled step raises before producing output
+                      (XLA OOM, a preempted device, a driver hiccup);
+  * ``"nan"``       — a compiled step RETURNS, but its logits are
+                      non-finite (silent numerical corruption — the
+                      one failure mode that would poison streams if it
+                      weren't detected at the boundary);
+  * ``"page_copy"`` — a COW page-content clone batch fails before
+                      executing.
+
+Determinism is the whole point: decision ``i`` at site ``s`` is a pure
+function of ``(seed, s, i)`` — a per-site counter drives a
+counter-mode RNG, so the same plan over the same trace injects the
+same faults in the same order, every run.  That is what lets the chaos
+harness (tests/test_chaos.py, serve_bench scenario 6) assert EXACT
+properties under failure: surviving streams token-identical to a
+fault-free replay, pool conservation, every request terminal.
+
+Injection happens in ``Engine`` BEFORE the compiled call executes (or,
+for ``"nan"``, by corrupting the returned logits host-side), so the
+device state the engine holds is never actually damaged — recovery
+(bounded same-input retry, then slot quarantine + requeue) is
+therefore exact by construction, and the same recovery code handles a
+REAL failure of the same shape, where re-admission rebuilds the slot
+from the request's prompt + generated tokens.
+"""
+from __future__ import annotations
+
+import collections
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+# the engine's injection sites, in the order they appear in a step
+SITES = ("alloc", "step", "nan", "page_copy")
+
+
+class FaultError(RuntimeError):
+    """A recoverable step failure: injected by a ``FaultPlan``, or a
+    genuinely detected one (non-finite logits).  The engine retries the
+    step with the same inputs up to ``EngineConfig.step_retries`` times
+    before quarantining the slots and requeueing their requests."""
+
+
+@dataclass
+class FaultPlan:
+    """Seeded, deterministic fault schedule.
+
+    ``rates`` maps a site name (see ``SITES``) to a per-decision
+    probability; absent sites never fire.  ``max_faults`` caps the
+    TOTAL number of injected faults across all sites (None = no cap) —
+    useful for "fail hard, then recover" tests.  ``injected`` counts
+    what actually fired, per site.
+    """
+    seed: int = 0
+    rates: Dict[str, float] = field(default_factory=dict)
+    max_faults: Optional[int] = None
+
+    def __post_init__(self):
+        unknown = set(self.rates) - set(SITES)
+        if unknown:
+            raise ValueError(
+                f"FaultPlan.rates: unknown sites {sorted(unknown)}; "
+                f"expected a subset of {SITES}")
+        for site, rate in self.rates.items():
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(
+                    f"FaultPlan.rates[{site!r}]={rate}: must be in [0, 1]")
+        self._calls = collections.Counter()
+        self.injected = collections.Counter()
+
+    @classmethod
+    def chaos(cls, seed: int, intensity: float = 0.05,
+              max_faults: Optional[int] = None) -> "FaultPlan":
+        """Uniform pressure on every site — the soak-test default."""
+        return cls(seed=seed, rates={s: intensity for s in SITES},
+                   max_faults=max_faults)
+
+    def fire(self, site: str) -> bool:
+        """One injection decision at ``site``.  Counter-mode: decision
+        ``i`` depends only on ``(seed, site, i)``, never on wall clock
+        or global RNG state."""
+        self._calls[site] += 1
+        rate = self.rates.get(site, 0.0)
+        if rate <= 0.0:
+            return False
+        if (self.max_faults is not None
+                and self.total_injected >= self.max_faults):
+            return False
+        u = np.random.default_rng(
+            [self.seed, zlib.crc32(site.encode()), self._calls[site]]
+        ).random()
+        if u < rate:
+            self.injected[site] += 1
+            return True
+        return False
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
+
+    def summary(self) -> Dict[str, int]:
+        """{site: injected count} for ``Engine.stats()`` reporting."""
+        return {s: self.injected.get(s, 0) for s in SITES
+                if self.rates.get(s, 0.0) > 0.0}

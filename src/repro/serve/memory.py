@@ -144,6 +144,56 @@ class PageAllocator:
             t[s, :len(pages)] = pages
         return t
 
+    def assert_consistent(self, prefix=None, context: str = ""):
+        """Raise AssertionError unless every allocator invariant holds
+        (refcounts match the reference multiset rebuilt from the slot
+        tables plus the optional ``prefix`` trie; a page is free iff
+        unreferenced; no duplicate free-list entries; pool conserved;
+        no table wider than the static width; no sentinel mapped).
+
+        This is the ONE checker the property tests, the chaos soak, and
+        serve_bench's overload scenario all call — the chaos harness's
+        'zero invariant violations' gate is literally this function
+        after every engine step."""
+        where = f" [{context}]" if context else ""
+        refs: Dict[int, int] = {}
+        for s, pages in enumerate(self.tables):
+            assert len(pages) <= self.table_pages, \
+                f"slot {s} table wider than static width{where}"
+            for p in pages:
+                assert 0 <= p < self.n_pages, \
+                    f"slot {s} maps out-of-pool page {p}{where}"
+                refs[p] = refs.get(p, 0) + 1
+        if prefix is not None:
+            for p in prefix.pages():
+                assert 0 <= p < self.n_pages, \
+                    f"trie indexes out-of-pool page {p}{where}"
+                refs[p] = refs.get(p, 0) + 1
+            for key, node in prefix.nodes.items():
+                n_kids = sum(1 for nd in prefix.nodes.values()
+                             if nd["parent_key"] == key)
+                assert node["children"] == n_kids, \
+                    f"trie child count drift at {node['id']}{where}"
+        free = set(self.free_list)
+        assert len(free) == len(self.free_list), \
+            f"duplicate free-list entries{where}"
+        for p in range(self.n_pages):
+            want = refs.get(p, 0)
+            if prefix is None:
+                # without the trie handle, pages it holds look
+                # unreferenced from here — only check mapped pages
+                if want == 0:
+                    continue
+            assert self.refcount[p] == want, \
+                (f"page {p}: refcount {self.refcount[p]} != "
+                 f"{want} references{where}")
+            assert (p in free) == (want == 0), \
+                f"page {p}: free-list / refcount disagree{where}"
+        if prefix is not None:
+            assert len(free) + len(refs) == self.n_pages, \
+                (f"pool not conserved: {len(free)} free + {len(refs)} "
+                 f"referenced != {self.n_pages}{where}")
+
 
 class PrefixCache:
     """Host-side radix index over PAGE-ALIGNED token prefixes

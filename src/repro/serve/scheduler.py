@@ -6,10 +6,24 @@ this module depends on the KV layout beyond the allocator/trie handles
 it is given, or on the parallelism degree at all (the same Scheduler
 drives the local and the sharded executor — DESIGN.md §10's "planning
 is layout-agnostic" contract).
+
+Request lifecycle (DESIGN.md §11)::
+
+    QUEUED --admit--> RUNNING --retire--> DONE
+       |                 |  \\--preempt/requeue--> QUEUED
+       |                 +--cancel--> CANCELLED
+       |                 +--deadline--> TIMED_OUT
+       +--cancel--> CANCELLED
+       +--provably-unmeetable deadline--> SHED
+
+The three non-DONE terminal states all release the slot's pages through
+the SAME decref path preemption uses (``PageAllocator.release``) but —
+unlike preemption — never publish into the prefix trie: a shed,
+cancelled, or timed-out request must leave the allocator, trie, and
+refcounts exactly as if it had never run.
 """
 from __future__ import annotations
 
-import collections
 import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
@@ -25,6 +39,15 @@ TAIL = "tail"           # recurrent archs: < C prompt tokens remain,
                         # fed one-by-one through the decode step
 DECODE = "decode"       # generating one token per engine step
 
+# request statuses
+QUEUED = "QUEUED"
+RUNNING = "RUNNING"
+DONE = "DONE"           # ran to completion (max_new_tokens or EOS)
+SHED = "SHED"           # dropped by policy: unmeetable deadline / watchdog
+TIMED_OUT = "TIMED_OUT"  # running past its deadline; partial stream kept
+CANCELLED = "CANCELLED"  # client cancel via Engine.cancel(uid)
+TERMINAL = frozenset({DONE, SHED, TIMED_OUT, CANCELLED})
+
 
 @dataclass
 class Request:
@@ -32,16 +55,66 @@ class Request:
     prompt: np.ndarray                  # (len,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0            # 0 = greedy
+    # scheduling class: higher admits first; under overload the
+    # watchdog and deadline shedder sacrifice lower priorities first
+    priority: int = 0
+    # deadline in ENGINE STEPS after submission (None = none): the
+    # request must reach a terminal state within this many steps or it
+    # is timed out (running) / shed (queued and provably unmeetable)
+    deadline_steps: Optional[int] = None
     # filled by the engine:
+    status: str = QUEUED
     generated: List[int] = field(default_factory=list)
-    done: bool = False
     # prefix-cache hit size at the LAST admission: prompt tokens whose
     # K/V came from shared pages (their prefill chunks were skipped)
     cached_tokens: int = 0
-    # serving metrics (monotonic clock): submit time, one stamp per
-    # emitted token (token_times[0] is first-token / end of prefill)
+    # serving metrics, wall clock (monotonic): submit time, one stamp
+    # per emitted token (token_times[0] is first-token / end of prefill)
     t_submit: float = 0.0
     token_times: List[float] = field(default_factory=list)
+    # serving metrics, deterministic clock (engine step indices) —
+    # bit-reproducible TTFT/ITL, what the overload benchmark gates on
+    submit_step: int = -1
+    token_steps: List[int] = field(default_factory=list)
+    finish_step: int = -1
+    # queue ordering ticket (set by the scheduler; preemption/requeue
+    # reuse it to keep head-of-queue position)
+    _seq: int = field(default=0, repr=False, compare=False)
+
+    def __post_init__(self):
+        p = np.asarray(self.prompt)
+        if p.ndim != 1 or p.size == 0:
+            raise ValueError(
+                f"Request.prompt (uid={self.uid}): expected a non-empty "
+                f"1-D token array, got shape {p.shape}")
+        if not np.issubdtype(p.dtype, np.integer):
+            raise ValueError(
+                f"Request.prompt (uid={self.uid}): expected integer "
+                f"tokens, got dtype {p.dtype}")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"Request.max_new_tokens (uid={self.uid})="
+                f"{self.max_new_tokens}: must be >= 1")
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"Request.temperature (uid={self.uid})="
+                f"{self.temperature}: must be >= 0")
+        if not isinstance(self.priority, (int, np.integer)) \
+                or self.priority < 0:
+            raise ValueError(
+                f"Request.priority (uid={self.uid})={self.priority!r}: "
+                "must be an int >= 0")
+        if self.deadline_steps is not None and self.deadline_steps < 1:
+            raise ValueError(
+                f"Request.deadline_steps (uid={self.uid})="
+                f"{self.deadline_steps}: must be None or >= 1")
+
+    @property
+    def done(self) -> bool:
+        """True once the request reached ANY terminal state.  (Kept as
+        the historical name; ``status`` distinguishes DONE from
+        SHED/TIMED_OUT/CANCELLED.)"""
+        return self.status in TERMINAL
 
 
 class Scheduler:
@@ -62,17 +135,26 @@ class Scheduler:
     publish the sequence's full-page run back into the trie so later
     requests (including the preempted sequence itself) skip the
     redundant prefill compute.
+
+    Admission is PRIORITY-AWARE: the next candidate is the highest
+    priority queued request, FIFO within a class — with every request
+    at the default priority the order is exactly the historical FIFO.
+    Head-of-line blocking on page exhaustion is kept (the best
+    candidate waits for pages rather than being overtaken; an overtake
+    would let a stream of small requests starve it forever).
     """
 
     def __init__(self, ecfg: EngineConfig, recurrent: bool,
                  allocator: Optional[PageAllocator] = None,
-                 prefix: Optional[PrefixCache] = None):
+                 prefix: Optional[PrefixCache] = None,
+                 metrics=None):
         self.ecfg = ecfg
         self.chunk = ecfg.chunk
         self.recurrent = recurrent
         self.alloc = allocator
         self.prefix = prefix
-        self.queue: collections.deque = collections.deque()
+        self.metrics = metrics
+        self.queue: List[Request] = []
         n = ecfg.slots
         self.slot_req: List[Optional[Request]] = [None] * n
         # effective prompt per slot: the request's prompt plus any
@@ -87,79 +169,237 @@ class Scheduler:
         # tenure writes (0 without a hit).  Positions below it are
         # served by read-only shared pages.
         self.resume = np.zeros(n, np.int64)
+        # slots benched after fault-retry exhaustion: not admittable
+        # until the engine step counter reaches the recorded value
+        self.quarantined = np.zeros(n, np.int64)
+        # engine step clock (the engine refreshes this every step;
+        # deterministic timestamps and deadlines are measured in it)
+        self.now_step = 0
         self._admit_counter = 0
+        self._submit_counter = 0
+        # requeued/preempted requests take decreasing negative tickets
+        # so the LAST one requeued sorts first within its priority
+        # class — exactly the historical deque.appendleft order
+        self._requeue_counter = -1
         self.preemptions = 0
+        self.requeues = 0
         self.prefix_hits = 0
         self.prefix_hit_tokens = 0
 
     # -- admission -----------------------------------------------------
     def submit(self, req: Request):
+        """Validate ``req`` against this engine's capacity and enqueue
+        it.  Malformed requests fail HERE, loudly, with the field named
+        — never mid-trace inside ``admit``."""
+        L = len(np.asarray(req.prompt))
+        if L + req.max_new_tokens > self.ecfg.max_len:
+            raise ValueError(
+                f"Request.prompt (uid={req.uid}): prompt length {L} + "
+                f"max_new_tokens {req.max_new_tokens} exceeds "
+                f"EngineConfig.max_len={self.ecfg.max_len}")
+        if self.alloc is not None:
+            need = self.alloc.pages_for(
+                L + req.max_new_tokens + self.ecfg.spec_k)
+            if need > self.alloc.n_pages:
+                raise ValueError(
+                    f"Request.prompt (uid={req.uid}): needs {need} KV "
+                    f"pages (prompt {L} + max_new_tokens "
+                    f"{req.max_new_tokens} + spec overhang "
+                    f"{self.ecfg.spec_k}) but the pool only has "
+                    f"{self.alloc.n_pages}")
         req.t_submit = time.monotonic()
+        req.submit_step = self.now_step
+        req.status = QUEUED
+        req._seq = self._submit_counter
+        self._submit_counter += 1
         self.queue.append(req)
 
+    def _next_candidate(self) -> Optional[Request]:
+        if not self.queue:
+            return None
+        return min(self.queue, key=lambda r: (-r.priority, r._seq))
+
     def admit(self):
-        for s in range(self.ecfg.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue[0]
-                eff = (req.prompt if not req.generated else
-                       np.concatenate([np.asarray(req.prompt, np.int32),
-                                       np.asarray(req.generated, np.int32)]))
-                L = len(eff)
-                remaining = req.max_new_tokens - len(req.generated)
-                assert L > 0, "empty prompt"
-                assert L + remaining <= self.ecfg.max_len, \
-                    "request exceeds KV capacity"
-                resume = 0
-                if self.alloc is not None:
-                    # speculative verify windows transiently overhang
-                    # the committed length by up to spec_k tokens
-                    slack = self.ecfg.spec_k
-                    assert (self.alloc.pages_for(L + remaining + slack)
-                            <= self.alloc.n_pages), \
-                        "request exceeds page pool"
-                    if self.prefix is not None:
-                        pages = self.prefix.match(eff)
-                        if pages and self.alloc.map_shared(s, pages):
-                            # at least one token must remain to prefill
-                            # (its logits seed generation); a FULL hit
-                            # resumes at L-1 and the rewrite of that
-                            # position COWs the shared last page
-                            pt = self.alloc.page_tokens
-                            resume = min(len(pages) * pt, L - 1)
-                    ok = self.alloc.ensure(s, L)
-                    if not ok and self.prefix is not None:
-                        # cached-but-idle prefixes are reclaimable
-                        # bytes: evict LRU trie pages nobody maps and
-                        # retry (matched pages are slot-mapped now, so
-                        # eviction can never touch THIS hit)
-                        short = (self.alloc.pages_for(L)
-                                 - len(self.alloc.tables[s])
-                                 - self.alloc.free_pages)
-                        if short > 0 and self.prefix.evict(short) > 0:
-                            ok = self.alloc.ensure(s, L)
-                    if not ok:
-                        # FIFO head-of-line: wait for pages (undo the
-                        # shared mapping so the trie can evict them)
-                        self.alloc.release(s)
-                        break
-                self.queue.popleft()
-                req.cached_tokens = resume
-                if resume > 0:
-                    self.prefix_hits += 1
-                    self.prefix_hit_tokens += resume
-                self.slot_req[s] = req
-                self.slot_prompt[s] = eff
-                self.pos[s] = resume
-                self.resume[s] = resume
-                self.fresh[s] = True
-                self.slot_seq[s] = self._admit_counter
-                self._admit_counter += 1
-                self.phase[s] = self._prefill_phase(L, resume)
+        free = [s for s in range(self.ecfg.slots)
+                if self.slot_req[s] is None
+                and self.now_step >= self.quarantined[s]]
+        for s in free:
+            req = self._next_candidate()
+            if req is None:
+                break
+            eff = (req.prompt if not req.generated else
+                   np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(req.generated, np.int32)]))
+            L = len(eff)
+            remaining = req.max_new_tokens - len(req.generated)
+            # submit() validated the request; these are invariants
+            assert L > 0 and L + remaining <= self.ecfg.max_len
+            resume = 0
+            if self.alloc is not None:
+                # speculative verify windows transiently overhang
+                # the committed length by up to spec_k tokens
+                slack = self.ecfg.spec_k
+                assert (self.alloc.pages_for(L + remaining + slack)
+                        <= self.alloc.n_pages)
+                if self.prefix is not None:
+                    pages = self.prefix.match(eff)
+                    if pages and self.alloc.map_shared(s, pages):
+                        # at least one token must remain to prefill
+                        # (its logits seed generation); a FULL hit
+                        # resumes at L-1 and the rewrite of that
+                        # position COWs the shared last page
+                        pt = self.alloc.page_tokens
+                        resume = min(len(pages) * pt, L - 1)
+                ok = self.alloc.ensure(s, L)
+                if not ok and self.prefix is not None:
+                    # cached-but-idle prefixes are reclaimable
+                    # bytes: evict LRU trie pages nobody maps and
+                    # retry (matched pages are slot-mapped now, so
+                    # eviction can never touch THIS hit)
+                    short = (self.alloc.pages_for(L)
+                             - len(self.alloc.tables[s])
+                             - self.alloc.free_pages)
+                    if short > 0 and self.prefix.evict(short) > 0:
+                        ok = self.alloc.ensure(s, L)
+                if not ok:
+                    # head-of-line: the best candidate waits for pages
+                    # (undo the shared mapping so the trie can evict)
+                    self.alloc.release(s)
+                    break
+            self.queue.remove(req)
+            req.cached_tokens = resume
+            req.status = RUNNING
+            if resume > 0:
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += resume
+            self.slot_req[s] = req
+            self.slot_prompt[s] = eff
+            self.pos[s] = resume
+            self.resume[s] = resume
+            self.fresh[s] = True
+            self.slot_seq[s] = self._admit_counter
+            self._admit_counter += 1
+            self.phase[s] = self._prefill_phase(L, resume)
 
     def _prefill_phase(self, L: int, pos: int) -> str:
         if self.recurrent and L - pos < self.chunk:
             return TAIL          # padded window would corrupt state
         return PREFILL
+
+    # -- deadlines / cancellation / shedding --------------------------
+    def _min_steps(self, req: Request) -> int:
+        """LOWER bound on engine steps needed to finish ``req`` if
+        admitted right now: best-case prefill (a full prefix-cache hit
+        skips all but one chunk) plus best-case decode (EOS can stop
+        after the first token; speculation commits up to spec_window
+        per step).  Used for PROVABLE infeasibility only — an optimistic
+        bound sheds nothing that had any chance."""
+        L = len(req.prompt) + len(req.generated)
+        C = self.chunk
+        if self.prefix is not None:
+            prefill = 1
+        elif self.recurrent:
+            full, tail = divmod(L, C)
+            prefill = full + tail if tail else full
+        else:
+            prefill = -(-L // C)
+        min_new = 1 if self.ecfg.eos_id >= 0 else \
+            req.max_new_tokens - len(req.generated)
+        W = self.ecfg.spec_window if self.ecfg.spec_k > 0 else 1
+        return prefill + -(-max(0, min_new - 1) // W)
+
+    def _terminal(self, req: Request, status: str):
+        req.status = status
+        req.finish_step = self.now_step
+        if self.metrics is not None:
+            self.metrics.on_terminal(req)
+
+    def _finish_slot(self, s: int, status: str):
+        """Retire a RUNNING slot into a non-DONE terminal state: pages
+        decref'd through the same path preemption uses, but NOTHING is
+        published to the trie — allocator/trie/refcounts end exactly as
+        if the request had never run."""
+        req = self.slot_req[s]
+        assert req is not None
+        if self.alloc is not None:
+            self.alloc.release(s)
+        self.slot_req[s] = None
+        self.slot_prompt[s] = None
+        self.phase[s] = None
+        self._terminal(req, status)
+
+    def enforce_deadlines(self):
+        """Called once per engine step, before admission: time out
+        running slots past their deadline, and shed LOW-PRIORITY queued
+        requests whose deadline is PROVABLY unmeetable even in the best
+        case.  "Low-priority" means strictly-higher-priority work is
+        pending — under contention a doomed request's slot time is
+        better spent on someone who can still win, but an uncontended
+        doomed request is allowed to run to its deadline and flush a
+        PARTIAL stream (clients prefer a truncated answer to none)."""
+        now = self.now_step
+        for s, req in enumerate(self.slot_req):
+            if req is None or req.deadline_steps is None:
+                continue
+            if now >= req.submit_step + req.deadline_steps:
+                self._finish_slot(s, TIMED_OUT)
+        pending = self.queue + [r for r in self.slot_req if r is not None]
+        pmax = max((r.priority for r in pending), default=0)
+        doomed = [r for r in self.queue
+                  if r.deadline_steps is not None
+                  and r.priority < pmax
+                  and now + self._min_steps(r) - 1
+                  >= r.submit_step + r.deadline_steps]
+        for req in doomed:
+            self.queue.remove(req)
+            self._terminal(req, SHED)
+
+    def cancel(self, uid: int) -> bool:
+        """Client cancellation: queued requests leave the queue;
+        running slots retire through the no-publish decref path.
+        Returns False when ``uid`` is unknown or already terminal."""
+        for req in self.queue:
+            if req.uid == uid:
+                self.queue.remove(req)
+                self._terminal(req, CANCELLED)
+                return True
+        for s, req in enumerate(self.slot_req):
+            if req is not None and req.uid == uid:
+                self._finish_slot(s, CANCELLED)
+                return True
+        return False
+
+    def shed(self, uid_or_slot: Tuple[str, int]):
+        """Watchdog shedding: ('queue', uid) or ('slot', s)."""
+        kind, key = uid_or_slot
+        if kind == "queue":
+            for req in self.queue:
+                if req.uid == key:
+                    self.queue.remove(req)
+                    self._terminal(req, SHED)
+                    return
+        else:
+            self._finish_slot(key, SHED)
+
+    def requeue(self, s: int, quarantine_until: int):
+        """Fault recovery: bench slot ``s`` until the engine step clock
+        reaches ``quarantine_until`` and requeue its request at the
+        head of its priority class (ticket reuse, like preemption).
+        No publish — after a fault the device-side pages are suspect,
+        so re-admission re-prefills from the host-held token stream."""
+        req = self.slot_req[s]
+        assert req is not None
+        if self.alloc is not None:
+            self.alloc.release(s)
+        self.slot_req[s] = None
+        self.slot_prompt[s] = None
+        self.phase[s] = None
+        req.status = QUEUED
+        req._seq = self._requeue_counter
+        self._requeue_counter -= 1
+        self.queue.append(req)
+        self.quarantined[s] = quarantine_until
+        self.requeues += 1
 
     # -- planning ------------------------------------------------------
     def has_chunk_work(self) -> bool:
@@ -287,9 +527,9 @@ class Scheduler:
 
     def preempt(self, s: int, n_valid: int = 0):
         """Release slot ``s`` (decref its pages) and requeue its request
-        at the queue HEAD.  Generated tokens are kept on the request;
-        they join the effective prompt on re-admission, so the
-        re-prefill reproduces the stream exactly and generation
+        at the head of its priority class.  Generated tokens are kept
+        on the request; they join the effective prompt on re-admission,
+        so the re-prefill reproduces the stream exactly and generation
         continues from where it stopped.  With a prefix cache the
         committed full-page run (``n_valid`` positions) is published
         first, so re-admission resumes from the trie instead of
@@ -302,7 +542,10 @@ class Scheduler:
         self.slot_req[s] = None
         self.slot_prompt[s] = None
         self.phase[s] = None
-        self.queue.appendleft(req)
+        req.status = QUEUED
+        req._seq = self._requeue_counter
+        self._requeue_counter -= 1
+        self.queue.append(req)
         self.preemptions += 1
 
     def retire(self, written: Optional[np.ndarray] = None):
@@ -315,7 +558,6 @@ class Scheduler:
             if (len(req.generated) >= req.max_new_tokens
                     or (self.ecfg.eos_id >= 0 and req.generated
                         and req.generated[-1] == self.ecfg.eos_id)):
-                req.done = True
                 if self.alloc is not None:
                     if written is not None:
                         self._publish(s, int(written[s]))
@@ -323,6 +565,7 @@ class Scheduler:
                 self.slot_req[s] = None
                 self.slot_prompt[s] = None
                 self.phase[s] = None
+                self._terminal(req, DONE)
 
     @property
     def busy(self) -> bool:

@@ -105,11 +105,22 @@ class PoolLifecycle:
         self.alloc.release(s)
         self.seq[s] = None
 
+    def drop(self, s):
+        """Cancel / shed / timeout / fault-requeue: release WITHOUT
+        publishing — the allocator and trie must end exactly as if the
+        sequence had never run (DESIGN.md §11).  Same decref path as
+        ``close``, no trie insert."""
+        self.alloc.release(s)
+        self.seq[s] = None
+
     def evict(self, n) -> int:
         return self.prefix.evict(n)
 
     # -- invariants ----------------------------------------------------
     def check(self):
+        # the production checker first (the one chaos tests and
+        # serve_bench call), then the model's independent re-derivation
+        self.alloc.assert_consistent(self.prefix, context="model")
         a, pfx = self.alloc, self.prefix
         expect = {}
         for t in a.tables:

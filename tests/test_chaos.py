@@ -1,0 +1,136 @@
+"""Seeded chaos soak (DESIGN.md §11): the paged prefix-cache engine
+driven for hundreds-to-thousands of steps under a random ``FaultPlan``
+plus overload machinery (priorities, deadlines, mid-trace cancels),
+with the allocator/trie invariants re-verified after EVERY engine step
+(``PageAllocator.assert_consistent`` — the same checker the
+tests/pool_model.py reference lifecycle delegates to).
+
+Gates, per the tentpole's exactness contract:
+  * zero invariant violations at any step (pool conservation, no
+    double-free, refcounts == reference multiset, trie child counts);
+  * every submitted request reaches a terminal state and is accounted
+    for in the metrics;
+  * every DONE stream is token-identical to the fault-free,
+    uncontended replay; every early-exit stream is a PREFIX of it;
+  * at drain, evicting the trie returns the pool to fully free.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_lm_params
+from repro.serve import (DONE, Engine, EngineConfig, FaultPlan, Request)
+
+
+@functools.lru_cache(maxsize=1)
+def _model():
+    cfg = get_config("musicgen-large").reduced()
+    return init_lm_params(cfg, jax.random.PRNGKey(5)), cfg
+
+
+def _requests(rng, n, vocab):
+    reqs = []
+    for i in range(n):
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, vocab,
+                                int(rng.integers(3, 9))).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 7)),
+            priority=int(rng.integers(0, 3)),
+            deadline_steps=(int(rng.integers(15, 40))
+                            if rng.random() < 0.3 else None)))
+    return reqs
+
+
+def _reference(params, cfg, reqs):
+    """Fault-free, uncontended replay: same prompts, no deadlines, no
+    page pressure — the oracle every surviving stream must match."""
+    eng = Engine(params, cfg, EngineConfig(slots=4, max_len=32,
+                                           prefill_chunk=4))
+    clones = [Request(uid=r.uid, prompt=r.prompt,
+                      max_new_tokens=r.max_new_tokens) for r in reqs]
+    eng.run(clones)
+    assert all(r.status == DONE for r in clones)
+    return {r.uid: r.generated for r in clones}
+
+
+def _soak(seed, n_requests, max_steps, intensity):
+    params, cfg = _model()
+    rng = np.random.default_rng(seed)
+    reqs = _requests(rng, n_requests, cfg.vocab_size)
+    ref = _reference(params, cfg, reqs)
+    ecfg = EngineConfig(slots=3, max_len=32, prefill_chunk=4, paged=True,
+                        page_tokens=4, n_pages=10, prefix_cache=True,
+                        step_retries=1, quarantine_steps=2,
+                        watchdog_steps=16)
+    plan = FaultPlan.chaos(seed=seed, intensity=intensity)
+    eng = Engine(params, cfg, ecfg, faults=plan)
+    # arrival trickle + pinned mid-trace cancels, all seeded
+    arrivals = {i: r for i, r in enumerate(reqs)}
+    arrive_at = sorted(int(rng.integers(0, max_steps // 3))
+                       for _ in reqs)
+    cancels = {int(rng.integers(5, max_steps // 2)): r.uid
+               for r in rng.choice(reqs, size=max(1, n_requests // 6),
+                                   replace=False)}
+    submitted = 0
+    for step in range(max_steps):
+        while submitted < len(reqs) and arrive_at[submitted] <= step:
+            eng.submit(arrivals[submitted])
+            submitted += 1
+        if step in cancels:
+            eng.cancel(cancels[step])
+        eng.step()
+        eng.alloc.assert_consistent(eng.prefix,
+                                    context=f"seed {seed} step {step}")
+        if submitted == len(reqs) and not eng.sched.busy:
+            break
+    assert submitted == len(reqs) and not eng.sched.busy, \
+        "engine failed to drain under chaos"
+    # every request terminal and accounted for
+    assert all(r.done for r in reqs)
+    assert eng.metrics.n_terminal == len(reqs)
+    # exactness: DONE == oracle; early exits are prefixes of it
+    for r in reqs:
+        if r.status == DONE:
+            assert r.generated == ref[r.uid], (seed, r.uid, r.status)
+        else:
+            assert r.generated == ref[r.uid][:len(r.generated)], \
+                (seed, r.uid, r.status)
+    # drain the trie: the pool must return to fully free
+    eng.prefix.evict(eng.alloc.n_pages)
+    eng.alloc.assert_consistent(eng.prefix, context=f"seed {seed} drain")
+    assert eng.alloc.free_pages == eng.alloc.n_pages
+    return eng, plan
+
+
+def test_chaos_soak_smoke():
+    """Always-runs: one seed, a few hundred steps, moderate fault
+    pressure on every site."""
+    eng, plan = _soak(seed=0, n_requests=10, max_steps=400,
+                      intensity=0.05)
+    assert plan.total_injected > 0          # chaos actually happened
+    assert eng.steps > 0
+
+
+def test_chaos_zero_intensity_matches_fault_free():
+    """A zero-rate plan must not perturb anything: every request that
+    survives the overload policy is exact, and nothing injects."""
+    eng, plan = _soak(seed=3, n_requests=8, max_steps=400, intensity=0.0)
+    assert plan.total_injected == 0
+    assert eng.stats()["counters"].get("quarantines", 0) == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [1, 2, 7])
+def test_chaos_soak_long(seed):
+    """Thousands of engine steps per seed under sustained fault
+    pressure — the CI slow leg's endurance gate."""
+    eng, plan = _soak(seed=seed, n_requests=24, max_steps=2500,
+                      intensity=0.08)
+    assert plan.total_injected > 0
+    c = eng.stats()["counters"]
+    # sustained pressure must actually exercise the recovery machinery
+    assert c.get("retries", 0) + c.get("quarantines", 0) > 0

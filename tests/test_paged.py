@@ -96,7 +96,7 @@ def test_paged_capacity_guard():
     params = init_lm_params(cfg, jax.random.PRNGKey(0))
     eng = Engine(params, cfg, EngineConfig(slots=1, max_len=32, paged=True,
                                            page_tokens=4, n_pages=2))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="pool"):
         eng.run([Request(uid=0, prompt=np.arange(8, dtype=np.int32),
                          max_new_tokens=8)])
 

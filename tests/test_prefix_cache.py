@@ -317,7 +317,7 @@ def test_pool_lifecycle_random_walk(seed):
     pool = PoolLifecycle(n_pages=12, page_tokens=4, slots=3,
                          table_pages=10)
     for _ in range(300):
-        op = rng.integers(0, 5)
+        op = rng.integers(0, 6)
         if op == 0 and pool.free_slots():
             L = int(rng.integers(1, pool.table * pool.pt - 8))
             pool.admit(pool.free_slots()[0],
@@ -328,6 +328,9 @@ def test_pool_lifecycle_random_walk(seed):
             pool.write(s, take, rng.integers(0, 3, take).astype(np.int32))
         elif op == 3 and pool.active_slots():
             pool.close(int(rng.choice(pool.active_slots())))
+        elif op == 4 and pool.active_slots():
+            # cancel/shed/timeout: release with NO publish
+            pool.drop(int(rng.choice(pool.active_slots())))
         else:
             pool.evict(int(rng.integers(1, 5)))
         pool.check()

@@ -171,6 +171,16 @@ class PrefixPoolMachine(RuleBasedStateMachine):
         if active:
             self.pool.close(data.draw(st.sampled_from(active)))
 
+    @rule(data=st.data())
+    def cancel_or_shed(self, data):
+        """Cancellation, shedding, deadline timeout and fault-requeue
+        all release WITHOUT publishing (DESIGN.md §11): the pool and
+        trie must end exactly as if the sequence never ran — distinct
+        from ``preempt_or_retire``, which publishes first."""
+        active = self.pool.active_slots()
+        if active:
+            self.pool.drop(data.draw(st.sampled_from(active)))
+
     @rule(n=st.integers(1, 4))
     def evict(self, n):
         self.pool.evict(n)

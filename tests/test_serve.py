@@ -71,7 +71,7 @@ def test_engine_capacity_guard():
     cfg = get_config("musicgen-large").reduced()
     params = init_lm_params(cfg, jax.random.PRNGKey(0))
     eng = Engine(params, cfg, EngineConfig(slots=1, max_len=8))
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="max_len"):
         eng.run([Request(uid=0, prompt=np.arange(6, dtype=np.int32),
                          max_new_tokens=6)])
 
