@@ -2,7 +2,7 @@
 dense AND paged KV caches, self-speculative decoding, and copy-on-write
 prefix caching.
 
-Four scenarios connect the paper's rank pruning to the serving path:
+Seven scenarios connect the paper's rank pruning to the serving path:
 
 1. **Mixed trace** — a Poisson arrival trace of mixed-length prompts is
    played against the dense and the paged engine at several CLOVER
@@ -76,6 +76,20 @@ Four scenarios connect the paper's rank pruning to the serving path:
    ``SERVE_BENCH_SCENARIO=chaos`` runs ONLY this scenario (the CI
    chaos-smoke job; its partial BENCH_serve.json is never fed to
    compare.py).
+
+7. **Hierarchical KV: host spill/restore** (DESIGN.md §12) — the
+   shared-prefix burst replayed TWICE around a churn burst whose
+   working set overflows the 28-page pool, so admission evicts the
+   published system-prompt pages out of HBM.  Cell (a) has no host
+   tier: the second burst re-prefills the prefix from scratch.  Cell
+   (b) spills each evicted page host-side and restores the second
+   burst's prefix through one fixed-width host->device scatter.
+   Gated: the two cells' streams token-identical (the tier changes
+   where bytes come from, never which tokens come out), restore TTFT
+   strictly below re-prefill TTFT in DETERMINISTIC engine steps,
+   spills >= 1 and restores >= 1 actually fired, zero HBM pool growth
+   (n_pages unchanged, peak utilization <= 1), and the compile budget
+   grows by exactly the one restore entry.
 
 What must hold on CPU (timings vary, orderings don't):
   * both engines compile exactly TWO step shapes each over the whole
@@ -159,6 +173,12 @@ PREFIX_POOL_PAGES = 28
 PREFIX_SPEC_KS = (0, 4)
 # scenario 5: tensor-parallel degrees (tp=1 reuses the paged run)
 TP_DEGREES = (1, 2)
+# scenario 7: hierarchical KV — the churn burst's working set overflows
+# the 28-page pool, evicting (and, with the tier, spilling) the
+# published system prompt; host capacity is sized like host RAM always
+# is relative to HBM: ample
+HOST_PAGES = 2 * PREFIX_POOL_PAGES
+HOST_CHURN = 8
 # scenario 6: overload/chaos trace — the PINNED fault seed CI runs with
 CHAOS_SEED = 20260807
 CHAOS_REQUESTS = 14
@@ -327,6 +347,55 @@ def _prefix_replay(params, cfg, ecfg: EngineConfig, sys_prompt, tails):
     # others' hits)
     best[1]["hits_min_per_replay"] = min_rep_hits
     return eng, best[0], best[1]
+
+
+def _host_replay(params, cfg, ecfg: EngineConfig, sys_prompt, tails,
+                 churn):
+    """Scenario-7 driver: the seed + a warm burst publish the system
+    prompt, the churn burst overflows the pool (admission evicts the
+    idle prefix pages — spilling them host-side when a HostTier is
+    wired), then the SAME shared-prefix burst re-arrives.  The second
+    burst's prefix is out of HBM either way; with the host tier it
+    comes back through one restore scatter instead of re-prefill.
+    Returns (engine, second-burst requests, metrics, churned_out);
+    ``ttft_steps_mean`` counts deterministic engine steps to each
+    request's first token — machine-independent, unlike wall TTFT."""
+    eng = Engine(params, cfg, ecfg)
+    # warm all compiled shapes so steady-state timing isn't compile time
+    eng.run([Request(uid=-1, prompt=sys_prompt[:3], max_new_tokens=2)])
+    eng.run([Request(uid=0, prompt=sys_prompt, max_new_tokens=MAX_NEW)])
+    eng.run([Request(uid=100 + i,
+                     prompt=np.concatenate([sys_prompt, t]).astype(np.int32),
+                     max_new_tokens=MAX_NEW) for i, t in enumerate(tails)])
+    eng.run([Request(uid=200 + i, prompt=p, max_new_tokens=MAX_NEW)
+             for i, p in enumerate(churn)])
+    # the churn must really have evicted the prefix out of HBM — else
+    # the second burst measures a plain trie hit, not restore/re-prefill
+    churned_out = eng.prefix.match(sys_prompt) == []
+    reqs = [Request(uid=300 + i,
+                    prompt=np.concatenate([sys_prompt, t]).astype(np.int32),
+                    max_new_tokens=MAX_NEW) for i, t in enumerate(tails)]
+    for r in reqs:
+        eng.submit(r)
+    first = {}
+    t0 = time.monotonic()
+    step = 0
+    while eng.sched.busy:
+        eng.step()
+        step += 1
+        for r in reqs:
+            if r.uid not in first and r.generated:
+                first[r.uid] = step
+    wall = time.monotonic() - t0
+    n_tok = sum(len(r.generated) for r in reqs)
+    m = {
+        # GATED: restored tokens skip their prefill chunks, a
+        # deterministic rise in tokens/step over re-prefill
+        "tokens_per_step": round(n_tok / max(1, step), 4),
+        "ttft_steps_mean": round(float(np.mean(list(first.values()))), 2),
+        "tokens_per_s_wall": round(n_tok / max(wall, 1e-9), 2),
+    }
+    return eng, reqs, m, churned_out
 
 
 def _chaos_trace(vocab: int):
@@ -516,6 +585,13 @@ def run(verbose: bool = True):
     # is limited purely by KV capacity, not by arrival gaps
     pressure = _poisson_trace(rng, PRESSURE_REQUESTS, cfg0.vocab_size,
                               mean_gap_steps=0.3, lo=18, hi=31)
+    # scenario-7 churn: long unique prompts whose concurrent working
+    # set (HOST_CHURN x ~4-5 pages each over PREFIX_BURST slots)
+    # overflows the 28-page pool, forcing admission to evict the
+    # published system-prompt pages
+    churn_rng = np.random.default_rng(12)
+    churn = [churn_rng.integers(0, cfg0.vocab_size, 30).astype(np.int32)
+             for _ in range(HOST_CHURN)]
 
     rows = []
     checks = {}
@@ -669,6 +745,48 @@ def run(verbose: bool = True):
             checks[f"prefix_{tag}_k{kk}_concurrency_strictly_higher"] = (
                 m_w["max_concurrent"] > m_c["max_concurrent"])
         metrics[f"prefix_{tag}"] = prefix
+
+        # -- hierarchical KV: host-RAM spill/restore (DESIGN.md §12) ---
+        # same prefix trace around a pool-overflowing churn burst, with
+        # and without the host tier under the trie
+        host_cold_cfg = EngineConfig(
+            slots=PREFIX_BURST, max_len=MAX_LEN, prefill_chunk=CHUNK,
+            paged=True, page_tokens=PAGE_TOKENS,
+            n_pages=PREFIX_POOL_PAGES, prefix_cache=True)
+        host_warm_cfg = dataclasses.replace(host_cold_cfg,
+                                            host_pages=HOST_PAGES)
+        eng_hc, reqs_hc, m_hc, out_c = _host_replay(
+            params, cfg, host_cold_cfg, sys_prompt, tails, churn)
+        eng_hw, reqs_hw, m_hw, out_w = _host_replay(
+            params, cfg, host_warm_cfg, sys_prompt, tails, churn)
+        m_hw["host_spills"] = eng_hw.host.spills
+        m_hw["host_restores"] = eng_hw.host.restores
+        m_hw["host_hit_rate"] = round(eng_hw.host.hit_rate, 4)
+        metrics[f"host_{tag}"] = {"reprefill": m_hc, "restore": m_hw}
+        for mode, m in (("reprefill", m_hc), ("restore", m_hw)):
+            for kname, val in m.items():
+                rows.append((f"host_{tag}_{mode}", kname, val))
+        # the churn really pushed the prefix out of HBM in BOTH cells —
+        # otherwise the comparison measures a plain trie hit
+        checks[f"host_{tag}_prefix_churned_out"] = out_c and out_w
+        checks[f"host_{tag}_spill_restore_exercised"] = (
+            eng_hw.host.spills >= 1 and eng_hw.host.restores >= 1)
+        # the tier changes where the bytes come from, never which
+        # tokens come out: warm-via-host == cold re-prefill, bitwise
+        checks[f"host_{tag}_restore_matches_reprefill"] = all(
+            h.generated == c.generated
+            for h, c in zip(reqs_hw, reqs_hc))
+        # restore strictly beats re-prefill in DETERMINISTIC steps
+        checks[f"host_{tag}_restore_ttft_beats_reprefill"] = (
+            m_hw["ttft_steps_mean"] < m_hc["ttft_steps_mean"])
+        # zero HBM growth: the host tier adds no device pages, and the
+        # restore path adds exactly one fixed-width compiled entry on
+        # top of the base two (+1 when a COW fired)
+        checks[f"host_{tag}_zero_pool_growth"] = (
+            eng_hw.alloc.n_pages == PREFIX_POOL_PAGES
+            and eng_hw.peak_page_util <= 1.0 + 1e-9)
+        checks[f"host_{tag}_shape_budget"] = (
+            eng_hw.compiled_shapes() in (3, 4, None))
 
         # -- rank-balanced tensor parallelism (DESIGN.md §10) ----------
         # the SAME paged mixed trace through the ShardedExecutor:

@@ -15,7 +15,12 @@ multi-token verify step commits a greedy prefix; DESIGN.md §8), again
 token-identical.  Finally a shared-system-prompt batch runs twice on a
 PREFIX-CACHED paged engine (DESIGN.md §9): the warm replay maps the
 cached prompt pages read-only, skips their prefill chunks and still
-matches the cold streams exactly.
+matches the cold streams exactly.  With ``--host-pages N`` the shared
+batch also runs against a HIERARCHICAL KV engine (DESIGN.md §12): a
+host-RAM spill tier under the trie catches the pages cache pressure
+evicts, and the replay restores the prefix from host RAM through one
+fixed-width scatter instead of re-prefilling — the demo prints the
+spill/restore counters and host hit rate from ``Engine.stats()``.
 
 With ``--tp N`` the paged trace is replayed once more through the
 rank-balanced ShardedExecutor (DESIGN.md §10): params and KV page
@@ -79,6 +84,9 @@ def main():
                          "replay (default: inherit the arch config; "
                          "'interpret' compiles the Pallas hot path "
                          "per shard)")
+    ap.add_argument("--host-pages", type=int, default=8,
+                    help="host-RAM spill-tier capacity (pages) for the "
+                         "hierarchical-KV demo (0 = skip it)")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="inject a deterministic FaultPlan with this "
                          "seed into the overload demo (omit = "
@@ -217,6 +225,34 @@ def main():
           f"({epc.sched.prefix_hits} hits, "
           f"{len(epc.prefix)} trie nodes, "
           f"{epc.compiled_shapes()} compiled step shapes)")
+
+    # hierarchical KV (DESIGN.md §12): the same shared batch with a
+    # host-RAM spill tier under the trie.  Evicting the pool (standing
+    # in for cache pressure) spills the published prefix host-side;
+    # the replay restores it through one host->device scatter instead
+    # of re-prefilling — streams identical, stats() shows the tier
+    if args.host_pages > 0:
+        eh = Engine(pparams, pcfg,
+                    EngineConfig(slots=4, max_len=96, prefill_chunk=8,
+                                 paged=True, page_tokens=8,
+                                 prefix_cache=True,
+                                 host_pages=args.host_pages))
+        cold_h = [Request(uid=i, prompt=p, max_new_tokens=8)
+                  for i, p in enumerate(shared)]
+        eh.run(cold_h)
+        evicted = eh.prefix.evict(eh.alloc.n_pages)
+        warm_h = [Request(uid=10 + i, prompt=p, max_new_tokens=8)
+                  for i, p in enumerate(shared)]
+        eh.run(warm_h)
+        match = all(a.generated == b.generated
+                    for a, b in zip(cold_h, warm_h))
+        st = eh.stats()
+        print(f"hierarchical KV (--host-pages {args.host_pages}): "
+              f"match={match}, {evicted} pages spilled on eviction, "
+              f"{st['host_restores']} restored from host RAM "
+              f"(spills={st['host_spills']}, "
+              f"hit rate {st['host_hit_rate']:.0%}, "
+              f"{st['host_pages_used']} host slots held)")
 
     # overload + graceful degradation (DESIGN.md §11): a two-priority
     # burst against a deliberately small engine.  Lows carry

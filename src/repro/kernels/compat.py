@@ -1,4 +1,5 @@
-"""Version compatibility for Pallas TPU symbols.
+"""Version compatibility for Pallas TPU symbols (shared by every
+DESIGN.md §4 kernel module).
 
 jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
 container pins jax 0.4.x which only has the old name.  Kernels import

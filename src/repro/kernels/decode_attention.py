@@ -1,4 +1,5 @@
-"""Flash-decoding: one new token's query against a long (CLOVER-rank) KV cache.
+"""Flash-decoding: one new token's query against a long (CLOVER-rank)
+KV cache (DESIGN.md §4).
 
 The decode roofline is HBM-bound on streaming the cache (the paper's
 motivation).  Per (batch, kv-head) the kernel streams (block_t x r_qk)

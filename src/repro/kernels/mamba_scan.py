@@ -1,4 +1,5 @@
-"""Mamba-1 selective scan as a Pallas TPU kernel.
+"""Mamba-1 selective scan as a Pallas TPU kernel (DESIGN.md §4's TPU
+adaptation for the recurrent mixers; §5 scopes where it applies).
 
 The XLA chunked path materializes the decay/input tensors
 ``a = exp(dt*A)`` and ``b = dt*x*B`` at (B, chunk, dI, dS) — with

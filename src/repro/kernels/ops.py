@@ -1,4 +1,5 @@
-"""Public kernel entry points: padding, backend dispatch, jit, meshes.
+"""Public kernel entry points: padding, backend dispatch, jit, meshes
+(DESIGN.md §10's dispatch API over the §4/§6/§9/§12 kernels).
 
 The dispatch surface is ``resolve(impl, mesh=None)`` -> a frozen
 ``KernelDispatch`` whose methods are the kernel entry points.  It is
@@ -240,6 +241,33 @@ class KernelDispatch:
                          out_specs=P(None, None, None, m, None))
         return fn(pool, src, dst)
 
+    def page_restore(self, pool, rows, dst) -> jnp.ndarray:
+        """Batched host-tier page restore — scatter EXTERNAL slab
+        content into pool rows (hierarchical KV, serve.memory
+        ``HostTier``; DESIGN.md §12).
+
+        pool (n_blocks, N, page_tokens, KV, r), rows (n_blocks, W,
+        page_tokens, KV, r), dst (W,) int32 pool-row ids -> pool with
+        row ``dst[i]`` holding ``rows[:, i]``, all other rows
+        untouched.  Pure DMA, no compute.  On the non-kernel paths
+        this is the jnp oracle ("xla" included — there is no einsum
+        equivalent).  Under a mesh the restore rows arrive replicated
+        and each shard scatters its own KV-head slice into the same
+        host-global rows.
+        """
+        if not self.kernel_path:
+            return _ref.page_restore_ref(pool, rows, dst)
+        from repro.kernels.page_copy import page_restore as _page_restore
+        body = functools.partial(_page_restore, interpret=self.interpret)
+        _, m = self._axes(batch=1, kv_heads=pool.shape[3])
+        if m is None:
+            return body(pool, rows, dst)
+        fn = self._shard(body,
+                         in_specs=(P(None, None, None, m, None),
+                                   P(None, None, None, m, None), P()),
+                         out_specs=P(None, None, None, m, None))
+        return fn(pool, rows, dst)
+
     # -- recurrent kernels (never shard_map'd: cross-step state) -------
     def mamba_scan(self, dt, A, Bmat, C, x, h0=None, *, chunk: int = 128,
                    tile: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -367,6 +395,17 @@ def page_copy(pool, src, dst, *, impl: str = "ref") -> jnp.ndarray:
     ids -> pool with row ``dst[i]`` a copy of row ``src[i]``.
     """
     return resolve(impl).page_copy(pool, src, dst)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def page_restore(pool, rows, dst, *, impl: str = "ref") -> jnp.ndarray:
+    """Batched host-tier page restore (hierarchical KV spill/restore).
+
+    pool (n_blocks, N, page_tokens, KV, r), rows (n_blocks, W,
+    page_tokens, KV, r), dst (W,) int32 pool-row ids -> pool with row
+    ``dst[i]`` holding ``rows[:, i]``.
+    """
+    return resolve(impl).page_restore(pool, rows, dst)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "tile", "impl"))

@@ -1,26 +1,31 @@
-"""Batched KV-page clone: the device half of copy-on-write prefix
-caching (DESIGN.md §9, serve.engine).
+"""Batched KV-page row movers: the device half of copy-on-write prefix
+caching AND of the host-RAM spill tier's restore path (DESIGN.md §9,
+§12; serve.memory / serve.engine).
 
-When a sequence must write into a page that other sequences (or the
-prefix trie) still read, the host repoints its page-table entry to a
-fresh page and the CONTENT of the shared page has to move ``src ->
-dst`` across every layer's pool before the step's scatter-write runs.
-That copy is pure DMA — no compute — so the kernel is a grid of
-row-to-row block moves driven by scalar-prefetched ``src``/``dst`` id
-vectors, exactly the indirection idiom of
-``paged_decode_attention.py``: the BlockSpec index maps dereference the
-id vectors BEFORE the body runs, so the pipeline streams each (pt, KV,
-r) slab from pool row ``src[i]`` straight into row ``dst[i]`` without a
-device-wide gather/scatter.
+Two entry points share one shape contract — a grid of row-to-row
+(page_tokens, KV, r) slab moves over the layer-stacked pool, driven by
+scalar-prefetched page-id vectors, exactly the indirection idiom of
+``paged_decode_attention.py`` (the BlockSpec index maps dereference the
+id vectors BEFORE the body runs, so each slab streams straight to its
+destination row without a device-wide gather/scatter):
+
+* ``page_copy`` — intra-pool clone ``src[i] -> dst[i]`` (PR 4's
+  copy-on-write fault: a sequence about to write a shared page gets a
+  private copy first).  Pure DMA, no compute.
+* ``page_restore`` — scatter EXTERNAL row content into the pool:
+  slab ``rows[:, i]`` (host-tier bytes copied back to device) lands in
+  pool row ``dst[i]``.  Same grid, same block shapes, so restoring a
+  spilled prefix adds exactly ONE fixed-width compiled shape on top of
+  the page-copy one (DESIGN.md §12's shape-budget argument).
 
 The pool is aliased input->output (in-place on TPU): grid steps only
-touch their (src, dst) rows, every other row keeps its bytes.  Pairs
-execute in grid order, which the caller relies on when a page freed
-after serving as a ``src`` is immediately reallocated as a later
+touch their destination rows, every other row keeps its bytes.  Pairs
+execute in grid order, which the copy caller relies on when a page
+freed after serving as a ``src`` is immediately reallocated as a later
 ``dst`` (the reverse — a fresh dst becoming a later src — cannot occur
-in one batch; see ``Engine._copy_pages``).  Padding a short batch with
-sentinel->sentinel self-copies is legal: a row copied onto itself is a
-no-op.
+in one batch; see ``Engine._copy_pages``).  Padding a short batch is
+legal in both directions: sentinel->sentinel self-copies are no-ops,
+and restore padding scatters all-zero slabs into the garbage row.
 
 Pool rows are (page_tokens, KV, r) slabs; on real TPUs keep
 ``page_tokens`` a multiple of the dtype sublane tile (8 for f32, 16
@@ -79,3 +84,48 @@ def page_copy(pool: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray, *,
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(src.astype(jnp.int32), dst.astype(jnp.int32), pool)
+
+
+def _page_restore_kernel(dst_ref, rows_ref, pool_ref, out_ref):
+    del dst_ref, pool_ref         # dst drives the output index map; the
+    out_ref[...] = rows_ref[...]  # pool block is only read for aliasing
+
+
+def page_restore(pool: jnp.ndarray, rows: jnp.ndarray, dst: jnp.ndarray,
+                 *, interpret: bool = False) -> jnp.ndarray:
+    """pool: (n_blocks, N, page_tokens, KV, r) — one layer-stacked KV
+    pool leaf;  rows: (n_blocks, W, page_tokens, KV, r) — externally
+    sourced slab content (host-tier restore);  dst: (W,) int32 pool-row
+    ids (freshly-allocated pages; padding entries repeat the sentinel
+    row with zero slabs).  Returns the pool with row ``dst[i]`` holding
+    ``rows[:, i]`` for every i, all other rows untouched.  -> same
+    shape/dtype as ``pool``.
+    """
+    n_blocks, N, pt, KV, r = pool.shape
+    W = rows.shape[1]
+
+    def _rows_block(i, b, dst):
+        return (b, i, 0, 0, 0)
+
+    def _dst_block(i, b, dst):
+        return (b, dst[i], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(W, n_blocks),
+        in_specs=[pl.BlockSpec((1, 1, pt, KV, r), _rows_block),
+                  pl.BlockSpec((1, 1, pt, KV, r), _dst_block)],
+        out_specs=pl.BlockSpec((1, 1, pt, KV, r), _dst_block),
+    )
+    return pl.pallas_call(
+        _page_restore_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        # alias the pool through: untouched rows keep their bytes and
+        # the scatter is in-place on TPU (index 2 = pool, after the
+        # scalar-prefetch operand and the rows input)
+        input_output_aliases={2: 0},
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(dst.astype(jnp.int32), rows.astype(pool.dtype), pool)

@@ -1,4 +1,5 @@
-"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract
+behind DESIGN.md §4's kernels and the §9/§12 page movers).
 
 These are the semantics the kernels must reproduce bit-approximately;
 tests sweep shapes/dtypes and assert_allclose kernel-vs-ref.
@@ -125,6 +126,25 @@ def page_copy_ref(pool: jnp.ndarray, src: jnp.ndarray,
     row-to-row moves.  -> pool shape.
     """
     return pool.at[:, dst].set(pool[:, src])
+
+
+def page_restore_ref(pool: jnp.ndarray, rows: jnp.ndarray,
+                     dst: jnp.ndarray) -> jnp.ndarray:
+    """Host-tier page restore oracle (hierarchical KV, serve.memory
+    ``HostTier``): scatter externally-held page CONTENT into pool rows.
+    Where ``page_copy_ref`` moves rows within the pool (COW), this
+    writes rows whose bytes came from outside it — host RAM spill
+    slabs copied back before a prefix-cache restore resumes prefill.
+
+    pool: (n_blocks, N, page_tokens, KV, r);
+    rows: (n_blocks, W, page_tokens, KV, r) — slab ``rows[:, i]``
+    lands in pool row ``dst[i]``;  dst: (W,) int32.  Real dst entries
+    are distinct freshly-allocated pages; padding repeats the sentinel
+    row with all-zero slabs (duplicate scatter targets therefore all
+    carry identical content, so gather-vs-in-order semantics agree).
+    -> pool shape.
+    """
+    return pool.at[:, dst].set(rows)
 
 
 def mamba_scan_ref(dt: jnp.ndarray, A: jnp.ndarray, Bmat: jnp.ndarray,

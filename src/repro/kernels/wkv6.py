@@ -1,4 +1,6 @@
-"""Chunked RWKV-6 (Finch) wkv recurrence as a Pallas TPU kernel.
+"""Chunked RWKV-6 (Finch) wkv recurrence as a Pallas TPU kernel
+(DESIGN.md §4's TPU adaptation for the recurrent mixers; §5 scopes
+where it applies).
 
 The recurrence S_t = diag(exp(logw_t)) S_{t-1} + k_t v_t^T is sequential
 in t, but within a chunk of C tokens the outputs decompose into

@@ -1,16 +1,18 @@
 """Serving: batched engine over (optionally paged) CLOVER-rank KV
-caches with copy-on-write prefix caching, rank-balanced tensor
-parallelism, and an overload-safe robustness layer.
+caches with copy-on-write prefix caching, a hierarchical host-RAM
+spill tier, rank-balanced tensor parallelism, and an overload-safe
+robustness layer.
 
-Package layout (DESIGN.md §10, §11):
+Package layout (DESIGN.md §6, §8-§12):
   * ``config``    — ``EngineConfig``
-  * ``memory``    — ``PageAllocator``, ``PrefixCache`` (host-global)
+  * ``memory``    — ``PageAllocator``, ``PrefixCache``, ``HostTier``
+    (host-global; §6, §9, §12)
   * ``scheduler`` — ``Request``, ``Scheduler``, slot phases, request
     lifecycle statuses (QUEUED .. DONE/SHED/TIMED_OUT/CANCELLED)
   * ``executor``  — ``Executor`` protocol, ``LocalExecutor``,
-    ``ShardedExecutor`` (compiled entries + device placement)
+    ``ShardedExecutor`` (compiled entries + device placement; §10)
   * ``faults``    — ``FaultPlan`` deterministic fault injection,
-    ``FaultError``
+    ``FaultError`` (§11)
   * ``metrics``   — ``ServeMetrics`` behind ``Engine.stats()``
   * ``engine``    — ``Engine`` orchestration, ``greedy_reference``
 

@@ -1,4 +1,6 @@
-"""Engine configuration — the one dataclass every serve module reads.
+"""Engine configuration — the one dataclass every serve module reads
+(knobs for DESIGN.md §6, §8, §9, §10, §11, §12; each field cites its
+section inline).
 
 Lives in its own module so ``memory`` / ``scheduler`` / ``executor`` /
 ``engine`` can all import it without cycles.
@@ -31,6 +33,16 @@ class EngineConfig:
     # Attention-only architectures only (recurrent state is not
     # page-addressable).
     prefix_cache: bool = False
+    # -- hierarchical KV: host-RAM spill tier (DESIGN.md §12) ---------
+    # > 0 adds a host-memory tier of this many pages under the prefix
+    # cache (requires prefix_cache): LRU trie eviction copies each
+    # dropped page device->host (keyed by the trie node's chunk-chain
+    # hash) before freeing its HBM page, and admission restores a
+    # host-tier hit by copying the bytes into the slot's own freshly
+    # allocated pages, then resuming chunked prefill at the first
+    # truly-uncached token.  0 disables (evicted pages are simply
+    # dropped, the PR 4 behavior).
+    host_pages: int = 0
     # -- self-speculative decoding (DESIGN.md §8) ---------------------
     # 0 disables; k > 0: every pure-decode step, a rank-sliced DRAFT
     # pass over the SAME weights proposes k tokens per slot and one
@@ -86,6 +98,16 @@ class EngineConfig:
                 f"EngineConfig.kernel_impl={self.kernel_impl!r}: expected "
                 "'' (inherit ArchConfig.kernel_impl) or one of "
                 f"{self._IMPLS}")
+        if self.host_pages < 0:
+            raise ValueError(
+                f"EngineConfig.host_pages={self.host_pages}: must be "
+                ">= 0 (0 disables the host spill tier)")
+        if self.host_pages > 0 and not self.prefix_cache:
+            raise ValueError(
+                f"EngineConfig.host_pages={self.host_pages} requires "
+                "prefix_cache=True: the host tier spills and restores "
+                "prefix-trie pages, which only exist with the prefix "
+                "cache enabled")
         if self.step_retries < 0:
             raise ValueError(
                 f"EngineConfig.step_retries={self.step_retries}: must be "

@@ -5,7 +5,8 @@ Each engine step every slot is either decoding one token or consuming a
 fixed-size chunk of its prompt, so prefill interleaves with decode and
 the engine compiles exactly TWO step shapes regardless of the
 prompt-length mix (plus two with speculation, plus one once a
-copy-on-write page clone fires).  The division of labor:
+copy-on-write page clone fires, plus one once a host-tier restore
+fires).  The division of labor:
 
   * ``scheduler.Scheduler``  — WHAT happens: admission, phase tracking,
     chunk planning, preemption, retirement (host numpy).
@@ -20,7 +21,10 @@ copy-on-write page clone fires).  The division of labor:
 KV layout is DENSE (``EngineConfig.paged=False``: per-slot caches) or
 PAGED (one global pool per attention layer + host page tables); paged
 mode optionally shares pages across sequences by page-aligned token
-prefix (``prefix_cache``, DESIGN.md §9) and every pure-decode step can
+prefix (``prefix_cache``, DESIGN.md §9), optionally backed by a
+host-RAM spill tier (``host_pages``, DESIGN.md §12: trie eviction
+copies page bytes device->host before freeing, admission restores them
+instead of re-prefilling), and every pure-decode step can
 run self-speculatively (``spec_k``, DESIGN.md §8).  ``tp > 1`` serves
 the same streams over head-sharded params/pools (DESIGN.md §10).  All
 compositions emit greedy streams token-identical to the isolated
@@ -56,7 +60,7 @@ from repro.serve.config import EngineConfig
 from repro.serve.executor import (Executor, LocalExecutor, ShardedExecutor,
                                   is_recurrent, validate_kernel_parallelism)
 from repro.serve.faults import FaultError, FaultPlan
-from repro.serve.memory import PageAllocator, PrefixCache
+from repro.serve.memory import HostTier, PageAllocator, PrefixCache
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import Request, Scheduler
 
@@ -130,6 +134,7 @@ class Engine:
         else:
             self.alloc = None
         self.prefix: Optional[PrefixCache] = None
+        self.host: Optional[HostTier] = None
         if ecfg.prefix_cache:
             # the trie key folds in the rank plan AND the executor's
             # head-partition plan: caches produced under a different
@@ -139,9 +144,21 @@ class Engine:
                     cfg.clover.qk_rank, cfg.clover.vo_rank,
                     ecfg.page_tokens) + tuple(executor.plan_salt())
             self.prefix = PrefixCache(self.alloc, salt=salt)
+            if ecfg.host_pages > 0:
+                # hierarchical KV (DESIGN.md §12): trie eviction spills
+                # through page_reader (a BLOCKING device->host read of
+                # self.state's pool — always before the donated step
+                # that could consume the buffer), admission restores
+                # through the scheduler hook installed below
+                self.host = HostTier(ecfg.host_pages)
+                self.prefix.host = self.host
+                self.prefix.page_reader = (
+                    lambda page: self.exe.read_page(self.state, page))
         self.metrics = ServeMetrics()
         self.sched = Scheduler(ecfg, recurrent, self.alloc, self.prefix,
                                metrics=self.metrics)
+        if self.host is not None:
+            self.sched.restore = self._restore_pages
         # host mirror of state["index"] (tokens written per slot this
         # tenure) — drives page coverage without device round-trips
         self.written = np.zeros(ecfg.slots, np.int64)
@@ -190,6 +207,12 @@ class Engine:
         if self.prefix is not None:
             out["prefix_hits"] = self.sched.prefix_hits
             out["prefix_hit_tokens"] = self.sched.prefix_hit_tokens
+        if self.host is not None:
+            out["host_spills"] = self.host.spills
+            out["host_restores"] = self.host.restores
+            out["host_dropped"] = self.host.dropped
+            out["host_hit_rate"] = self.host.hit_rate
+            out["host_pages_used"] = len(self.host)
         if self.alloc is not None:
             out["page_util"] = self.alloc.utilization()
             out["peak_page_util"] = self.peak_page_util
@@ -265,6 +288,82 @@ class Engine:
                 if attempt < retries:
                     self.metrics.bump("retries")
         raise _StepAbort("page_copy: injected failure persisted")
+
+    # -- hierarchical KV: host-tier restore (DESIGN.md §12) ------------
+    def _guarded_restore(self, rows, dst: np.ndarray) -> bool:
+        """One fixed-width restore batch behind the fault boundary.
+        Unlike ``_guarded_copy`` this NEVER raises: restore runs inside
+        admission, outside ``step()``'s abort/recover scope, and giving
+        up is always safe — the caller re-prefills whatever the failed
+        batch would have restored (bounded, exact fallback).  Injection
+        fires BEFORE the compiled call, so retry inputs are intact."""
+        retries = (0 if getattr(self.exe, "donates_state", False)
+                   else self.ecfg.step_retries)
+        for attempt in range(retries + 1):
+            try:
+                if self.faults is not None \
+                        and self.faults.fire("host_copy"):
+                    raise FaultError("injected host-copy failure")
+                self.state = self.exe.page_restore(self.state, rows, dst)
+                if attempt > 0:
+                    self.metrics.bump("faults_recovered")
+                return True
+            except FaultError:
+                if attempt < retries:
+                    self.metrics.bump("retries")
+        self.metrics.bump("host_restore_fallbacks")
+        return False
+
+    def _restore_pages(self, s: int, eff: np.ndarray,
+                       hit_pages: int) -> int:
+        """Admission restore hook (installed as ``Scheduler.restore``):
+        probe the host tier for the pages of ``eff`` beyond the trie
+        hit and copy every CONSECUTIVE hit back into the slot's own
+        pages — ``ensure`` already allocated them, refcount 1, so the
+        writes need no COW.  The restored run is then published into
+        the trie (those pages are cached again, device-resident) and
+        prefill resumes after it.  Returns pages restored; 0 on a miss
+        or when a ``host_copy`` fault exhausts its retries, in which
+        case the un-restored tokens are simply re-prefilled."""
+        host, alloc = self.host, self.alloc
+        pt = alloc.page_tokens
+        n_full = len(eff) // pt
+        if n_full <= hit_pages:
+            return 0
+        hashes = self.prefix.chain_hashes(eff, n_full)
+        hits = []
+        for i in range(hit_pages, n_full):
+            rows = host.get(hashes[i])
+            if rows is None:
+                break               # restores must stay consecutive
+            hits.append(rows)
+        if not hits:
+            return 0
+        # fixed-width batches like _copy_pages: ONE compiled shape —
+        # dst padding repeats the sentinel, rows padding is zero slabs
+        # (identical content on the duplicate target, so scatter order
+        # is irrelevant; see kernels/ref.page_restore_ref)
+        W = max(1, self.ecfg.slots)
+        snt = alloc.sentinel
+        restored = 0
+        while restored < len(hits):
+            batch = hits[restored:restored + W]
+            dst = [alloc.tables[s][hit_pages + restored + j]
+                   for j in range(len(batch))]
+            dst += [snt] * (W - len(batch))
+            rows = [np.stack(list(slabs) + [np.zeros_like(slabs[0])]
+                             * (W - len(batch)), axis=1)
+                    for slabs in zip(*batch)]
+            if not self._guarded_restore(rows,
+                                         np.asarray(dst, np.int32)):
+                break
+            restored += len(batch)
+        if restored > 0:
+            host.restores += restored
+            self.metrics.bump("host_restored_pages", restored)
+            self.prefix.insert(eff,
+                               alloc.tables[s][:hit_pages + restored])
+        return restored
 
     def _recover(self):
         """Retry-exhausted step: quarantine every active slot until the

@@ -6,13 +6,14 @@ chunking, page coverage, speculative acceptance); an ``Executor`` owns
 HOW a planned step executes: it holds the (possibly sharded) params,
 builds the decode state where the step functions expect it, compiles
 ``prefill_chunk`` / ``decode_step`` / ``verify_chunk`` / the draft pass
-/ the COW page copy exactly once each, and decides buffer donation.
-Everything above the protocol is layout- and parallelism-agnostic —
-the same ``Engine``/``Scheduler`` drive both executors below.
+/ the COW page copy / the host-tier page restore (DESIGN.md §12)
+exactly once each, and decides buffer donation.  Everything above the
+protocol is layout- and parallelism-agnostic — the same
+``Engine``/``Scheduler`` drive both executors below.
 
 * ``LocalExecutor`` — single device, params as given.  The compiled-
   shape contract: 2 step shapes (chunk + decode), +2 with speculation,
-  +1 once a COW page copy fires.
+  +1 once a COW page copy fires, +1 once a host-tier restore fires.
 * ``ShardedExecutor`` — rank-balanced tensor parallelism: a
   ``("data", "model")`` host mesh (``launch.mesh.make_host_mesh``),
   params and KV/page pools sharded along HEADS
@@ -43,6 +44,7 @@ from typing import Any, Dict, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig, MIXER_ATTN, MLP_RWKV
 from repro.models import transformer as T
@@ -189,6 +191,12 @@ class Executor(Protocol):
     def page_copy(self, state, src, dst) -> Params:
         """Clone page contents src[i] -> dst[i] across all pools."""
 
+    def read_page(self, state, page):
+        """Device->host byte copy of one pool row per KV leaf (spill)."""
+
+    def page_restore(self, state, rows, dst) -> Params:
+        """Scatter host-held page content into pool rows (restore)."""
+
     def commit_index(self, state, index) -> Params:
         """Replace the per-slot index with a host value (rollback)."""
 
@@ -261,6 +269,24 @@ class LocalExecutor:
                 jax.tree_util.tree_map_with_path(cp, blocks))
 
         self._copy = jit(copy_fn, state_argnum=0) if ecfg.paged else None
+
+        # host-tier restore scatter (DESIGN.md §12): one fixed-width
+        # batch shape, reusing page_copy's row-to-row slab contract —
+        # the +1 compiled shape hierarchical KV adds (only engines
+        # with a host tier ever compile it)
+        def restore_fn(blocks, rows, dst):
+            it = iter(rows)
+
+            def rs(path, leaf):
+                if _is_kv(path):
+                    return dispatch.page_restore(leaf, next(it), dst)
+                return leaf
+
+            return self._pin_blocks(
+                jax.tree_util.tree_map_with_path(rs, blocks))
+
+        self._restore = (jit(restore_fn, state_argnum=0)
+                         if ecfg.paged and ecfg.host_pages > 0 else None)
         self._draft = self._verify = None
         self.draft_rank: Optional[Tuple[int, int]] = None
         if ecfg.spec_k > 0 and not self.recurrent:
@@ -364,6 +390,36 @@ class LocalExecutor:
                                 jnp.asarray(dst))
         return {"blocks": blocks, "index": state["index"]}
 
+    def read_page(self, state, page):
+        """Device->host spill read: pool row ``page`` of every KV leaf,
+        as numpy, in tree-traversal order (``page_restore`` consumes
+        the same order).  ``np.asarray`` BLOCKS until the transfer
+        completes — the page's bytes are safely on the host before the
+        caller frees the HBM page or a donating step consumes the pool
+        buffer (DESIGN.md §12's spill-before-free ordering)."""
+        out = []
+
+        def rd(path, leaf):
+            if _is_kv(path):
+                out.append(np.asarray(leaf[:, page]))
+            return leaf
+
+        jax.tree_util.tree_map_with_path(rd, state["blocks"])
+        return out
+
+    def page_restore(self, state, rows, dst) -> Params:
+        """Host->device restore scatter: slab ``rows[leaf][:, i]`` lands
+        in pool row ``dst[i]`` of the matching KV leaf.  ``rows`` is a
+        list of (n_blocks, W, page_tokens, KV, r) arrays in the same
+        tree order ``read_page`` produces; short batches arrive
+        zero-padded with sentinel dst entries (one fixed W = no new
+        compiled shapes per batch size)."""
+        with self._ctx():
+            blocks = self._restore(state["blocks"],
+                                   tuple(jnp.asarray(r) for r in rows),
+                                   jnp.asarray(dst))
+        return {"blocks": blocks, "index": state["index"]}
+
     def commit_index(self, state, index) -> Params:
         """Replace the per-slot index with a host value (the engine's
         speculative rollback) WITHOUT perturbing the next step's jit
@@ -377,11 +433,14 @@ class LocalExecutor:
         speculation (dense AND paged: the page table is shape-static),
         4 with it (one draft shape + one verify shape on top), plus at
         most 1 for the fixed-width page-copy batch once a prefix-cache
-        copy-on-write fault has fired — PER PARALLELISM DEGREE (each
-        executor owns its own jit closures).  Returns None if the jit
-        cache isn't introspectable (private API drift)."""
+        copy-on-write fault has fired, plus at most 1 for the
+        fixed-width host-tier restore batch once a spilled prefix is
+        restored — PER PARALLELISM DEGREE (each executor owns its own
+        jit closures).  Returns None if the jit cache isn't
+        introspectable (private API drift)."""
         fns = [f for f in (self._chunk, self._decode, self._copy,
-                           self._draft, self._verify) if f is not None]
+                           self._restore, self._draft, self._verify)
+               if f is not None]
         sizes = [getattr(f, "_cache_size", None) for f in fns]
         if any(s is None for s in sizes):
             return None
@@ -407,6 +466,8 @@ class LocalExecutor:
             rep["verify_chunk"] = "xla"
         if self._copy is not None:
             rep["page_copy"] = d.describe() if d.kernel_path else "ref"
+        if self._restore is not None:
+            rep["page_restore"] = d.describe() if d.kernel_path else "ref"
         return rep
 
 

@@ -2,7 +2,7 @@
 (DESIGN.md §11).
 
 A ``FaultPlan`` is a SEEDED schedule of failures the engine consults at
-four injection sites — the places a production serving host actually
+five injection sites — the places a production serving host actually
 fails:
 
   * ``"alloc"``     — ``PageAllocator.ensure`` reports exhaustion even
@@ -15,7 +15,14 @@ fails:
                       one failure mode that would poison streams if it
                       weren't detected at the boundary);
   * ``"page_copy"`` — a COW page-content clone batch fails before
-                      executing.
+                      executing;
+  * ``"host_copy"`` — a host->device restore batch (hierarchical KV's
+                      spill tier, DESIGN.md §12) fails before
+                      executing.  Recovery is BOUNDED by construction:
+                      the engine gives up on the remaining host-tier
+                      hits and falls back to re-prefilling those
+                      tokens — strictly more work, never a wrong
+                      token, allocator and trie untouched.
 
 Determinism is the whole point: decision ``i`` at site ``s`` is a pure
 function of ``(seed, s, i)`` — a per-site counter drives a
@@ -43,7 +50,7 @@ from typing import Dict, Optional
 import numpy as np
 
 # the engine's injection sites, in the order they appear in a step
-SITES = ("alloc", "step", "nan", "page_copy")
+SITES = ("alloc", "step", "nan", "page_copy", "host_copy")
 
 
 class FaultError(RuntimeError):

@@ -1,18 +1,97 @@
-"""KV-page memory management: the refcounted page allocator and the
-copy-on-write prefix-cache trie (DESIGN.md §6, §9).
+"""KV-page memory management: the refcounted page allocator, the
+copy-on-write prefix-cache trie, and the host-RAM spill tier under it
+(DESIGN.md §6, §9, §12).
 
-Both are HOST-side and layout-global: one ``PageAllocator`` (and one
-``PrefixCache``) serves the whole engine regardless of parallelism —
-page ids are the same on every model shard, each shard just stores its
-own heads' slice of every page (``parallel.sharding.serve_state_specs``).
-That is why the trie can stay host-global under tensor parallelism
-while the pools it indexes are sharded along heads (DESIGN.md §10).
+Everything here is HOST-side and layout-global: one ``PageAllocator``
+(and one ``PrefixCache``) serves the whole engine regardless of
+parallelism — page ids are the same on every model shard, each shard
+just stores its own heads' slice of every page
+(``parallel.sharding.serve_state_specs``).  That is why the trie can
+stay host-global under tensor parallelism while the pools it indexes
+are sharded along heads (DESIGN.md §10).
+
+The ``HostTier`` (DESIGN.md §12) holds BYTE COPIES of evicted trie
+pages keyed by each node's content chain hash — never page references
+— so spilled pages are genuinely freed and every allocator invariant
+(``assert_consistent``, the property-test state machine) holds
+unchanged with the tier enabled.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import hashlib
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
+
+
+def _hash_chain(parent_digest: bytes, chunk: bytes) -> bytes:
+    """One link of a trie node's content chain hash: the digest of a
+    node covering pages [0, i] is a pure function of the salt and the
+    token bytes of pages 0..i, independent of node ids (which are NOT
+    stable across evictions — the whole reason the host tier keys on
+    this chain instead of on trie structure)."""
+    return hashlib.blake2b(parent_digest + chunk, digest_size=16).digest()
+
+
+class HostTier:
+    """Host-RAM spill tier under the prefix cache (DESIGN.md §12).
+
+    An LRU-bounded ring of spilled KV pages: ``capacity`` page slots,
+    each holding the device->host byte copy of one evicted trie page
+    (a list of per-KV-leaf numpy slabs, opaque to this class) keyed by
+    the trie node's chunk-chain hash.  ``put`` overwrites an existing
+    key in place (same content by construction — the key IS the
+    content address) and drops the least-recently-used slot on
+    overflow; ``get`` is an LRU touch.  Values are COPIES, never page
+    references, so the tier is invisible to the allocator's refcount
+    invariants: a spilled page really is free HBM.
+    """
+
+    def __init__(self, capacity: int):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._slots: "OrderedDict[bytes, Any]" = OrderedDict()
+        # lifetime counters (Engine.stats() reports them)
+        self.spills = 0         # pages copied device->host at eviction
+        self.restores = 0       # pages copied host->device at admission
+        self.dropped = 0        # LRU overflow: oldest slot discarded
+        self.hits = 0           # get() found the key
+        self.misses = 0         # get() did not
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._slots
+
+    def put(self, key: bytes, rows) -> None:
+        """Store one spilled page's host bytes under its chain hash;
+        evicts the LRU slot when full (host capacity is a budget too)."""
+        if key in self._slots:
+            self._slots.move_to_end(key)
+            self._slots[key] = rows
+        else:
+            if len(self._slots) >= self.capacity:
+                self._slots.popitem(last=False)
+                self.dropped += 1
+            self._slots[key] = rows
+        self.spills += 1
+
+    def get(self, key: bytes):
+        """The host bytes for ``key`` (LRU touch), or None."""
+        rows = self._slots.get(key)
+        if rows is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._slots.move_to_end(key)
+        return rows
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
 
 
 class PageAllocator:
@@ -216,6 +295,14 @@ class PrefixCache:
     wins — an existing node keeps its page); ``evict`` reclaims LRU
     leaf nodes whose page no slot maps (refcount == 1: only the trie's
     own reference is left).
+
+    With a ``HostTier`` attached (``host`` + ``page_reader``, both set
+    by the engine — DESIGN.md §12), eviction SPILLS each dropped page
+    device->host before freeing it: the page's bytes survive under the
+    node's content chain hash (``hhash``, computed at insert), so a
+    later admission can restore them into fresh pages instead of
+    re-prefilling.  The spill is a byte copy, never a reference — the
+    allocator sees an ordinary eviction.
     """
 
     def __init__(self, alloc: PageAllocator, salt: Tuple = ()):
@@ -224,20 +311,45 @@ class PrefixCache:
         # the salt IS the root: two caches with different rank plans
         # have disjoint key spaces from the first page on
         self._root = ("root", salt)
+        # ... and it also roots the content chain hashes the host tier
+        # keys on, so spilled pages from different rank plans/head
+        # layouts can never alias either
+        self._root_hash = hashlib.blake2b(repr(self._root).encode(),
+                                          digest_size=16).digest()
         # radix keying: (parent node id, this page's pt tokens) -> node
-        # {"id", "page", "clock", "children", "parent_key"} — each walk
-        # step hashes ONE page of tokens, so match/insert are O(L), not
-        # O(L^2) re-serializations of the whole prefix per depth
+        # {"id", "page", "clock", "children", "parent_key", "hhash"} —
+        # each walk step hashes ONE page of tokens, so match/insert are
+        # O(L), not O(L^2) re-serializations of the whole prefix per
+        # depth
         self.nodes: Dict[tuple, dict] = {}
         self._next_id = 1
         self._clock = 0
         self.inserted = 0
         self.evicted = 0
+        # host spill tier (DESIGN.md §12): the engine installs both —
+        # ``host`` is the HostTier, ``page_reader`` a callable
+        # page_id -> host byte slabs (the executor's device->host read).
+        # With either unset, evict simply drops pages (PR 4 behavior).
+        self.host: Optional[HostTier] = None
+        self.page_reader = None
 
     def _chunk(self, tokens: np.ndarray, i: int) -> bytes:
         """Page ``i``'s token content (0-based), as a hashable key."""
         return np.asarray(tokens[i * self.pt:(i + 1) * self.pt],
                           np.int32).tobytes()
+
+    def chain_hashes(self, tokens: np.ndarray, n: int) -> List[bytes]:
+        """Content chain hashes of ``tokens``' first ``n`` full pages:
+        entry ``i`` is the digest a trie node covering pages [0, i]
+        carries (``hhash``) — and the key its page spills under.  Pure
+        function of (salt, token bytes), so admission can probe the
+        host tier for pages the trie no longer remembers."""
+        out: List[bytes] = []
+        h = self._root_hash
+        for i in range(n):
+            h = _hash_chain(h, self._chunk(tokens, i))
+            out.append(h)
+        return out
 
     def __len__(self) -> int:
         return len(self.nodes)
@@ -268,14 +380,19 @@ class PrefixCache:
         n = min(len(tokens) // self.pt, len(pages))
         self._clock += 1
         parent_id, parent_key = self._root, None
+        parent_hash = self._root_hash
         for i in range(n):
-            key = (parent_id, self._chunk(tokens, i))
+            chunk = self._chunk(tokens, i)
+            key = (parent_id, chunk)
             node = self.nodes.get(key)
             if node is None:
                 self.alloc.incref(pages[i])
                 node = {"id": self._next_id, "page": pages[i],
                         "clock": self._clock, "children": 0,
-                        "parent_key": parent_key}
+                        "parent_key": parent_key,
+                        # the content chain hash the host tier keys on
+                        # (stable across evictions, unlike node ids)
+                        "hhash": _hash_chain(parent_hash, chunk)}
                 self._next_id += 1
                 self.nodes[key] = node
                 if parent_key is not None:
@@ -284,13 +401,20 @@ class PrefixCache:
             else:
                 node["clock"] = self._clock
             parent_id, parent_key = node["id"], key
+            parent_hash = node["hhash"]
 
     def evict(self, n_pages: int) -> int:
         """Free up to ``n_pages`` pool pages by dropping LRU LEAF nodes
         nobody maps (page refcount == 1).  Leaf-first keeps every
         surviving node's prefix path intact.  One scan builds the
         clock-ordered candidate list; a parent whose last child is
-        dropped re-enters consideration within the same call."""
+        dropped re-enters consideration within the same call.
+
+        With the host tier attached, each dropped page is SPILLED
+        (device->host byte copy under the node's chain hash) just
+        before its decref frees it — ordering that matters for
+        donation safety: eviction always runs before the step call
+        that could consume the pool buffer (DESIGN.md §12)."""
         freed = 0
         candidates = sorted(
             (k for k, nd in self.nodes.items()
@@ -318,6 +442,13 @@ class PrefixCache:
                     candidates.sort(
                         key=lambda k: self.nodes[k]["clock"],
                         reverse=True)
+            if self.host is not None and self.page_reader is not None:
+                # spill BEFORE free: the device read must complete while
+                # the page is still live, and eviction always runs ahead
+                # of the step call that could consume (donate) the pool
+                # buffer (DESIGN.md §12)
+                self.host.put(node["hhash"],
+                              self.page_reader(node["page"]))
             self.alloc.decref(node["page"])
             self.evicted += 1
             freed += 1

@@ -32,7 +32,8 @@ class ServeMetrics:
     def __init__(self):
         # lifecycle counters: done/shed/timed_out/cancelled plus event
         # counters the engine bumps directly (retries, quarantines,
-        # watchdog_sheds, faults_recovered)
+        # watchdog_sheds, faults_recovered, and the host spill tier's
+        # host_restored_pages / host_restore_fallbacks — DESIGN.md §12)
         self.counters = collections.Counter()
         # priority -> per-class latency samples
         self.classes: Dict[int, Dict[str, list]] = {}

@@ -134,7 +134,11 @@ class Scheduler:
     token (``resume``); prefill completion / preemption / retirement
     publish the sequence's full-page run back into the trie so later
     requests (including the preempted sequence itself) skip the
-    redundant prefill compute.
+    redundant prefill compute.  With a host spill tier under the trie
+    (``EngineConfig.host_pages``, DESIGN.md §12) the engine installs a
+    ``restore`` callback that admission invokes AFTER ``ensure`` — it
+    copies spilled page content back into the slot's freshly allocated
+    pages and the resume point advances over the restored run too.
 
     Admission is PRIORITY-AWARE: the next candidate is the highest
     priority queued request, FIFO within a class — with every request
@@ -185,6 +189,14 @@ class Scheduler:
         self.requeues = 0
         self.prefix_hits = 0
         self.prefix_hit_tokens = 0
+        # host-tier restore hook (hierarchical KV, DESIGN.md §12): the
+        # engine assigns a callable ``(slot, eff_prompt, hit_pages) ->
+        # extra_pages`` that probes the host spill tier for pages
+        # beyond the trie hit and copies them back into the slot's own
+        # freshly allocated pages.  None = no host tier.  Restore runs
+        # THROUGH admission because only here are the slot's pages
+        # already ensured and the resume point still unfixed.
+        self.restore = None
 
     # -- admission -----------------------------------------------------
     def submit(self, req: Request):
@@ -241,6 +253,7 @@ class Scheduler:
                 slack = self.ecfg.spec_k
                 assert (self.alloc.pages_for(L + remaining + slack)
                         <= self.alloc.n_pages)
+                hit_pages = 0
                 if self.prefix is not None:
                     pages = self.prefix.match(eff)
                     if pages and self.alloc.map_shared(s, pages):
@@ -249,7 +262,8 @@ class Scheduler:
                         # resumes at L-1 and the rewrite of that
                         # position COWs the shared last page
                         pt = self.alloc.page_tokens
-                        resume = min(len(pages) * pt, L - 1)
+                        hit_pages = len(pages)
+                        resume = min(hit_pages * pt, L - 1)
                 ok = self.alloc.ensure(s, L)
                 if not ok and self.prefix is not None:
                     # cached-but-idle prefixes are reclaimable
@@ -266,6 +280,18 @@ class Scheduler:
                     # (undo the shared mapping so the trie can evict)
                     self.alloc.release(s)
                     break
+                if self.restore is not None:
+                    # hierarchical KV (DESIGN.md §12): pages beyond the
+                    # trie hit may survive in the HOST tier — ensure()
+                    # just allocated the slot's own pages for them, so
+                    # the engine can copy spilled bytes back instead of
+                    # re-prefilling.  On a host_copy fault the callback
+                    # returns what it managed (possibly 0); the resume
+                    # point only ever advances over RESTORED pages.
+                    extra = self.restore(s, eff, hit_pages)
+                    if extra > 0:
+                        resume = min((hit_pages + extra)
+                                     * self.alloc.page_tokens, L - 1)
             self.queue.remove(req)
             req.cached_tokens = resume
             req.status = RUNNING

@@ -15,17 +15,37 @@ without hypothesis installed:
 """
 import numpy as np
 
-from repro.serve.memory import PageAllocator, PrefixCache
+from repro.serve.memory import HostTier, PageAllocator, PrefixCache
 
 
 class PoolLifecycle:
-    """One pool + trie + per-slot sequence models, with invariants."""
+    """One pool + trie + per-slot sequence models, with invariants.
 
-    def __init__(self, n_pages=12, page_tokens=4, slots=3, table_pages=10):
+    With ``host_pages > 0`` the model also attaches a ``HostTier``
+    under the trie (DESIGN.md §12): eviction spills each dropped page's
+    content host-side before freeing it, and admission restores
+    host-tier hits onto the slot's fresh pages exactly the way
+    ``Engine._restore_pages`` does — so the state machines exercise the
+    spill/restore transitions against the same allocator invariants.
+    Page "content" here is the token slice the page committed (tracked
+    in ``page_content``), which lets restore assert the hash-keyed slab
+    is byte-for-byte the content that prefix produced earlier."""
+
+    def __init__(self, n_pages=12, page_tokens=4, slots=3, table_pages=10,
+                 host_pages=0):
         self.n_pages, self.pt = n_pages, page_tokens
         self.slots, self.table = slots, table_pages
         self.alloc = PageAllocator(n_pages, page_tokens, slots, table_pages)
         self.prefix = PrefixCache(self.alloc, salt=("model",))
+        self.host = None
+        self.page_content = {}
+        if host_pages > 0:
+            self.host = HostTier(host_pages)
+            self.prefix.host = self.host
+            # spill reads the page's committed token slice — the model
+            # stand-in for the engine's device->host row copy
+            self.prefix.page_reader = (
+                lambda page: self.page_content[page])
         # per-slot: {"stream": committed tokens, "L": prompt length,
         # "written": committed cache length} or None
         self.seq = [None] * slots
@@ -40,6 +60,10 @@ class PoolLifecycle:
         q = self.seq[s]
         n_full = q["written"] // self.pt
         if n_full > 0:
+            for idx in range(n_full):
+                self.page_content[self.alloc.tables[s][idx]] = tuple(
+                    int(t) for t in q["stream"][idx * self.pt:
+                                                (idx + 1) * self.pt])
             self.prefix.insert(q["stream"][:n_full * self.pt],
                                self.alloc.tables[s][:n_full])
 
@@ -52,9 +76,10 @@ class PoolLifecycle:
         tokens = np.asarray(tokens, np.int32)
         L = len(tokens)
         pages = self.prefix.match(tokens)
-        resume = 0
+        resume, hit = 0, 0
         if pages and self.alloc.map_shared(s, pages):
-            resume = min(len(pages) * self.pt, L - 1)
+            hit = len(pages)
+            resume = min(hit * self.pt, L - 1)
         ok = self.alloc.ensure(s, L)
         if not ok:
             short = (self.alloc.pages_for(L) - len(self.alloc.tables[s])
@@ -64,8 +89,39 @@ class PoolLifecycle:
         if not ok:
             self.alloc.release(s)
             return False
+        extra = self._restore(s, tokens, hit)
+        if extra > 0:
+            resume = min((hit + extra) * self.pt, L - 1)
         self.seq[s] = {"stream": tokens, "L": L, "written": resume}
         return True
+
+    def _restore(self, s, tokens, hit) -> int:
+        """Host-tier restore at admission (mirrors
+        ``Engine._restore_pages``): probe consecutive full-page chain
+        hashes past the trie hit, land each host slab on the slot's own
+        fresh page, then publish the extended run.  Asserts the slab is
+        exactly the token slice the hash commits to."""
+        if self.host is None:
+            return 0
+        n_full = len(tokens) // self.pt
+        if n_full <= hit:
+            return 0
+        hashes = self.prefix.chain_hashes(tokens, n_full)
+        extra = 0
+        for i in range(hit, n_full):
+            rows = self.host.get(hashes[i])
+            if rows is None:
+                break               # restores must stay consecutive
+            want = tuple(int(t)
+                         for t in tokens[i * self.pt:(i + 1) * self.pt])
+            assert rows == want, (rows, want)   # hash-keyed content
+            self.page_content[self.alloc.tables[s][i]] = rows
+            extra += 1
+        if extra > 0:
+            self.host.restores += extra
+            self.prefix.insert(tokens[:(hit + extra) * self.pt],
+                               self.alloc.tables[s][:hit + extra])
+        return extra
 
     def write(self, s, take, new_tokens) -> bool:
         """One step's scatter-write window [written, written + take):
@@ -88,6 +144,8 @@ class PoolLifecycle:
                     return False    # engine would evict/preempt here
                 pair = self.alloc.cow(s, idx)
                 assert pair is not None and pair[0] != pair[1]
+                if pair[0] in self.page_content:
+                    self.page_content[pair[1]] = self.page_content[pair[0]]
         grown = end - len(q["stream"])
         if grown > 0:
             q["stream"] = np.concatenate(
@@ -145,3 +203,11 @@ class PoolLifecycle:
             kids = sum(1 for n in pfx.nodes.values()
                        if n["parent_key"] == key)
             assert node["children"] == kids
+        if self.host is not None:
+            h = self.host
+            # host budget holds; counters account exactly for the
+            # slots present (spills in minus LRU drops, restores are
+            # copies and never remove a slot — DESIGN.md §12)
+            assert len(h) <= h.capacity
+            assert h.dropped <= h.spills
+            assert len(h._slots) <= h.spills - h.dropped

@@ -1,0 +1,98 @@
+"""tools/check_docs.py: citation resolution, docstring coverage and
+table-of-contents sync over synthetic DESIGN.md + source trees."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+import check_docs  # noqa: E402
+
+REPO = Path(__file__).resolve().parents[1]
+
+DESIGN = """\
+# Design
+
+Intro paragraph.
+
+## Contents
+
+- §1 Allocator
+- §2 Host tier
+
+## Section index
+
+**§1** blurb.  **§2** blurb.
+
+## §1 Allocator
+
+Body.
+
+## §2 Host tier
+
+Body.
+"""
+
+
+def _tree(tmp_path, design=DESIGN, serve_doc='"""Pool (DESIGN.md §1)."""\n',
+          kernels_doc='"""Movers (§1, §2)."""\n'):
+    """Build a minimal repo layout check_docs can audit."""
+    d = tmp_path / "DESIGN.md"
+    d.write_text(design)
+    root = tmp_path / "src" / "repro"
+    for tree, doc in (("serve", serve_doc), ("kernels", kernels_doc)):
+        pkg = root / tree
+        pkg.mkdir(parents=True)
+        (pkg / "mod.py").write_text(doc + "X = 1\n")
+    return ["--design", str(d), "--root", str(root)]
+
+
+def test_clean_tree_passes(tmp_path, capsys):
+    assert check_docs.main(_tree(tmp_path)) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_dangling_citation_fails(tmp_path, capsys):
+    argv = _tree(tmp_path, serve_doc='"""Cites DESIGN.md §99."""\n')
+    assert check_docs.main(argv) == 1
+    assert "§99" in capsys.readouterr().out
+
+
+def test_missing_docstring_fails(tmp_path, capsys):
+    argv = _tree(tmp_path, serve_doc="")
+    assert check_docs.main(argv) == 1
+    assert "missing module docstring" in capsys.readouterr().out
+
+
+def test_citation_free_docstring_fails(tmp_path, capsys):
+    argv = _tree(tmp_path, serve_doc='"""Docstring, no citation."""\n')
+    assert check_docs.main(argv) == 1
+    assert "cites no" in capsys.readouterr().out
+
+
+def test_toc_drift_fails(tmp_path, capsys):
+    stale = DESIGN.replace("- §2 Host tier\n", "")
+    assert check_docs.main(_tree(tmp_path, design=stale)) == 1
+    assert "Contents" in capsys.readouterr().out
+
+
+def test_toc_title_mismatch_fails(tmp_path):
+    renamed = DESIGN.replace("- §2 Host tier", "- §2 Host tier (old name)")
+    assert check_docs.main(_tree(tmp_path, design=renamed)) == 1
+
+
+def test_operational_errors(tmp_path):
+    argv = _tree(tmp_path)
+    missing = ["--design", str(tmp_path / "nope.md"), argv[2], argv[3]]
+    assert check_docs.main(missing) == 2
+    # DESIGN.md with no §N headers at all is operational, not a violation
+    (tmp_path / "DESIGN.md").write_text("# Design\n\nno sections\n")
+    assert check_docs.main(argv) == 2
+    # unparseable source
+    (tmp_path / "src" / "repro" / "serve" / "mod.py").write_text("def (:\n")
+    (tmp_path / "DESIGN.md").write_text(DESIGN)
+    assert check_docs.main(argv) == 2
+
+
+def test_repo_state_passes():
+    """The gate the CI lint job runs must hold for the actual tree."""
+    assert check_docs.main(["--design", str(REPO / "DESIGN.md"),
+                            "--root", str(REPO / "src" / "repro")]) == 0

@@ -1,0 +1,245 @@
+"""Hierarchical KV (DESIGN.md §12): HostTier LRU semantics, the
+evict→spill→restore lifecycle (spill happens BEFORE the HBM free,
+restore is bitwise re-prefill), the bounded ``host_copy`` fault
+fallback, and the host-enabled lifecycle random walk."""
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init_lm_params
+from repro.serve import Engine, EngineConfig, Request, greedy_reference
+from repro.serve.faults import FaultPlan
+from repro.serve.memory import HostTier, PageAllocator, PrefixCache
+
+from pool_model import PoolLifecycle
+
+
+@functools.lru_cache(maxsize=1)
+def _model(seed=0):
+    cfg = get_config("musicgen-large").reduced()
+    return init_lm_params(cfg, jax.random.PRNGKey(seed)), cfg
+
+
+def _host_cfg(**kw):
+    base = dict(slots=2, max_len=40, prefill_chunk=4, paged=True,
+                page_tokens=4, prefix_cache=True, host_pages=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# HostTier: LRU ring unit semantics
+# ---------------------------------------------------------------------------
+
+def test_host_tier_lru_overflow_drops_oldest():
+    h = HostTier(2)
+    h.put(b"a", 1)
+    h.put(b"b", 2)
+    h.put(b"c", 3)                       # overflow: a is LRU, dropped
+    assert (h.spills, h.dropped, len(h)) == (3, 1, 2)
+    assert b"a" not in h and h.get(b"a") is None
+    assert h.get(b"b") == 2 and h.get(b"c") == 3
+    assert (h.hits, h.misses) == (2, 1)
+    assert h.hit_rate == pytest.approx(2 / 3)
+
+
+def test_host_tier_touch_protects_from_eviction():
+    h = HostTier(2)
+    h.put(b"a", 1)
+    h.put(b"b", 2)
+    assert h.get(b"a") == 1              # a becomes MRU
+    h.put(b"c", 3)                       # b is now the LRU victim
+    assert b"b" not in h and b"a" in h and b"c" in h
+    # re-putting an existing key refreshes in place, never drops
+    h.put(b"a", 1)
+    assert (len(h), h.dropped) == (2, 1)
+
+
+def test_host_tier_capacity_validated():
+    with pytest.raises(AssertionError):
+        HostTier(0)
+
+
+def test_engine_config_guards_host_pages():
+    with pytest.raises(ValueError):
+        EngineConfig(slots=1, max_len=16, host_pages=-1)
+    with pytest.raises(ValueError):    # host tier needs the prefix trie
+        EngineConfig(slots=1, max_len=16, paged=True, page_tokens=4,
+                     host_pages=4)
+
+
+# ---------------------------------------------------------------------------
+# trie eviction: spill-before-free ordering
+# ---------------------------------------------------------------------------
+
+def test_evict_spills_page_content_before_free():
+    """The spill hook must read the page while it is still allocated —
+    eviction copies out, THEN decrefs (DESIGN.md §12 ordering)."""
+    a = PageAllocator(n_pages=8, page_tokens=4, slots=2, table_pages=8)
+    t = PrefixCache(a, salt=("t",))
+    t.host = HostTier(8)
+    reads = []
+
+    def reader(page):
+        assert page not in a.free_list, "spill read a freed page"
+        assert a.refcount[page] >= 1
+        reads.append(page)
+        return ("rows", page)
+
+    t.page_reader = reader
+    toks = np.arange(12, dtype=np.int32)
+    assert a.ensure(0, 12)
+    t.insert(toks, a.tables[0])
+    pages = list(a.tables[0][:3])
+    a.release(0)                          # trie-only now
+    assert t.evict(3) == 3
+    assert sorted(reads) == sorted(pages)
+    assert all(p in a.free_list for p in pages)   # really freed after
+    # spilled under the chunk-chain hashes, content intact
+    for i, key in enumerate(t.chain_hashes(toks, 3)):
+        assert t.host.get(key) == ("rows", pages[i])
+    assert t.host.spills == 3 and t.host.dropped == 0
+    a.assert_consistent(t, context="spill")
+
+
+def test_evict_without_reader_spills_nothing():
+    """A trie with a host tier but no page_reader (no executor wired)
+    must evict exactly as before — spill is strictly opt-in."""
+    a = PageAllocator(n_pages=8, page_tokens=4, slots=2, table_pages=8)
+    t = PrefixCache(a, salt=("t",))
+    t.host = HostTier(4)
+    toks = np.arange(8, dtype=np.int32)
+    assert a.ensure(0, 8)
+    t.insert(toks, a.tables[0])
+    a.release(0)
+    assert t.evict(2) == 2
+    assert len(t.host) == 0 and t.host.spills == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: restore == re-prefill, bitwise
+# ---------------------------------------------------------------------------
+
+def test_restore_is_bitwise_reprefill():
+    """Evict a prompt's pages through the host tier, replay the prompt:
+    the restored stream is token-identical AND the restored page bytes
+    equal the originally-prefilled ones — restore ≡ re-prefill."""
+    params, cfg = _model()
+    prompt = (np.arange(20, dtype=np.int32) * 5 + 2) % cfg.vocab_size
+    want = greedy_reference(params, cfg, prompt, 4)
+    eng = Engine(params, cfg, _host_cfg())
+
+    cold = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    eng.run([cold])
+    assert cold.generated == want
+    pages = eng.prefix.match(prompt)
+    assert len(pages) == 5
+    cold_rows = [eng.exe.read_page(eng.state, p) for p in pages]
+
+    assert eng.prefix.evict(100) == 5          # all 5 spill host-side
+    assert eng.host.spills == 5 and len(eng.host) == 5
+    assert eng.alloc.free_pages == eng.alloc.n_pages
+
+    warm = Request(uid=1, prompt=prompt, max_new_tokens=4)
+    eng.run([warm])
+    assert warm.generated == want
+    assert warm.cached_tokens == 19            # full hit resumes at L-1
+    assert eng.host.restores == 5
+    restored = eng.prefix.match(prompt)
+    assert len(restored) == 5
+    for old, page in zip(cold_rows, restored):
+        for a, b in zip(old, eng.exe.read_page(eng.state, page)):
+            np.testing.assert_array_equal(a, b)
+    st = eng.stats()
+    assert st["counters"].get("host_restored_pages") == 5
+    # 5 hits + the cold admission's probe of the then-empty tier
+    assert st["host_hit_rate"] == pytest.approx(5 / 6)
+    eng.alloc.assert_consistent(eng.prefix, context="restore")
+
+
+def test_partial_host_hit_restores_consecutive_prefix_only():
+    """Dropping a middle page from the host tier must stop the restore
+    at the gap (restores stay consecutive from the trie hit) and
+    re-prefill the rest — stream still exact."""
+    params, cfg = _model()
+    prompt = (np.arange(20, dtype=np.int32) * 3 + 1) % cfg.vocab_size
+    want = greedy_reference(params, cfg, prompt, 4)
+    eng = Engine(params, cfg, _host_cfg())
+    eng.run([Request(uid=0, prompt=prompt, max_new_tokens=4)])
+    eng.prefix.evict(100)
+    del eng.host._slots[eng.prefix.chain_hashes(prompt, 5)[2]]
+
+    warm = Request(uid=1, prompt=prompt, max_new_tokens=4)
+    eng.run([warm])
+    assert warm.generated == want
+    assert eng.host.restores == 2              # pages 0-1 only
+    assert warm.cached_tokens == 8
+    eng.alloc.assert_consistent(eng.prefix, context="partial-restore")
+
+
+def test_host_copy_fault_falls_back_to_reprefill():
+    """With every host->device restore batch failing, the engine must
+    give up on the host hits, re-prefill, and keep allocator + trie
+    consistent at every step — strictly more work, never a wrong
+    token (DESIGN.md §11/§12)."""
+    params, cfg = _model()
+    prompt = (np.arange(20, dtype=np.int32) * 7 + 3) % cfg.vocab_size
+    want = greedy_reference(params, cfg, prompt, 4)
+    faults = FaultPlan(seed=1, rates={"host_copy": 1.0})
+    eng = Engine(params, cfg, _host_cfg(), faults=faults)
+    eng.run([Request(uid=0, prompt=prompt, max_new_tokens=4)])
+    eng.prefix.evict(100)
+    assert eng.host.spills == 5
+
+    warm = Request(uid=1, prompt=prompt, max_new_tokens=4)
+    eng.submit(warm)
+    while not warm.done:
+        eng.step()
+        eng.alloc.assert_consistent(eng.prefix, context="fault-step")
+    assert warm.generated == want
+    assert eng.host.restores == 0              # every batch failed
+    st = eng.stats()
+    assert st["counters"].get("host_restore_fallbacks", 0) >= 1
+    assert st["counters"].get("retries", 0) >= 1
+    assert faults.injected["host_copy"] >= 1
+    assert "host_restored_pages" not in st["counters"]
+
+
+# ---------------------------------------------------------------------------
+# lifecycle random walk with the host tier attached (the no-hypothesis
+# counterpart of the spill/restore PrefixPoolMachine transitions)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_pool_lifecycle_walk_with_host_tier(seed):
+    rng = np.random.default_rng(seed)
+    pool = PoolLifecycle(n_pages=12, page_tokens=4, slots=3,
+                         table_pages=10, host_pages=4)
+    for _ in range(300):
+        op = rng.integers(0, 6)
+        if op == 0 and pool.free_slots():
+            L = int(rng.integers(1, pool.table * pool.pt - 8))
+            pool.admit(pool.free_slots()[0],
+                       rng.integers(0, 3, L).astype(np.int32))
+        elif op in (1, 2) and pool.active_slots():
+            s = int(rng.choice(pool.active_slots()))
+            take = int(rng.integers(1, 7))
+            pool.write(s, take, rng.integers(0, 3, take).astype(np.int32))
+        elif op == 3 and pool.active_slots():
+            pool.close(int(rng.choice(pool.active_slots())))
+        elif op == 4 and pool.active_slots():
+            pool.drop(int(rng.choice(pool.active_slots())))
+        else:
+            pool.evict(int(rng.integers(1, 5)))
+        pool.check()
+    while pool.active_slots():
+        pool.close(pool.active_slots()[0])
+        pool.check()
+    pool.evict(pool.alloc.n_pages)
+    pool.check()
+    assert pool.alloc.free_pages == pool.alloc.n_pages
+    assert pool.host.spills > 0        # the walk exercised the tier

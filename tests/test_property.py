@@ -126,20 +126,24 @@ def test_page_allocator_invariants(n_pages, page_tokens, slots, ops_seq):
 
 
 class PrefixPoolMachine(RuleBasedStateMachine):
-    """Random admit / match / COW-write / preempt / retire / evict
-    interleavings over the REAL ``PageAllocator`` + ``PrefixCache``
-    (the shared ``PoolLifecycle`` driver — tests/pool_model.py —
-    mirrors serve.engine's host-side sequence lifecycle).  Tokens come
-    from a tiny alphabet so prefixes collide constantly — maximal
-    sharing stress.  ``PoolLifecycle.check`` asserts after every rule:
-    refcounts match the actual reference multiset (and are >= 0), no
-    page is both free and mapped, no double-free, every trie node's
-    page is refcounted, and pool conservation (free + unique
-    mapped-or-indexed == n_pages)."""
+    """Random admit / match / COW-write / preempt / retire / evict /
+    spill / restore interleavings over the REAL ``PageAllocator`` +
+    ``PrefixCache`` + ``HostTier`` (the shared ``PoolLifecycle`` driver
+    — tests/pool_model.py — mirrors serve.engine's host-side sequence
+    lifecycle).  Tokens come from a tiny alphabet so prefixes collide
+    constantly — maximal sharing stress.  The undersized host tier
+    (DESIGN.md §12) makes every ``evict`` rule a spill (with LRU drops)
+    and every ``admit`` a potential hash-keyed restore, which must
+    return byte-identical content.  ``PoolLifecycle.check`` asserts
+    after every rule: refcounts match the actual reference multiset
+    (and are >= 0), no page is both free and mapped, no double-free,
+    every trie node's page is refcounted, pool conservation (free +
+    unique mapped-or-indexed == n_pages), and the host tier inside its
+    budget with exact spill/drop accounting."""
 
     def __init__(self):
         super().__init__()
-        self.pool = PoolLifecycle()
+        self.pool = PoolLifecycle(host_pages=4)
 
     @rule(data=st.data())
     def admit(self, data):

@@ -1,0 +1,128 @@
+"""Docs gate: keep DESIGN.md and the source docstrings honest.
+
+Three checks, all cheap enough for the CI lint job:
+
+1. **Citations resolve.**  Every ``DESIGN.md §N`` (or bare ``§N``)
+   reference in a source docstring under the audited trees must name a
+   section that actually exists as a ``## §N ...`` header in DESIGN.md
+   — a renumbered or deleted section fails the build instead of
+   leaving dangling citations.
+2. **Modules cite.**  Every module under ``src/repro/serve/`` and
+   ``src/repro/kernels/`` must open with a module docstring containing
+   at least one ``§N`` citation, so new code cannot land without
+   saying which design section it implements.
+3. **The table of contents matches.**  DESIGN.md's ``## Contents``
+   list must enumerate exactly the ``## §N ...`` headers present, in
+   order — the index at the top cannot silently drift from the body.
+
+Usage::
+
+    python tools/check_docs.py [--design DESIGN.md] [--root src/repro]
+
+Exit codes: 0 ok, 1 violations found, 2 operational error (missing
+DESIGN.md / unparseable source).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+# trees whose modules must carry a citing docstring
+AUDITED = ("serve", "kernels")
+
+_SECTION = re.compile(r"^##\s+§(\d+)\s+(.*)$", re.MULTILINE)
+_TOC_ENTRY = re.compile(r"^-\s+§(\d+)\s+(.*)$", re.MULTILINE)
+_CITATION = re.compile(r"§(\d+)")
+
+
+def design_sections(design: Path) -> Dict[int, str]:
+    """{section number: title} for every ``## §N ...`` header."""
+    return {int(n): t.strip()
+            for n, t in _SECTION.findall(design.read_text())}
+
+
+def toc_entries(design: Path) -> List[tuple]:
+    """[(number, title)] from the ``## Contents`` block, in order."""
+    text = design.read_text()
+    m = re.search(r"^## Contents\n(.*?)(?=^## )", text,
+                  re.MULTILINE | re.DOTALL)
+    if m is None:
+        return []
+    return [(int(n), t.strip()) for n, t in _TOC_ENTRY.findall(m.group(1))]
+
+
+def module_docstring(path: Path) -> str:
+    return ast.get_docstring(ast.parse(path.read_text())) or ""
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--design", type=Path, default=Path("DESIGN.md"))
+    ap.add_argument("--root", type=Path, default=Path("src/repro"),
+                    help="package root holding the audited trees")
+    args = ap.parse_args(argv)
+
+    if not args.design.exists():
+        print(f"docs gate: {args.design} not found")
+        return 2
+    sections = design_sections(args.design)
+    if not sections:
+        print(f"docs gate: no '## §N' section headers in {args.design}")
+        return 2
+
+    errors: List[str] = []
+
+    # -- check 3: TOC vs actual headers -------------------------------
+    toc = toc_entries(args.design)
+    want = sorted(sections.items())
+    if not toc:
+        errors.append(f"{args.design}: no '## Contents' list found")
+    elif toc != want:
+        errors.append(
+            f"{args.design}: Contents list does not match the section "
+            f"headers — listed {toc}, headers {want}")
+
+    # -- checks 1 + 2: source docstrings ------------------------------
+    audited_files = []
+    for tree in AUDITED:
+        root = args.root / tree
+        if not root.is_dir():
+            print(f"docs gate: audited tree {root} missing")
+            return 2
+        audited_files += sorted(root.rglob("*.py"))
+    for path in audited_files:
+        try:
+            doc = module_docstring(path)
+        except SyntaxError as e:
+            print(f"docs gate: cannot parse {path}: {e}")
+            return 2
+        cites = sorted({int(n) for n in _CITATION.findall(doc)})
+        if not doc.strip():
+            errors.append(f"{path}: missing module docstring")
+        elif not cites:
+            errors.append(f"{path}: module docstring cites no "
+                          "DESIGN.md section (add e.g. 'DESIGN.md §6')")
+        for n in cites:
+            if n not in sections:
+                errors.append(
+                    f"{path}: docstring cites DESIGN.md §{n}, which "
+                    "has no matching '## §{0}' header".format(n))
+
+    if errors:
+        print(f"docs gate: {len(errors)} violation(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n_cites = len(audited_files)
+    print(f"docs gate: OK — {len(sections)} DESIGN.md sections, "
+          f"{n_cites} audited modules, all citations resolve, "
+          "Contents in sync")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
