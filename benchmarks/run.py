@@ -18,9 +18,24 @@ artifacts) instead of evaporating with the build log.
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
 import traceback
+
+# serve_bench's tp cells need >= 2 devices, and XLA only honors the
+# host-device-count flag before jax first initializes.  Set it HERE,
+# before any benchmark module import: when serve_bench runs after a
+# module that already imported jax (e.g. kernel_bench in the same
+# process), its own import-time guard is too late, the tp > 1 cells
+# cannot form a mesh, and (before they raised) the run silently
+# dropped their gated baseline keys.
+if ("jax" not in sys.modules
+        and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4"
+                               ).strip()
 
 MODULES = ("table1_pruning", "table2_peft", "fig2_spectrum",
            "fig3_trainfree", "fig4_projection", "fig56_rank",

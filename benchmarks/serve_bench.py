@@ -2,7 +2,8 @@
 dense AND paged KV caches, self-speculative decoding, and copy-on-write
 prefix caching.
 
-Seven scenarios connect the paper's rank pruning to the serving path:
+Eight scenarios connect the paper's rank pruning and fine-tuning story
+to the serving path:
 
 1. **Mixed trace** — a Poisson arrival trace of mixed-length prompts is
    played against the dense and the paged engine at several CLOVER
@@ -45,10 +46,11 @@ Seven scenarios connect the paper's rank pruning to the serving path:
    5% of tp=1 (parallelism must never change scheduling — in practice
    it is identical), the two-shape compile contract per parallelism
    degree, and the partitioner's max/min shard rank-load <= 1.15 at
-   prune 0.5.  Needs > 1 device: this module forces 4 host devices
-   via XLA_FLAGS when imported before jax (both CI invocations do);
-   otherwise the tp > 1 cells are skipped with a warning and the perf
-   gate flags their missing baseline keys.
+   prune 0.5.  Needs > 1 device: this module (and benchmarks.run)
+   forces 4 host devices via XLA_FLAGS when imported before jax; if a
+   requested tp degree still cannot form a mesh the cell RAISES —
+   skipping would drop its gated baseline keys and let the run pass
+   with a hole in it.
 
    The ``tp_kernel_*`` cells replay the same trace with
    ``kernel_impl="interpret"``: since the Pallas hot path moved under
@@ -90,6 +92,23 @@ Seven scenarios connect the paper's rank pruning to the serving path:
    spills >= 1 and restores >= 1 actually fired, zero HBM pool growth
    (n_pages unchanged, peak utilization <= 1), and the compile budget
    grows by exactly the one restore entry.
+
+8. **Multi-tenant SV adapters** (DESIGN.md §13, the paper's
+   fine-tuning half served) — a mixed-tenant trace (three waves of a
+   shared system prompt + unique tails, tenants interleaved across the
+   identity adapter and two fine-tuned SV-adapter trees in one
+   ``core.peft.AdapterRegistry``) replayed across {dense, paged,
+   paged+prefix} x spec_k {0, 2} x tp {1, 2}.  Gated: every request's
+   stream token-identical to a single-adapter replay of its own
+   adapter (identity requests replay against the BASE params, so
+   identity == base model, bitwise); the compiled-shape count
+   unchanged versus the adapter-free engine on the same trace (the
+   per-slot bank gather is traced data, not shape); and per-adapter
+   prefix-trie isolation — the same system prompt cached under three
+   tenants occupies three DISJOINT page sets, later waves hit only
+   their own tenant's pages, and the identity tenant's key space is
+   hash-identical to an adapter-free build.  Setting
+   ``SERVE_BENCH_SCENARIO=adapter`` runs ONLY this scenario.
 
 What must hold on CPU (timings vary, orderings don't):
   * both engines compile exactly TWO step shapes each over the whole
@@ -146,7 +165,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import clover_decompose, clover_prune
+from repro.core import AdapterRegistry, clover_decompose, clover_prune
 from repro.models import init_lm_params
 from repro.serve import (DONE, Engine, EngineConfig, FaultPlan, Request,
                          greedy_reference)
@@ -179,6 +198,15 @@ TP_DEGREES = (1, 2)
 # is relative to HBM: ample
 HOST_PAGES = 2 * PREFIX_POOL_PAGES
 HOST_CHURN = 8
+# scenario 8: multi-tenant SV adapters — two fine-tuned tenants on top
+# of the reserved identity, three waves of a shared system prompt with
+# unique tails, tenants interleaved within every wave
+ADAPTER_SEED = 9
+ADAPTER_TENANTS = 2
+ADAPTER_WAVES = 3
+ADAPTER_WAVE_GAP = 25          # steps between waves: wave w publishes
+ADAPTER_MAX_NEW = 6            # its prefixes before wave w+1 admits
+ADAPTER_POOL_PAGES = 40        # ample: scenario 8 is not about pressure
 # scenario 6: overload/chaos trace — the PINNED fault seed CI runs with
 CHAOS_SEED = 20260807
 CHAOS_REQUESTS = 14
@@ -553,6 +581,180 @@ def _scenario_chaos(params0, cfg0, rows, checks, metrics):
     metrics["chaos"] = chaos_m
 
 
+def _adapter_trace(params, cfg, ecfg: EngineConfig, reg, specs, arrivals):
+    """Scenario-8 driver: replay the mixed-tenant trace once against an
+    engine built with (``reg``) or without (``reg=None``) the adapter
+    registry.  Deterministic ``tokens_per_step`` is the gated metric;
+    wall throughput is informational."""
+    eng = Engine(params, cfg, ecfg, adapters=reg)
+    # warm all compiled shapes so steady-state timing isn't compile time
+    eng.run([Request(uid=-1, prompt=specs[0]["prompt"][:3],
+                     max_new_tokens=2)])
+    eng.adapter_tokens.clear()      # per-tenant accounting starts at
+    eng.adapter_done.clear()        # the trace, not the warm-up
+    reqs = [Request(uid=s["uid"], prompt=s["prompt"],
+                    max_new_tokens=s["max_new_tokens"],
+                    adapter_id=(s["adapter_id"] if reg is not None else 0))
+            for s in specs]
+    due = sorted(reqs, key=lambda r: (arrivals[r.uid], r.uid))
+    t0 = time.monotonic()
+    step = 0
+    while due or eng.sched.busy:
+        while due and arrivals[due[0].uid] <= step:
+            eng.submit(due.pop(0))
+        eng.step()
+        step += 1
+    wall = time.monotonic() - t0
+    n_tok = sum(len(r.generated) for r in reqs)
+    m = {
+        # GATED: a lost own-tenant prefix hit or a broken adapter
+        # gather shows up as a deterministic tokens/step drop
+        "tokens_per_step": round(n_tok / max(1, step), 4),
+        "tokens_per_s_wall": round(n_tok / max(wall, 1e-9), 2),
+    }
+    return eng, reqs, m
+
+
+def _scenario_adapters(params0, cfg0, rows, checks, metrics):
+    """Scenario 8 (DESIGN.md §13): multi-tenant SV-adapter serving —
+    the paper's fine-tuning half behind the same engine.  One registry
+    (identity + two fine-tuned tenants), one mixed-tenant trace,
+    replayed across {dense, paged, paged+prefix} x spec_k {0, 2} x
+    tp {1, 2}; every stream gated against its own single-adapter
+    replay, compiled shapes against the adapter-free engine, and the
+    prefix trie against cross-tenant aliasing."""
+    dp, dcfg, _ = clover_decompose(params0, cfg0, peft=True)
+    reg = AdapterRegistry(dp)
+    arng = np.random.default_rng(ADAPTER_SEED)
+    for _ in range(ADAPTER_TENANTS):
+        reg.register(tuple(
+            {k: jnp.asarray(arng.uniform(0.8, 1.25, np.shape(v)),
+                            jnp.float32) for k, v in entry.items()}
+            for entry in reg.get(0)))
+    aids = list(range(len(reg)))
+
+    # three waves x one request per tenant, all sharing a page-aligned
+    # system prompt with unique tails: wave 0 publishes each tenant's
+    # prefix, later waves must hit ONLY their own tenant's pages
+    sys_prompt = ((np.arange(PREFIX_SYS_TOKENS, dtype=np.int32) * 5 + 2)
+                  % cfg0.vocab_size).astype(np.int32)
+    specs, arrivals = [], {}
+    uid = 0
+    for wave in range(ADAPTER_WAVES):
+        for aid in aids:
+            tail = ((np.arange(3 + aid, dtype=np.int32)
+                     + 7 * (wave * len(aids) + aid + 1))
+                    % cfg0.vocab_size).astype(np.int32)
+            specs.append(dict(
+                uid=uid, adapter_id=aid,
+                prompt=np.concatenate([sys_prompt, tail]).astype(np.int32),
+                max_new_tokens=ADAPTER_MAX_NEW))
+            arrivals[uid] = wave * ADAPTER_WAVE_GAP
+            uid += 1
+
+    # single-adapter replay oracles: tenant 0 replays against the BASE
+    # params — the identity gate is literally "bitwise the base model";
+    # fine-tuned tenants replay against their folded single-tenant
+    # params (registry scales merged into the s_qk/s_vo diagonals)
+    refs = {}
+    for aid in aids:
+        p = dp if aid == 0 else reg.folded(dp, aid)
+        ref_eng = Engine(p, dcfg, EngineConfig(
+            slots=len(aids), max_len=MAX_LEN, prefill_chunk=CHUNK))
+        rs = [Request(uid=s["uid"], prompt=s["prompt"],
+                      max_new_tokens=s["max_new_tokens"])
+              for s in specs if s["adapter_id"] == aid]
+        ref_eng.run(rs)
+        assert all(r.status == DONE for r in rs)
+        refs.update({r.uid: r.generated for r in rs})
+
+    base_cfgs = {
+        "dense": EngineConfig(slots=len(aids), max_len=MAX_LEN,
+                              prefill_chunk=CHUNK),
+        "paged": EngineConfig(slots=len(aids), max_len=MAX_LEN,
+                              prefill_chunk=CHUNK, paged=True,
+                              page_tokens=PAGE_TOKENS,
+                              n_pages=ADAPTER_POOL_PAGES),
+        "paged_prefix": EngineConfig(slots=len(aids), max_len=MAX_LEN,
+                                     prefill_chunk=CHUNK, paged=True,
+                                     page_tokens=PAGE_TOKENS,
+                                     n_pages=ADAPTER_POOL_PAGES,
+                                     prefix_cache=True),
+    }
+    adapter_m = {}
+    for layout, base_cfg in base_cfgs.items():
+        for kk in (0, 2):
+            for tp in TP_DEGREES:
+                if tp > 1 and (jax.device_count() < tp
+                               or jax.device_count() % tp):
+                    raise RuntimeError(
+                        f"adapter_{layout}_k{kk}_tp{tp}: cannot form a "
+                        f"{tp}-way mesh over {jax.device_count()} "
+                        "device(s); import benchmarks.run/serve_bench "
+                        "before jax or set XLA_FLAGS=--xla_force_host_"
+                        "platform_device_count=4")
+                ecfg = dataclasses.replace(
+                    base_cfg, tp=tp, spec_k=kk,
+                    draft_rank_ratio=DRAFT_RATIO)
+                tag = f"adapter_{layout}_k{kk}_tp{tp}"
+                eng, reqs, m = _adapter_trace(dp, dcfg, ecfg, reg,
+                                              specs, arrivals)
+                adapter_m[tag] = m
+                for kname, val in m.items():
+                    rows.append((tag, kname, val))
+                by_aid = {s["uid"]: s["adapter_id"] for s in specs}
+                checks[f"{tag}_streams_match_own_adapter_replay"] = all(
+                    r.generated == refs[r.uid] for r in reqs)
+                checks[f"{tag}_identity_bitwise_base_model"] = all(
+                    r.generated == refs[r.uid] for r in reqs
+                    if by_aid[r.uid] == 0)
+                if layout == "paged_prefix":
+                    # the prefix engine may additionally compile one
+                    # COW clone and (k>0) draft+verify entries; the
+                    # bank gather itself must add NOTHING
+                    budget = (2, 3, None) if kk == 0 else (3, 4, 5, None)
+                    checks[f"{tag}_shape_budget"] = (
+                        eng.compiled_shapes() in budget)
+                    # isolation: each tenant cached the SAME system
+                    # prompt under its own key — three non-empty,
+                    # pairwise-disjoint page sets, and tenant 0 lives
+                    # in the legacy (extra-free) key space
+                    psets = [set(eng.prefix.match(
+                        sys_prompt, extra=(a,) if a else ()))
+                        for a in aids]
+                    checks[f"{tag}_every_tenant_prefix_cached"] = all(
+                        len(ps) > 0 for ps in psets)
+                    checks[f"{tag}_no_cross_adapter_pages"] = all(
+                        psets[i].isdisjoint(psets[j])
+                        for i in range(len(psets))
+                        for j in range(i + 1, len(psets)))
+                    # later waves really hit their own tenant's pages
+                    checks[f"{tag}_later_waves_hit_own_prefix"] = all(
+                        r.cached_tokens > 0 for r in reqs
+                        if arrivals[r.uid] > 0)
+                else:
+                    # dense/paged: identical scheduling with and
+                    # without the registry -> the jit caches must end
+                    # the trace the same size (the gather is traced
+                    # data, not shape)
+                    eng_plain, _, _ = _adapter_trace(
+                        dp, dcfg, ecfg, None, specs, arrivals)
+                    checks[f"{tag}_shapes_unchanged_vs_no_adapters"] = (
+                        eng.compiled_shapes()
+                        == eng_plain.compiled_shapes())
+                if layout == "paged" and kk == 0 and tp == 1:
+                    # per-tenant accounting: every tenant finished its
+                    # three requests and emitted exactly its tokens
+                    st = eng.stats()
+                    want_tok = {a: ADAPTER_WAVES * ADAPTER_MAX_NEW
+                                for a in aids}
+                    checks["adapter_stats_per_tenant"] = (
+                        st["adapter_done"] == {a: ADAPTER_WAVES
+                                               for a in aids}
+                        and st["adapter_tokens"] == want_tok)
+    metrics["adapter"] = adapter_m
+
+
 def _kv_tokens_per_unpruned_token(cfg0, cfg) -> float:
     """How many tokens of cfg's (pruned-rank) cache fit in the HBM of
     one unpruned-rank token — bytes/token scales with r_qk + r_vo."""
@@ -563,16 +765,19 @@ def run(verbose: bool = True):
     cfg0 = get_config("musicgen-large").reduced()
     params0 = init_lm_params(cfg0, jax.random.PRNGKey(0))
 
-    # SERVE_BENCH_SCENARIO=chaos runs ONLY scenario 6 (the CI
-    # chaos-smoke job).  Unknown values fail loudly — a typo in CI
-    # must not silently run the whole module and pass.
+    # SERVE_BENCH_SCENARIO=chaos|adapter runs ONLY that scenario (the
+    # CI chaos-smoke job; focused local iteration on scenario 8).
+    # Unknown values fail loudly — a typo in CI must not silently run
+    # the whole module and pass.
+    standalone = {"chaos": _scenario_chaos, "adapter": _scenario_adapters}
     only = os.environ.get("SERVE_BENCH_SCENARIO", "").strip().lower()
-    if only and only != "chaos":
+    if only and only not in standalone:
         raise ValueError(
-            f"unknown SERVE_BENCH_SCENARIO={only!r}; supported: 'chaos'")
-    if only == "chaos":
+            f"unknown SERVE_BENCH_SCENARIO={only!r}; supported: "
+            + ", ".join(repr(k) for k in sorted(standalone)))
+    if only:
         rows, checks, metrics = [], {}, {}
-        _scenario_chaos(params0, cfg0, rows, checks, metrics)
+        standalone[only](params0, cfg0, rows, checks, metrics)
         if verbose:
             print("case,metric,value")
             for tag, k, v in rows:
@@ -796,12 +1001,17 @@ def run(verbose: bool = True):
                         "tokens_per_s_wall": m_p["tokens_per_s_wall"]}}
         for tp in [t for t in TP_DEGREES if t > 1]:
             if jax.device_count() < tp or jax.device_count() % tp:
-                print(f"tp_{tag}_tp{tp}: SKIPPED — needs {tp} devices, "
-                      f"have {jax.device_count()} (import this module "
-                      "before jax or set XLA_FLAGS=--xla_force_host_"
-                      "platform_device_count=4); the perf gate will "
-                      "flag the missing keys")
-                continue
+                # RAISE, never skip: a silently missing tp cell drops
+                # its gated baseline keys and the whole-module run
+                # "passes" with a hole in it (the exact failure mode
+                # benchmarks.run used to hit when chained after a
+                # module that imported jax first)
+                raise RuntimeError(
+                    f"tp_{tag}_tp{tp}: cannot form a {tp}-way mesh "
+                    f"over {jax.device_count()} device(s); import "
+                    "benchmarks.run/serve_bench before jax or set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_"
+                    "count=4")
             eng_t, reqs_t, m_t = _serve_trace(
                 params, cfg, trace, dataclasses.replace(paged_cfg, tp=tp))
             plan = eng_t.exe.plan   # None = replication fallback (heads
@@ -839,10 +1049,12 @@ def run(verbose: bool = True):
         tpk_m = {}
         for tp in TP_DEGREES:
             if jax.device_count() < tp or jax.device_count() % tp:
-                print(f"tp_kernel_{tag}_tp{tp}: SKIPPED — needs {tp} "
-                      f"devices, have {jax.device_count()}; the perf "
-                      "gate will flag the missing keys")
-                continue
+                raise RuntimeError(
+                    f"tp_kernel_{tag}_tp{tp}: cannot form a {tp}-way "
+                    f"mesh over {jax.device_count()} device(s); import "
+                    "benchmarks.run/serve_bench before jax or set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_"
+                    "count=4")
             eng_k, reqs_k, m_k = _serve_trace(
                 params, cfg, trace,
                 dataclasses.replace(paged_cfg, tp=tp,
@@ -880,6 +1092,9 @@ def run(verbose: bool = True):
 
     # -- overload + chaos (DESIGN.md §11) ------------------------------
     _scenario_chaos(params0, cfg0, rows, checks, metrics)
+
+    # -- multi-tenant SV adapters (DESIGN.md §13) ----------------------
+    _scenario_adapters(params0, cfg0, rows, checks, metrics)
 
     if verbose:
         print("case,metric,value")

@@ -7,4 +7,5 @@ from repro.core.prune import (  # noqa: F401
     permute_attention_heads, mask_head_ranks)
 from repro.core.peft import (  # noqa: F401
     PeftConfig, partition, combine, count_params, init_adapters,
-    materialize, pissa_residual, merge_adapters, CLOVER_TRAIN_KEYS)
+    materialize, pissa_residual, merge_adapters, CLOVER_TRAIN_KEYS,
+    sv_extract, sv_fold, AdapterRegistry)

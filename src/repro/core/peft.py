@@ -11,6 +11,12 @@ trees over 2D-flattened target weights; ``materialize`` produces the
 effective params for the forward pass.  At benchmark scale the W + AB
 materialization per step is negligible; production CLOVER needs no
 materialization at all — which is exactly the paper's point.
+
+Serving-side SV adapters (DESIGN.md §13): ``sv_extract`` / ``sv_fold``
+round-trip the rank-space diagonals of the decomposed transitions, and
+``AdapterRegistry`` keeps per-tenant diagonal scalings that the serving
+engine applies as an elementwise multiply — zero extra matmuls, and the
+identity adapter is bitwise the base model.
 """
 from __future__ import annotations
 
@@ -84,6 +90,8 @@ class PeftConfig:
 
     @property
     def scale(self) -> float:
+        """Nominal scale; per-adapter code must prefer ``alpha / r_eff``
+        because ``init_adapters`` clamps the rank on narrow targets."""
         return self.alpha / self.rank
 
 
@@ -145,6 +153,11 @@ def init_adapters(params: Params, pcfg: PeftConfig, key) -> Params:
             ad = {"a": a, "b": b}
         else:
             raise ValueError(pcfg.method)
+        # the clamp above can shrink r below pcfg.rank on narrow targets;
+        # materialize must scale by alpha / THIS rank, not the nominal one.
+        # Stored as a 0-d float so the adapter dict stays a valid jax tree
+        # for grad/optimizer transforms (stop_gradient'd at use).
+        ad["r_eff"] = jnp.float32(r)
         adapters[name] = ad
     return adapters
 
@@ -152,6 +165,15 @@ def init_adapters(params: Params, pcfg: PeftConfig, key) -> Params:
 def _delta(ad) -> jnp.ndarray:
     """(nb, in, out) low-rank update."""
     return jnp.einsum("nor,nri->nio", ad["b"], ad["a"])
+
+
+def _ad_scale(ad, pcfg: PeftConfig):
+    """alpha / effective rank for ONE adapter (falls back to the nominal
+    ``pcfg.scale`` for adapter dicts predating the ``r_eff`` field)."""
+    r_eff = ad.get("r_eff")
+    if r_eff is None:
+        return pcfg.scale
+    return pcfg.alpha / jax.lax.stop_gradient(r_eff)
 
 
 def materialize(params: Params, adapters: Params, pcfg: PeftConfig) -> Params:
@@ -167,11 +189,11 @@ def materialize(params: Params, adapters: Params, pcfg: PeftConfig) -> Params:
             # moves the principal component itself -> full-step updates.
             Wp = W + _delta(ad)
         elif pcfg.method == "dora":
-            V = W + pcfg.scale * _delta(ad)
+            V = W + _ad_scale(ad, pcfg) * _delta(ad)
             norm = jnp.linalg.norm(V, axis=1, keepdims=True)
             Wp = ad["m"][:, None, :] * V / jnp.maximum(norm, 1e-6)
         else:
-            Wp = W + pcfg.scale * _delta(ad)
+            Wp = W + _ad_scale(ad, pcfg) * _delta(ad)
         return Wp.reshape(leaf.shape).astype(leaf.dtype)
     return jax.tree_util.tree_map_with_path(visit, params)
 
@@ -191,3 +213,172 @@ def pissa_residual(params: Params, adapters: Params, pcfg: PeftConfig) -> Params
 def merge_adapters(params: Params, adapters: Params, pcfg: PeftConfig) -> Params:
     """Fold adapters into the weights (post-training)."""
     return materialize(params, adapters, pcfg)
+
+
+# ---------------------------------------------------------------------------
+# SV adapters: per-tenant diagonal scalings of the CLOVER transitions
+# (serving-side counterpart of CLOVER-S; DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# (transition key in the layer tree, diagonal key in the adapter tree)
+SV_ADAPTER_KEYS = (("s_qk", "s_qk_diag"), ("s_vo", "s_vo_diag"))
+
+
+def sv_extract(params: Params) -> Tuple[Dict[str, jnp.ndarray], ...]:
+    """Pull the rank-space diagonals of the CLOVER SV transitions.
+
+    After ``clover_decompose(peft=True)`` every attention layer carries
+    ``s_qk / s_vo`` transitions stacked ``(nb, H, d, d)`` whose diagonals
+    are the paper's trainable singular values.  Returns one dict per
+    pattern position with ``s_qk_diag (nb, H, dq)`` / ``s_vo_diag
+    (nb, H, dv)``; a key is absent when the position has no matching
+    transition (full-RoPE Q-K, non-attention mixers, undecomposed model).
+    """
+    out = []
+    for stacked in params["blocks"]:
+        entry = {}
+        attn = stacked.get("attn", {})
+        for src, dst in SV_ADAPTER_KEYS:
+            if src in attn:
+                entry[dst] = jnp.diagonal(attn[src], axis1=-2, axis2=-1)
+        out.append(entry)
+    return tuple(out)
+
+
+def sv_fold(params: Params, adapter) -> Params:
+    """Write an SV-adapter tree's diagonals back into the transitions.
+
+    Exact inverse of :func:`sv_extract`:
+    ``sv_fold(params, sv_extract(params))`` is bitwise-identical to
+    ``params``.  Only the diagonal entries are touched — off-diagonal
+    content (e.g. the partial-RoPE identity block) and every other key
+    (``k_t`` / ``up_t`` included) pass through untouched.
+    """
+    new_blocks = []
+    for stacked, entry in zip(params["blocks"], adapter):
+        stacked = dict(stacked)
+        if entry and "attn" in stacked:
+            attn = dict(stacked["attn"])
+            for src, dst in SV_ADAPTER_KEYS:
+                if dst in entry:
+                    mat = attn[src]
+                    eye = jnp.eye(mat.shape[-1], dtype=bool)
+                    attn[src] = jnp.where(
+                        eye, entry[dst][..., :, None].astype(mat.dtype), mat)
+            stacked["attn"] = attn
+        new_blocks.append(stacked)
+    out = dict(params)
+    out["blocks"] = tuple(new_blocks)
+    return out
+
+
+class AdapterRegistry:
+    """Host-side, versioned registry of per-tenant SV adapters.
+
+    Stores MULTIPLICATIVE per-head rank-space scale trees shaped like
+    :func:`sv_extract` output.  Adapter id 0 is always the identity
+    (all-ones): the serving engine applies adapters as an elementwise
+    ``x * scale`` after the ``s_qk`` / ``s_vo`` einsums, and IEEE
+    ``x * 1.0 == x`` makes identity-adapter streams bitwise equal to
+    the base model.  Ids are dense ``0..n-1`` so the engine can stack
+    every adapter into one fixed-shape gather bank (DESIGN.md §13).
+    """
+
+    def __init__(self, params: Params):
+        self._base = sv_extract(params)
+        if not any(self._base):
+            raise ValueError(
+                "AdapterRegistry needs clover_decompose(peft=True) params "
+                "(no s_qk/s_vo transitions found)")
+        identity = tuple({k: jnp.ones_like(v) for k, v in entry.items()}
+                         for entry in self._base)
+        self._scales = [identity]
+        self._versions = [0]
+        self.generation = 0
+
+    def __len__(self) -> int:
+        return len(self._scales)
+
+    @property
+    def n_adapters(self) -> int:
+        return len(self._scales)
+
+    def _validated(self, scales):
+        scales = tuple(dict(entry) for entry in scales)
+        if len(scales) != len(self._base):
+            raise ValueError(
+                f"adapter has {len(scales)} pattern positions, "
+                f"base has {len(self._base)}")
+        for entry, base in zip(scales, self._base):
+            if set(entry) != set(base):
+                raise ValueError(
+                    f"adapter keys {sorted(entry)} != base {sorted(base)}")
+            for k, v in entry.items():
+                if tuple(v.shape) != tuple(base[k].shape):
+                    raise ValueError(
+                        f"{k}: adapter shape {v.shape} != "
+                        f"base {base[k].shape}")
+        return scales
+
+    def scales_from_finetuned(self, diags):
+        """Convert a fine-tuned :func:`sv_extract` tree (absolute singular
+        values) into the multiplicative scales the engine applies, i.e.
+        ``finetuned / base`` with pruned (zero) base entries left at 1."""
+        return tuple(
+            {k: jnp.where(base[k] != 0, v / base[k],
+                          jnp.ones_like(v)).astype(jnp.float32)
+             for k, v in entry.items()}
+            for entry, base in zip(diags, self._base))
+
+    def register(self, scales) -> int:
+        """Add an adapter (multiplicative scale tree); returns its id."""
+        self._scales.append(self._validated(scales))
+        self._versions.append(0)
+        self.generation += 1
+        return len(self._scales) - 1
+
+    def update(self, adapter_id: int, scales) -> int:
+        """Replace an adapter in place; returns its bumped version."""
+        if adapter_id == 0:
+            raise ValueError("adapter id 0 is the reserved identity")
+        self._scales[adapter_id] = self._validated(scales)
+        self._versions[adapter_id] += 1
+        self.generation += 1
+        return self._versions[adapter_id]
+
+    def get(self, adapter_id: int):
+        return self._scales[adapter_id]
+
+    def version(self, adapter_id: int) -> int:
+        return self._versions[adapter_id]
+
+    def folded(self, params: Params, adapter_id: int) -> Params:
+        """``params`` with adapter ``adapter_id`` merged into the
+        ``s_qk``/``s_vo`` diagonals — the single-tenant model whose
+        whole-prompt replay every multi-tenant stream is gated against
+        (DESIGN.md §13).  Identity folds back bitwise."""
+        scaled = tuple(
+            {k: base[k] * entry[k] for k in base}
+            for base, entry in zip(self._base, self._scales[adapter_id]))
+        return sv_fold(params, scaled)
+
+    def bank(self):
+        """Stack every adapter into per-position gather buffers.
+
+        Returns one dict per pattern position mapping ``a_qk`` / ``a_vo``
+        to ``(nb, A, H, d)`` float32 arrays (A = number of adapters,
+        adapter id = index on axis 1).  ``None`` for positions with no SV
+        transitions.  The bank has a FIXED shape per engine lifetime, so
+        per-slot adapter selection is a traced gather — no new compiled
+        shapes (DESIGN.md §13).
+        """
+        bank_keys = {"s_qk_diag": "a_qk", "s_vo_diag": "a_vo"}
+        out = []
+        for j, base in enumerate(self._base):
+            if not base:
+                out.append(None)
+                continue
+            out.append({bank_keys[dst]: jnp.stack(
+                [sc[j][dst].astype(jnp.float32) for sc in self._scales],
+                axis=1) for dst in base})
+        return tuple(out)

@@ -217,6 +217,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
               write_floor: Optional[jnp.ndarray] = None,
               attn_impl: Any = "xla",
               draft_rank: Optional[Tuple[int, int]] = None,
+              adapter: Optional[Params] = None,
               ) -> Tuple[jnp.ndarray, Optional[Params]]:
     """GQA attention.
 
@@ -246,6 +247,14 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
     ``cache[..., :r]``; no second cache exists.  Draft K/V writes are
     zero-padded to the cache width and always overwritten by the verify
     pass before the full model reads those positions.
+
+    Multi-tenant SV adapters: ``adapter`` holds per-slot rank-space
+    scales {"a_qk": (B, H, dq_c), "a_vo": (B, H, dv_c)} (full cache
+    widths — draft entries slice the leading ``:dq``/``:dv``, matching
+    the weight slicing).  They multiply elementwise into the outputs of
+    the ``s_qk`` / ``s_vo`` transitions — per-tenant singular values at
+    zero extra matmuls; ``None`` (or the all-ones identity adapter)
+    leaves every path bitwise unchanged (DESIGN.md §13).
     """
     B, S, D = x.shape
     H, KV = cfg.n_heads, cfg.n_kv_heads
@@ -270,6 +279,20 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
     if "s_qk" in params:
         q = jnp.einsum("bshq,hqr->bshr", q,
                        params["s_qk"][..., :dq, :dq].astype(q.dtype))
+    if adapter is not None and "a_qk" in adapter:
+        # per-slot singular-value scaling of the Q-K transition output
+        q = q * adapter["a_qk"][:, None, :, :dq].astype(q.dtype)
+
+    def _vo_out(ctx):
+        """Shared V-O tail: transition, per-slot adapter scale, output
+        projection — the ONE place the s_vo math lives for every path."""
+        if "s_vo" in params:
+            ctx = jnp.einsum("bshv,hvw->bshw", ctx,
+                             params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
+        if adapter is not None and "a_vo" in adapter:
+            ctx = ctx * adapter["a_vo"][:, None, :, :dv].astype(ctx.dtype)
+        return jnp.einsum("bshv,hvd->bsd", ctx,
+                          params["wo"][..., :dv, :].astype(x.dtype))
 
     # Partial-RoPE pruning keeps the rotated block intact at the front, so
     # RoPE always applies to the first rope_dims (<= dq) dims.
@@ -328,11 +351,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
                 q[:, 0], ck[..., :dq].astype(x.dtype),
                 cv[..., :dv].astype(x.dtype),
                 page_table, lengths, scale=scale)[:, None]  # (B,1,H,dv)
-            if "s_vo" in params:
-                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
-            return y, new_cache
+            return _vo_out(ctx), new_cache
         # Chunked-prefill reads gather each slot's pages into a dense
         # (B, P*PT, KV, r) view and reuse the masked path below; writes
         # stay pool-resident (noted in DESIGN.md §6 as the cold path).
@@ -370,11 +389,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
                 q[:, 0], ck[..., :dq].astype(x.dtype),
                 cv[..., :dv].astype(x.dtype), lengths,
                 scale=scale)[:, None]                          # (B,1,H,dv)
-            if "s_vo" in params:
-                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
-            return y, new_cache
+            return _vo_out(ctx), new_cache
         k, v = ck[..., :dq].astype(x.dtype), cv[..., :dv].astype(x.dtype)
         if not per_slot and S > ATTN_CHUNK:
             # long cached prefill: chunked flash path
@@ -383,11 +398,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
                 q_offset=cache_index,
                 heads_shardable=_heads_shardable(H),
                 unroll=cfg.unroll_layers)
-            if "s_vo" in params:
-                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
-            return y, new_cache
+            return _vo_out(ctx), new_cache
         T = k.shape[1]
         kv_pos = jnp.arange(T, dtype=jnp.int32)
         ci = jnp.broadcast_to(jnp.atleast_1d(cache_index), (B,))
@@ -400,11 +411,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
         if use_pallas:  # full-sequence causal flash kernel
             ctx = dispatch.clover_attention(q, k, v, causal=True,
                                             scale=scale)       # (B,S,H,dv)
-            if "s_vo" in params:
-                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
-            return y, None
+            return _vo_out(ctx), None
         if S > ATTN_CHUNK:
             # XLA flash: scan over q blocks so the (bq, S) logits slab is
             # the peak — full (S, S) logits at 4k-32k would not fit HBM.
@@ -414,11 +421,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
                                             softcap=cfg.attn_logit_softcap,
                                             heads_shardable=_heads_shardable(H),
                                             unroll=cfg.unroll_layers)
-            if "s_vo" in params:
-                ctx = jnp.einsum("bshv,hvw->bshw", ctx,
-                                 params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
-            y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
-            return y, None
+            return _vo_out(ctx), None
         T = S
         qpos = jnp.arange(S, dtype=jnp.int32)
         mask = (qpos[None, :, None] >= qpos[None, None, :])
@@ -434,11 +437,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
     logits = jnp.where(mask[:, None, None, :, :], logits, neg)
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bkgst,btkv->bskgv", probs, v).reshape(B, S, H, dv)
-
-    if "s_vo" in params:
-        ctx = jnp.einsum("bshv,hvw->bshw", ctx, params["s_vo"][..., :dv, :dv].astype(ctx.dtype))
-    y = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"][..., :dv, :].astype(x.dtype))
-    return y, new_cache
+    return _vo_out(ctx), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -98,7 +98,7 @@ def _zero_aux():
 def _apply_layer(lp: Params, cfg: ArchConfig, mixer: str, mlp: str,
                  x: jnp.ndarray, *, positions, state: Optional[Params],
                  cache_index, pages=None, write_floor=None,
-                 draft_rank=None,
+                 draft_rank=None, adapter=None,
                  ) -> Tuple[jnp.ndarray, Optional[Params], Dict]:
     from repro.parallel.sharding import constrain, BATCH
     aux = _zero_aux()
@@ -116,7 +116,7 @@ def _apply_layer(lp: Params, cfg: ArchConfig, mixer: str, mlp: str,
                                 kv_cache=kv, cache_index=cache_index,
                                 page_table=pages, write_floor=write_floor,
                                 attn_impl=cfg.kernel_impl,
-                                draft_rank=draft_rank)
+                                draft_rank=draft_rank, adapter=adapter)
         if state is not None:
             new_state["kv"] = new_kv
     elif mixer == MIXER_MAMBA:
@@ -300,18 +300,23 @@ def init_decode_state_paged(cfg: ArchConfig, batch: int, n_pages: int,
 
 
 def _run_with_state(params, cfg, x, state, positions, pages=None,
-                    write_floor=None, draft_rank=None):
+                    write_floor=None, draft_rank=None, adapters=None):
+    # ``adapters``: per-slot SV-adapter scales, one tree per pattern
+    # position (leading n_blocks axis like params["blocks"]) or None —
+    # they ride the layer scan as a third xs element (DESIGN.md §13).
     cache_index = state["index"]
 
     def block_fn(x, xs):
-        block_params, block_state = xs
+        block_params, block_state, block_ad = xs
         new_states = []
         for j, (mixer, mlp) in enumerate(cfg.pattern):
             x, ns, _ = _apply_layer(block_params[j], cfg, mixer, mlp, x,
                                     positions=positions, state=block_state[j],
                                     cache_index=cache_index, pages=pages,
                                     write_floor=write_floor,
-                                    draft_rank=draft_rank)
+                                    draft_rank=draft_rank,
+                                    adapter=None if adapters is None
+                                    else block_ad[j])
             new_states.append(ns)
         return x, tuple(new_states)
 
@@ -320,13 +325,14 @@ def _run_with_state(params, cfg, x, state, positions, pages=None,
         for i in range(cfg.n_blocks):
             bp = jax.tree.map(lambda a: a[i], params["blocks"])
             bs = jax.tree.map(lambda a: a[i], state["blocks"])
-            x, ns = block_fn(x, (bp, bs))
+            ba = jax.tree.map(lambda a: a[i], adapters)
+            x, ns = block_fn(x, (bp, bs, ba))
             new_stacked.append(ns)
         new_block_states = jax.tree.map(
             lambda *xs: jnp.stack(xs), *new_stacked)
     else:
         x, new_block_states = jax.lax.scan(
-            block_fn, x, (params["blocks"], state["blocks"]))
+            block_fn, x, (params["blocks"], state["blocks"], adapters))
     # index is advanced by the caller (prefill / decode_step)
     return x, {"blocks": new_block_states, "index": cache_index}
 
@@ -352,6 +358,7 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
                   state: Params, lengths: jnp.ndarray,
                   pages: Optional[jnp.ndarray] = None,
                   write_floor: Optional[jnp.ndarray] = None,
+                  adapters=None,
                   ) -> Tuple[jnp.ndarray, Params]:
     """Write one fixed-size prompt chunk per slot into the decode state.
 
@@ -376,14 +383,16 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     ``init_decode_state_paged``).  ``write_floor``: optional (B,) first
     WRITABLE position per slot — scatter-writes below it (a
     prefix-cached read-only region, serve.engine) are rerouted to the
-    pool's garbage row; reads are unaffected.
+    pool's garbage row; reads are unaffected.  ``adapters``: optional
+    per-slot SV-adapter scale trees (see ``_run_with_state``).
     """
     B, C = tokens.shape
     idx = state["index"]                                   # (B,)
     positions = idx[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     x = _embed(params, cfg, tokens, positions, None)
     x, new_state = _run_with_state(params, cfg, x, state, positions,
-                                   pages=pages, write_floor=write_floor)
+                                   pages=pages, write_floor=write_floor,
+                                   adapters=adapters)
     new_state["index"] = idx + lengths
     last = jnp.clip(lengths - 1, 0, C - 1)
     x = jnp.take_along_axis(x, last[:, None, None], axis=1)
@@ -395,6 +404,7 @@ def verify_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
                  state: Params, lengths: jnp.ndarray,
                  pages: Optional[jnp.ndarray] = None,
                  write_floor: Optional[jnp.ndarray] = None,
+                 adapters=None,
                  ) -> Tuple[jnp.ndarray, Params]:
     """Multi-token VERIFY step for self-speculative decoding
     (DESIGN.md §8): run a (B, W) window of already-proposed tokens
@@ -411,14 +421,15 @@ def verify_chunk(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     rolls ``index`` back to the accepted prefix (dense and paged: a pure
     length decrement — stale K/V past the new index sits beyond every
     causal horizon until overwritten, the cache invariant every padded
-    chunk write already relies on).  ``write_floor`` as in
-    ``prefill_chunk``."""
+    chunk write already relies on).  ``write_floor`` and ``adapters`` as
+    in ``prefill_chunk``."""
     B, C = tokens.shape
     idx = state["index"]                                   # (B,)
     positions = idx[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     x = _embed(params, cfg, tokens, positions, None)
     x, new_state = _run_with_state(params, cfg, x, state, positions,
-                                   pages=pages, write_floor=write_floor)
+                                   pages=pages, write_floor=write_floor,
+                                   adapters=adapters)
     new_state["index"] = idx + lengths
     x = L.apply_norm(params["final_norm"], cfg, x)
     return _logits(params, cfg, x), new_state
@@ -429,15 +440,17 @@ def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
                 pages: Optional[jnp.ndarray] = None,
                 write_floor: Optional[jnp.ndarray] = None,
                 draft_rank: Optional[Tuple[int, int]] = None,
+                adapters=None,
                 ) -> Tuple[jnp.ndarray, Params]:
     """token: (B,) int32.  Returns (logits (B, V), new_state).
 
     state["index"] may be a scalar (lockstep decode) or a (B,) vector
     (per-slot positions, continuous batching).  ``pages``: optional
-    (B, n_p) page table for paged KV caches.  ``write_floor`` as in
-    ``prefill_chunk``.  ``draft_rank``: run the attention layers at the
-    sliced (r_q, r_v) widths — the self-speculative DRAFT pass over the
-    shared full-rank cache (DESIGN.md §8)."""
+    (B, n_p) page table for paged KV caches.  ``write_floor`` and
+    ``adapters`` as in ``prefill_chunk``.  ``draft_rank``: run the
+    attention layers at the sliced (r_q, r_v) widths — the
+    self-speculative DRAFT pass over the shared full-rank cache
+    (DESIGN.md §8)."""
     B = token.shape[0]
     idx = state["index"]
     if jnp.ndim(idx) == 1:
@@ -447,7 +460,7 @@ def decode_step(params: Params, cfg: ArchConfig, token: jnp.ndarray,
     x = _embed(params, cfg, token[:, None], positions, None)
     x, new_state = _run_with_state(params, cfg, x, state, positions,
                                    pages=pages, write_floor=write_floor,
-                                   draft_rank=draft_rank)
+                                   draft_rank=draft_rank, adapters=adapters)
     new_state["index"] = state["index"] + 1
     x = L.apply_norm(params["final_norm"], cfg, x)
     return _logits(params, cfg, x)[:, 0], new_state

@@ -1,9 +1,10 @@
 """Serving: batched engine over (optionally paged) CLOVER-rank KV
 caches with copy-on-write prefix caching, a hierarchical host-RAM
-spill tier, rank-balanced tensor parallelism, and an overload-safe
-robustness layer.
+spill tier, rank-balanced tensor parallelism, an overload-safe
+robustness layer, and multi-tenant SV-adapter serving (DESIGN.md §13:
+``core.peft.AdapterRegistry`` + ``Request.adapter_id``).
 
-Package layout (DESIGN.md §6, §8-§12):
+Package layout (DESIGN.md §6, §8-§13):
   * ``config``    — ``EngineConfig``
   * ``memory``    — ``PageAllocator``, ``PrefixCache``, ``HostTier``
     (host-global; §6, §9, §12)

@@ -30,6 +30,16 @@ the same streams over head-sharded params/pools (DESIGN.md §10).  All
 compositions emit greedy streams token-identical to the isolated
 whole-prompt reference (``greedy_reference``).
 
+MULTI-TENANT SV ADAPTERS (DESIGN.md §13): an optional
+``core.peft.AdapterRegistry`` gives every request a per-tenant set of
+CLOVER singular values.  The engine ships the registry's stacked
+gather bank to the executor once, passes each step a per-slot
+(slots,) adapter-id vector built from slot state, and keys the prefix
+trie (and host spill tier) by adapter id so cached K/V never crosses
+tenants.  Adapter id 0 is the identity — streams are bitwise the base
+model's, and an engine without a registry is byte-for-byte the
+pre-adapter build.
+
 ROBUSTNESS (DESIGN.md §11): every compiled call runs behind a guard
 that (a) optionally injects deterministic faults from a ``FaultPlan``
 and (b) always validates the returned logits are finite.  A failed
@@ -55,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.peft import AdapterRegistry
 from repro.models import transformer as T
 from repro.serve.config import EngineConfig
 from repro.serve.executor import (Executor, LocalExecutor, ShardedExecutor,
@@ -62,7 +73,7 @@ from repro.serve.executor import (Executor, LocalExecutor, ShardedExecutor,
 from repro.serve.faults import FaultError, FaultPlan
 from repro.serve.memory import HostTier, PageAllocator, PrefixCache
 from repro.serve.metrics import ServeMetrics
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import DONE, Request, Scheduler
 
 Params = Dict[str, Any]
 
@@ -91,7 +102,8 @@ class Engine:
     def __init__(self, params: Params, cfg: ArchConfig, ecfg: EngineConfig,
                  rng: Optional[jax.Array] = None,
                  executor: Optional[Executor] = None,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 adapters: Optional[AdapterRegistry] = None):
         if ecfg.kernel_impl:        # per-engine kernel dispatch override
             cfg = dataclasses.replace(cfg, kernel_impl=ecfg.kernel_impl)
         # impossible (impl, parallelism, arch) combos fail HERE, loudly,
@@ -116,9 +128,19 @@ class Engine:
                     "architecture: recurrent (mamba/rwkv) state is not "
                     "page-addressable, so a cached page run cannot "
                     "reconstruct it")
+        self.adapters = adapters
         if executor is None:
-            executor = (ShardedExecutor(params, cfg, ecfg) if ecfg.tp > 1
-                        else LocalExecutor(params, cfg, ecfg))
+            bank = adapters.bank() if adapters is not None else None
+            executor = (ShardedExecutor(params, cfg, ecfg,
+                                        adapter_bank=bank)
+                        if ecfg.tp > 1
+                        else LocalExecutor(params, cfg, ecfg,
+                                           adapter_bank=bank))
+        elif adapters is not None:
+            raise ValueError(
+                "pass adapters OR a pre-built executor, not both: the "
+                "registry's gather bank must be placed at executor "
+                "construction (LocalExecutor(..., adapter_bank=...))")
         self.exe = executor
         if faults is not None and getattr(executor, "donates_state", False):
             raise ValueError(
@@ -179,9 +201,30 @@ class Engine:
         # {n_emitted: rounds} — mean > 1.0 is the wall-clock win
         self.spec_rounds = 0
         self.accept_hist: Dict[int, int] = collections.defaultdict(int)
+        # per-adapter serving stats (DESIGN.md §13)
+        self.adapter_tokens: Dict[int, int] = collections.defaultdict(int)
+        self.adapter_done: Dict[int, int] = collections.defaultdict(int)
+        if adapters is not None:
+            # count completions per tenant at the single point every
+            # terminal transition already funnels through
+            base = self.metrics.on_terminal
+
+            def _on_terminal(req):
+                if req.status == DONE:
+                    self.adapter_done[req.adapter_id] += 1
+                base(req)
+            self.metrics.on_terminal = _on_terminal
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        n = 1 if self.adapters is None else len(self.adapters)
+        if req.adapter_id >= n:
+            raise ValueError(
+                f"Request.adapter_id (uid={req.uid})={req.adapter_id}: "
+                + (f"registry has {n} adapters" if self.adapters
+                   is not None else
+                   "engine built without an AdapterRegistry (only the "
+                   "identity adapter 0 exists)"))
         self.sched.submit(req)
 
     def cancel(self, uid: int) -> bool:
@@ -219,9 +262,23 @@ class Engine:
             out["free_pages"] = self.alloc.free_pages
         if self.ecfg.spec_k > 0:
             out["accepted_per_round"] = self.accepted_per_round
+        if self.adapters is not None:
+            out["adapter_tokens"] = dict(sorted(
+                self.adapter_tokens.items()))
+            out["adapter_done"] = dict(sorted(self.adapter_done.items()))
         if self.faults is not None:
             out["faults_injected"] = self.faults.summary()
         return out
+
+    def _slot_aids(self) -> Optional[np.ndarray]:
+        """(slots,) adapter-id vector for the NEXT compiled step: each
+        active slot's tenant, identity (0) for idle rows.  None without
+        a registry so the executor keeps the adapter-free jit
+        signature (DESIGN.md §13)."""
+        if self.adapters is None:
+            return None
+        return np.asarray([0 if r is None else r.adapter_id
+                           for r in self.sched.slot_req], np.int32)
 
     def _sample(self, logits: np.ndarray, temp: float) -> int:
         if temp <= 0:
@@ -239,6 +296,7 @@ class Engine:
             req.token_steps.append(self.steps)
             self.sched.last_token[s] = tok
             self._tokens_committed += 1
+            self.adapter_tokens[req.adapter_id] += 1
 
     # -- fault guards (DESIGN.md §11) ----------------------------------
     def _guarded(self, name: str, active: np.ndarray, fn, *args):
@@ -314,8 +372,8 @@ class Engine:
         self.metrics.bump("host_restore_fallbacks")
         return False
 
-    def _restore_pages(self, s: int, eff: np.ndarray,
-                       hit_pages: int) -> int:
+    def _restore_pages(self, s: int, eff: np.ndarray, hit_pages: int,
+                       extra: Tuple = ()) -> int:
         """Admission restore hook (installed as ``Scheduler.restore``):
         probe the host tier for the pages of ``eff`` beyond the trie
         hit and copy every CONSECUTIVE hit back into the slot's own
@@ -330,7 +388,11 @@ class Engine:
         n_full = len(eff) // pt
         if n_full <= hit_pages:
             return 0
-        hashes = self.prefix.chain_hashes(eff, n_full)
+        # ``extra`` is the admitting request's adapter key: the restore
+        # probe and the re-publish below both carry it, so spilled
+        # pages partition by tenant exactly like the trie they fell
+        # out of (DESIGN.md §13)
+        hashes = self.prefix.chain_hashes(eff, n_full, extra=extra)
         hits = []
         for i in range(hit_pages, n_full):
             rows = host.get(hashes[i])
@@ -362,7 +424,8 @@ class Engine:
             host.restores += restored
             self.metrics.bump("host_restored_pages", restored)
             self.prefix.insert(eff,
-                               alloc.tables[s][:hit_pages + restored])
+                               alloc.tables[s][:hit_pages + restored],
+                               extra=extra)
         return restored
 
     def _recover(self):
@@ -529,6 +592,7 @@ class Engine:
         k, W = ecfg.spec_k, ecfg.spec_window
         slots = ecfg.slots
         active = np.array([r is not None for r in sched.slot_req])
+        aids = self._slot_aids()
         n0 = self.written.copy()
         # draft k tokens; the draft's K/V writes land in the shared
         # cache but its state is DISCARDED — the verify step below
@@ -540,7 +604,7 @@ class Engine:
         for j in range(k):
             logits, dstate = self._guarded(
                 "draft_step", active, self.exe.draft_step,
-                dstate, tok, pages, wfloor)
+                dstate, tok, pages, wfloor, aids)
             tok = np.argmax(logits, axis=-1).astype(np.int32)
             drafts[:, j] = tok
         tokens = np.zeros((slots, W), np.int32)
@@ -549,7 +613,7 @@ class Engine:
         lengths = np.where(active, W, 0).astype(np.int32)
         logits, self.state = self._guarded(
             "verify_chunk", active, self.exe.verify_chunk,
-            self.state, tokens, lengths, pages, wfloor)
+            self.state, tokens, lengths, pages, wfloor, aids)
         targets = np.argmax(logits, axis=-1)                   # (slots, W)
         now = time.monotonic()
         self.spec_rounds += 1
@@ -573,6 +637,7 @@ class Engine:
                 req.token_times.append(now)
                 req.token_steps.append(self.steps)
                 self._tokens_committed += 1
+                self.adapter_tokens[req.adapter_id] += 1
             self.accept_hist[len(out)] += 1
             sched.last_token[s] = targets[s, a]
             self.written[s] = n0[s] + a + 1
@@ -624,13 +689,14 @@ class Engine:
                                       self.alloc.utilization())
         # recompute after _ensure_pages: preemption may have idled slots
         active = np.array([r is not None for r in sched.slot_req])
+        aids = self._slot_aids()
         self.max_active = max(self.max_active, int(active.sum()))
         if sched.has_chunk_work():
             tokens, lengths, fresh = sched.plan_chunk()
             logits, self.state = self._guarded(
                 "prefill_chunk", lengths > 0, self.exe.prefill_chunk,
                 self.state, tokens, lengths, fresh | ~active,
-                resume, pages, wfloor)
+                resume, pages, wfloor, aids)
             self.written += lengths        # device: index += lengths
             self._prefill_consumed += int(lengths.sum())
             self._emit(sched.advance_chunk(lengths), logits)
@@ -641,7 +707,7 @@ class Engine:
             logits, self.state = self._guarded(
                 "decode_step", active, self.exe.decode_step,
                 self.state, tokens, fresh | ~active,
-                resume, pages, wfloor)
+                resume, pages, wfloor, aids)
             self.written += 1              # device: index += 1, all slots
             self._emit(sched.advance_decode(), logits)
         else:

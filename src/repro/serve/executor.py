@@ -35,6 +35,13 @@ supports aliasing (TPU/GPU; CPU silently copies, so we skip it there
 rather than spam warnings).  The DRAFT pass is the one exception: the
 engine re-uses the pre-draft state for the verify step, so draft state
 is never donated.
+
+Multi-tenant SV adapters (DESIGN.md §13): the executor holds the
+stacked adapter gather bank (``AdapterRegistry.bank()``), placed like
+the params (sharded along heads under tp), and every step entry takes
+a per-slot ``(slots,)`` adapter-id vector; the bank gather is traced,
+so adapter traffic mixes never add compiled shapes.  The bank is an
+engine-lifetime constant passed alongside the params — never donated.
 """
 from __future__ import annotations
 
@@ -133,6 +140,20 @@ def _dev(x):
     return None if x is None else jnp.asarray(x)
 
 
+def _select_adapters(bank, ids):
+    """Gather per-slot SV-adapter scales out of the stacked bank:
+    ``(nb, A, H, d)`` -> ``(nb, B, H, d)`` per pattern position.  Runs
+    INSIDE the compiled step — the adapter mix is data, not shape, so
+    multi-tenant traffic never changes the jit signature (DESIGN.md
+    §13)."""
+    if bank is None:
+        return None
+    return tuple(
+        None if entry is None else
+        {k: jnp.take(v, ids, axis=1) for k, v in entry.items()}
+        for entry in bank)
+
+
 def _donation_supported() -> bool:
     # CPU "supports" donation only by warning and copying — skip it
     return jax.local_devices()[0].platform in ("tpu", "gpu")
@@ -176,16 +197,19 @@ class Executor(Protocol):
         """Build (and place) the decode-state tree."""
 
     def prefill_chunk(self, state, tokens, lengths, fresh, resume,
-                      pages, wfloor):
-        """(slots, C) chunk step -> (last-valid logits, new state)."""
+                      pages, wfloor, aids=None):
+        """(slots, C) chunk step -> (last-valid logits, new state).
+        ``aids``: optional (slots,) adapter-id vector (all entries)."""
 
-    def decode_step(self, state, tok, fresh, resume, pages, wfloor):
+    def decode_step(self, state, tok, fresh, resume, pages, wfloor,
+                    aids=None):
         """(slots,) one-token step -> (logits, new state)."""
 
-    def draft_step(self, state, tok, pages, wfloor):
+    def draft_step(self, state, tok, pages, wfloor, aids=None):
         """Rank-sliced draft pass; ``state`` is NOT consumed."""
 
-    def verify_chunk(self, state, tokens, lengths, pages, wfloor):
+    def verify_chunk(self, state, tokens, lengths, pages, wfloor,
+                     aids=None):
         """(slots, k+1) verify window -> (per-position logits, state)."""
 
     def page_copy(self, state, src, dst) -> Params:
@@ -216,12 +240,15 @@ class LocalExecutor:
     """Single-device executor — params used where they are."""
 
     def __init__(self, params: Params, cfg: ArchConfig,
-                 ecfg: EngineConfig):
+                 ecfg: EngineConfig, *, adapter_bank=None):
         self.cfg = cfg
         self.ecfg = ecfg
         self.tp = 1
         self.recurrent = is_recurrent(cfg)
         self.params = self._place_params(params)
+        # stacked per-tenant SV-adapter scales (AdapterRegistry.bank()),
+        # placed like the params; engine-lifetime constant, never donated
+        self.abank = self._place_adapters(adapter_bank)
         cfg = self._compile_cfg(cfg)
         # the ONE resolved dispatch every compiled entry traces with
         self.dispatch = cfg.kernel_impl
@@ -237,23 +264,28 @@ class LocalExecutor:
             return jax.jit(fn)
 
         def chunk_fn(params, tokens, lengths, fresh, resume, pages,
-                     wfloor, state):
+                     wfloor, abank, aids, state):
             st = _reset_fresh(state, fresh, resume)
             logits, new = T.prefill_chunk(params, cfg, tokens, st, lengths,
-                                          pages=pages, write_floor=wfloor)
+                                          pages=pages, write_floor=wfloor,
+                                          adapters=_select_adapters(abank,
+                                                                    aids))
             blocks = _merge_inactive(st["blocks"], new["blocks"],
                                      lengths > 0)
             return logits, self._pin_state(
                 {"blocks": blocks, "index": new["index"]})
 
-        def decode_fn(params, tok, fresh, resume, pages, wfloor, state):
+        def decode_fn(params, tok, fresh, resume, pages, wfloor, abank,
+                      aids, state):
             logits, new = T.decode_step(params, cfg, tok,
                                         _reset_fresh(state, fresh, resume),
-                                        pages=pages, write_floor=wfloor)
+                                        pages=pages, write_floor=wfloor,
+                                        adapters=_select_adapters(abank,
+                                                                  aids))
             return logits, self._pin_state(new)
 
-        self._chunk = jit(chunk_fn, state_argnum=7)
-        self._decode = jit(decode_fn, state_argnum=6)
+        self._chunk = jit(chunk_fn, state_argnum=9)
+        self._decode = jit(decode_fn, state_argnum=8)
         # batched page-content clone backing copy-on-write faults: the
         # ONE extra compiled shape prefix caching adds (a no-op without
         # it — compiled_shapes() counts it only once it runs)
@@ -297,26 +329,47 @@ class LocalExecutor:
             self.draft_rank = (None if dr == (cfg.qk_dim, cfg.vo_dim)
                                else dr)
 
-            def draft_fn(params, tok, pages, wfloor, state):
+            def draft_fn(params, tok, pages, wfloor, abank, aids, state):
                 # NEVER donate state here: the engine reuses the
                 # pre-draft state for the verify step
                 logits, new = T.decode_step(params, cfg, tok, state,
                                             pages=pages, write_floor=wfloor,
-                                            draft_rank=self.draft_rank)
+                                            draft_rank=self.draft_rank,
+                                            adapters=_select_adapters(abank,
+                                                                      aids))
                 return logits, self._pin_state(new)
 
-            def verify_fn(params, tokens, lengths, pages, wfloor, state):
+            def verify_fn(params, tokens, lengths, pages, wfloor, abank,
+                          aids, state):
                 logits, new = T.verify_chunk(params, cfg, tokens, state,
                                              lengths, pages=pages,
-                                             write_floor=wfloor)
+                                             write_floor=wfloor,
+                                             adapters=_select_adapters(abank,
+                                                                       aids))
                 return logits, self._pin_state(new)
 
             self._draft = jit(draft_fn)
-            self._verify = jit(verify_fn, state_argnum=5)
+            self._verify = jit(verify_fn, state_argnum=7)
 
     # -- placement hooks (overridden by ShardedExecutor) ---------------
     def _place_params(self, params: Params) -> Params:
         return params
+
+    def _place_adapters(self, bank):
+        if bank is None:
+            return None
+        return jax.tree.map(jnp.asarray, bank)
+
+    def _aids(self, aids):
+        """Per-slot adapter ids as a device vector; identity (0) when
+        the engine passes none.  Always None without a bank, so the
+        adapter-free jit signature is byte-identical to pre-adapter
+        builds."""
+        if self.abank is None:
+            return None
+        if aids is None:
+            return jnp.zeros((self.ecfg.slots,), jnp.int32)
+        return jnp.asarray(aids, jnp.int32)
 
     def _place_state(self, state: Params) -> Params:
         return state
@@ -360,29 +413,35 @@ class LocalExecutor:
         return self._place_state(state)
 
     def prefill_chunk(self, state, tokens, lengths, fresh, resume,
-                      pages, wfloor):
+                      pages, wfloor, aids=None):
         with self._ctx():
             return self._chunk(self.params, jnp.asarray(tokens),
                                jnp.asarray(lengths), jnp.asarray(fresh),
                                jnp.asarray(resume), _dev(pages),
-                               _dev(wfloor), state)
+                               _dev(wfloor), self.abank, self._aids(aids),
+                               state)
 
-    def decode_step(self, state, tok, fresh, resume, pages, wfloor):
+    def decode_step(self, state, tok, fresh, resume, pages, wfloor,
+                    aids=None):
         with self._ctx():
             return self._decode(self.params, jnp.asarray(tok),
                                 jnp.asarray(fresh), jnp.asarray(resume),
-                                _dev(pages), _dev(wfloor), state)
+                                _dev(pages), _dev(wfloor), self.abank,
+                                self._aids(aids), state)
 
-    def draft_step(self, state, tok, pages, wfloor):
+    def draft_step(self, state, tok, pages, wfloor, aids=None):
         with self._ctx():
             return self._draft(self.params, jnp.asarray(tok), _dev(pages),
-                               _dev(wfloor), state)
+                               _dev(wfloor), self.abank, self._aids(aids),
+                               state)
 
-    def verify_chunk(self, state, tokens, lengths, pages, wfloor):
+    def verify_chunk(self, state, tokens, lengths, pages, wfloor,
+                     aids=None):
         with self._ctx():
             return self._verify(self.params, jnp.asarray(tokens),
                                 jnp.asarray(lengths), _dev(pages),
-                                _dev(wfloor), state)
+                                _dev(wfloor), self.abank,
+                                self._aids(aids), state)
 
     def page_copy(self, state, src, dst) -> Params:
         with self._ctx():
@@ -514,7 +573,7 @@ class ShardedExecutor(LocalExecutor):
 
     def __init__(self, params: Params, cfg: ArchConfig,
                  ecfg: EngineConfig, *, tp: Optional[int] = None,
-                 plan=None):
+                 plan=None, adapter_bank=None):
         from repro.core.prune import head_rank_loads, rank_balanced_partition
         from repro.launch.mesh import make_host_mesh
         tp = int(tp if tp is not None else ecfg.tp)
@@ -527,7 +586,7 @@ class ShardedExecutor(LocalExecutor):
             plan = rank_balanced_partition(head_rank_loads(cfg), tp,
                                            group=cfg.q_per_kv)
         self.plan = plan
-        super().__init__(params, cfg, ecfg)
+        super().__init__(params, cfg, ecfg, adapter_bank=adapter_bank)
         self.tp = tp
 
     def _place_params(self, params: Params) -> Params:
@@ -538,6 +597,28 @@ class ShardedExecutor(LocalExecutor):
         rules = sh.serve_rules()
         specs = sh.param_specs(params, self.mesh, rules)
         return _put_tree(params, specs, self.mesh)
+
+    def _place_adapters(self, bank):
+        """Adapter bank sharded like the weights it scales: the
+        ``(nb, A, H, d)`` head axis follows the ``s_qk``/``s_vo`` rules
+        (permuted by the rank-balance plan, split over "model"; a head
+        count that does not divide tp degrades to replication exactly
+        as the weight specs do)."""
+        if bank is None:
+            return None
+        from repro.parallel import sharding as sh
+        if self.plan is not None and not self.plan.identity:
+            perm = jnp.asarray(self.plan.q_perm, jnp.int32)
+            bank = jax.tree.map(lambda a: jnp.take(a, perm, axis=2), bank)
+        rules = sh.serve_rules()
+
+        def place(a):
+            spec = rules.spec((None, None, sh.HEADS, None), a.shape,
+                              self.mesh)
+            return jax.device_put(
+                a, jax.sharding.NamedSharding(self.mesh, spec))
+
+        return jax.tree.map(place, bank)
 
     def _place_state(self, state: Params) -> Params:
         from repro.parallel import sharding as sh

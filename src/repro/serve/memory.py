@@ -303,6 +303,14 @@ class PrefixCache:
     later admission can restore them into fresh pages instead of
     re-prefilling.  The spill is a byte copy, never a reference — the
     allocator sees an ordinary eviction.
+
+    ``match``/``insert``/``chain_hashes`` take an ``extra`` key tuple
+    that extends the salt PER CALL — multi-tenant serving folds the
+    request's adapter id in here (DESIGN.md §13), so sequences under
+    different SV adapters partition into disjoint subtries (and
+    disjoint host-tier key spaces) even when their token streams are
+    identical: their K/V encode different hidden states.  The default
+    ``extra=()`` is bit-identical to the un-keyed cache.
     """
 
     def __init__(self, alloc: PageAllocator, salt: Tuple = ()):
@@ -338,14 +346,28 @@ class PrefixCache:
         return np.asarray(tokens[i * self.pt:(i + 1) * self.pt],
                           np.int32).tobytes()
 
-    def chain_hashes(self, tokens: np.ndarray, n: int) -> List[bytes]:
+    def _rooted(self, extra: Tuple) -> Tuple[Any, bytes]:
+        """(root id, root hash) for a walk keyed by ``extra`` on top of
+        the engine salt.  ``extra=()`` returns the plain root — the
+        legacy key space, so adapter-free callers (and adapter id 0,
+        which its caller maps to ``()``) hash identically to builds
+        that predate the parameter (DESIGN.md §13)."""
+        if not extra:
+            return self._root, self._root_hash
+        root = (self._root, tuple(extra))
+        return root, hashlib.blake2b(
+            self._root_hash + repr(tuple(extra)).encode(),
+            digest_size=16).digest()
+
+    def chain_hashes(self, tokens: np.ndarray, n: int,
+                     extra: Tuple = ()) -> List[bytes]:
         """Content chain hashes of ``tokens``' first ``n`` full pages:
         entry ``i`` is the digest a trie node covering pages [0, i]
         carries (``hhash``) — and the key its page spills under.  Pure
-        function of (salt, token bytes), so admission can probe the
-        host tier for pages the trie no longer remembers."""
+        function of (salt, extra, token bytes), so admission can probe
+        the host tier for pages the trie no longer remembers."""
         out: List[bytes] = []
-        h = self._root_hash
+        _, h = self._rooted(extra)
         for i in range(n):
             h = _hash_chain(h, self._chunk(tokens, i))
             out.append(h)
@@ -357,13 +379,14 @@ class PrefixCache:
     def pages(self) -> set:
         return {n["page"] for n in self.nodes.values()}
 
-    def match(self, tokens: np.ndarray) -> List[int]:
-        """Longest cached page run that is a prefix of ``tokens``.
+    def match(self, tokens: np.ndarray, extra: Tuple = ()) -> List[int]:
+        """Longest cached page run that is a prefix of ``tokens``
+        under the ``extra`` key (adapter isolation — DESIGN.md §13).
         Returns the page ids in position order (possibly empty) and
         LRU-touches every node on the path."""
         self._clock += 1
         pages: List[int] = []
-        parent = self._root
+        parent, _ = self._rooted(extra)
         for i in range(len(tokens) // self.pt):
             node = self.nodes.get((parent, self._chunk(tokens, i)))
             if node is None:
@@ -373,14 +396,17 @@ class PrefixCache:
             parent = node["id"]
         return pages
 
-    def insert(self, tokens: np.ndarray, pages: List[int]):
-        """Publish a full-page run: page ``i`` holds K/V for positions
-        [i*pt, (i+1)*pt) of ``tokens``.  Existing nodes win (their page
-        stays; the duplicate remains the caller's private copy)."""
+    def insert(self, tokens: np.ndarray, pages: List[int],
+               extra: Tuple = ()):
+        """Publish a full-page run under the ``extra`` key: page ``i``
+        holds K/V for positions [i*pt, (i+1)*pt) of ``tokens``.
+        Existing nodes win (their page stays; the duplicate remains the
+        caller's private copy)."""
         n = min(len(tokens) // self.pt, len(pages))
         self._clock += 1
-        parent_id, parent_key = self._root, None
-        parent_hash = self._root_hash
+        root_id, root_hash = self._rooted(extra)
+        parent_id, parent_key = root_id, None
+        parent_hash = root_hash
         for i in range(n):
             chunk = self._chunk(tokens, i)
             key = (parent_id, chunk)

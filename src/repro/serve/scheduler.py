@@ -21,6 +21,12 @@ the SAME decref path preemption uses (``PageAllocator.release``) but —
 unlike preemption — never publish into the prefix trie: a shed,
 cancelled, or timed-out request must leave the allocator, trie, and
 refcounts exactly as if it had never run.
+
+Multi-tenant serving (DESIGN.md §13): ``Request.adapter_id`` names the
+tenant's SV adapter; every trie ``match``/``insert`` this module issues
+folds that id into the walk key (``Request._trie_extra``), so prefix
+hits never cross adapters — K/V cached under one tenant's singular
+values encode different hidden states than another's.
 """
 from __future__ import annotations
 
@@ -58,6 +64,10 @@ class Request:
     # scheduling class: higher admits first; under overload the
     # watchdog and deadline shedder sacrifice lower priorities first
     priority: int = 0
+    # SV-adapter tenant (DESIGN.md §13): an AdapterRegistry id.  0 is
+    # the reserved identity adapter — bitwise the base model — and the
+    # only valid id on an engine built without a registry.
+    adapter_id: int = 0
     # deadline in ENGINE STEPS after submission (None = none): the
     # request must reach a terminal state within this many steps or it
     # is timed out (running) / shed (queued and provably unmeetable)
@@ -108,6 +118,18 @@ class Request:
             raise ValueError(
                 f"Request.deadline_steps (uid={self.uid})="
                 f"{self.deadline_steps}: must be None or >= 1")
+        if not isinstance(self.adapter_id, (int, np.integer)) \
+                or self.adapter_id < 0:
+            raise ValueError(
+                f"Request.adapter_id (uid={self.uid})="
+                f"{self.adapter_id!r}: must be an int >= 0")
+
+    @property
+    def _trie_extra(self) -> Tuple:
+        """Prefix-trie key extension (DESIGN.md §13): adapter 0 maps to
+        ``()`` so identity-tenant caches stay hash-identical to builds
+        without adapters."""
+        return (self.adapter_id,) if self.adapter_id else ()
 
     @property
     def done(self) -> bool:
@@ -190,12 +212,14 @@ class Scheduler:
         self.prefix_hits = 0
         self.prefix_hit_tokens = 0
         # host-tier restore hook (hierarchical KV, DESIGN.md §12): the
-        # engine assigns a callable ``(slot, eff_prompt, hit_pages) ->
-        # extra_pages`` that probes the host spill tier for pages
-        # beyond the trie hit and copies them back into the slot's own
-        # freshly allocated pages.  None = no host tier.  Restore runs
-        # THROUGH admission because only here are the slot's pages
-        # already ensured and the resume point still unfixed.
+        # engine assigns a callable ``(slot, eff_prompt, hit_pages,
+        # trie_extra) -> n_restored`` that probes the host spill tier
+        # for pages beyond the trie hit and copies them back into the
+        # slot's own freshly allocated pages (``trie_extra`` is the
+        # request's adapter key — DESIGN.md §13).  None = no host tier.
+        # Restore runs THROUGH admission because only here are the
+        # slot's pages already ensured and the resume point still
+        # unfixed.
         self.restore = None
 
     # -- admission -----------------------------------------------------
@@ -255,7 +279,7 @@ class Scheduler:
                         <= self.alloc.n_pages)
                 hit_pages = 0
                 if self.prefix is not None:
-                    pages = self.prefix.match(eff)
+                    pages = self.prefix.match(eff, extra=req._trie_extra)
                     if pages and self.alloc.map_shared(s, pages):
                         # at least one token must remain to prefill
                         # (its logits seed generation); a FULL hit
@@ -288,9 +312,10 @@ class Scheduler:
                     # re-prefilling.  On a host_copy fault the callback
                     # returns what it managed (possibly 0); the resume
                     # point only ever advances over RESTORED pages.
-                    extra = self.restore(s, eff, hit_pages)
-                    if extra > 0:
-                        resume = min((hit_pages + extra)
+                    n_rest = self.restore(s, eff, hit_pages,
+                                          req._trie_extra)
+                    if n_rest > 0:
+                        resume = min((hit_pages + n_rest)
                                      * self.alloc.page_tokens, L - 1)
             self.queue.remove(req)
             req.cached_tokens = resume
@@ -549,7 +574,8 @@ class Scheduler:
                 [stream, np.asarray(req.generated, np.int32)])
         n_full = int(n_valid) // self.alloc.page_tokens
         if n_full > 0:
-            self.prefix.insert(stream, self.alloc.tables[s][:n_full])
+            self.prefix.insert(stream, self.alloc.tables[s][:n_full],
+                               extra=req._trie_extra)
 
     def preempt(self, s: int, n_valid: int = 0):
         """Release slot ``s`` (decref its pages) and requeue its request

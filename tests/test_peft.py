@@ -8,7 +8,8 @@ import pytest
 from repro.configs import get_config
 from repro.core import (clover_decompose, merge_clover, PeftConfig,
                         partition, combine, count_params, init_adapters,
-                        materialize, pissa_residual)
+                        materialize, pissa_residual, merge_adapters,
+                        sv_extract, sv_fold, AdapterRegistry)
 from repro.models import init_lm_params, forward
 from repro.optim import AdamWConfig
 from repro.train.step import TrainConfig, make_train_step, make_opt_state
@@ -116,3 +117,136 @@ def test_full_finetune_then_merge_preserves():
     merged, _ = forward(p3, cfg3, toks)
     scale = float(jnp.max(jnp.abs(tuned))) + 1e-6
     assert float(jnp.max(jnp.abs(merged - tuned))) / scale < 1e-4
+
+
+def test_narrow_target_scales_by_effective_rank():
+    """A target narrower than the configured rank must be scaled by
+    alpha / r_eff (the clamped rank), not alpha / rank — regression for
+    the silent 8x under-scaling on narrow targets."""
+    pc = PeftConfig(method="lora", rank=32, alpha=32.0, targets=("wq",))
+    params = {"wq": jnp.zeros((1, 8, 4, 1), jnp.float32)}  # flat (1, 8, 4)
+    ad = init_adapters(params, pc, jax.random.PRNGKey(0))
+    (name, entry), = ad.items()
+    assert float(entry["r_eff"]) == 4.0          # min(n_in=8, n_out=4)
+    entry["b"] = jnp.ones_like(entry["b"])       # make the delta nonzero
+    eff = materialize(params, ad, pc)
+    delta = jnp.einsum("nor,nri->nio", entry["b"], entry["a"])
+    want = ((pc.alpha / 4.0) * delta).reshape(params["wq"].shape)
+    np.testing.assert_allclose(np.asarray(eff["wq"]), np.asarray(want),
+                               rtol=1e-6)
+    # the nominal scale would have been 8x too small here
+    assert pc.scale == 1.0
+
+
+def test_pissa_residual_roundtrip_is_original():
+    """materialize(pissa_residual(params, ad), ad) == params at init, to
+    float32 rounding (the subtract/re-add of the principal component)."""
+    cfg, params, _ = _setup()
+    pc = PeftConfig(method="pissa", rank=4)
+    ad = init_adapters(params, pc, jax.random.PRNGKey(1))
+    back = materialize(pissa_residual(params, ad, pc), ad, pc)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(back)[0]):
+        assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
+        d = float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+        s = float(jnp.max(jnp.abs(a))) + 1e-9
+        assert d / s < 1e-6, jax.tree_util.keystr(pa)
+
+
+def test_merge_adapters_init_is_bitwise_identity():
+    """LoRA's zero-init b makes the init-time merge exactly W + 0, so
+    merging (or re-merging) a fresh adapter must change no bits."""
+    cfg, params, _ = _setup()
+    pc = PeftConfig(method="lora", rank=4)
+    ad = init_adapters(params, pc, jax.random.PRNGKey(1))
+    merged = merge_adapters(params, ad, pc)
+    twice = merge_adapters(merged, ad, pc)       # idempotent at init
+    for a, b, c in zip(jax.tree.leaves(params), jax.tree.leaves(merged),
+                       jax.tree.leaves(twice)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(c))
+
+
+def test_sv_extract_fold_bitwise_inverse():
+    """sv_fold(params, sv_extract(params)) must reproduce every leaf
+    bitwise — diagonals re-written with their own values, off-diagonal
+    transition content and every other train key untouched."""
+    cfg, params, _ = _setup("musicgen-large")
+    p2, _, _ = clover_decompose(params, cfg, peft=True)
+    diags = sv_extract(p2)
+    assert any(diags), "no SV transitions extracted"
+    for entry in diags:
+        if entry:
+            assert set(entry) <= {"s_qk_diag", "s_vo_diag"}
+    back = sv_fold(p2, diags)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(p2)[0],
+            jax.tree_util.tree_flatten_with_path(back)[0]):
+        assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.fixture(scope="module")
+def decomposed():
+    cfg, params, _ = _setup("musicgen-large")
+    p2, cfg2, _ = clover_decompose(params, cfg, peft=True)
+    return p2, cfg2
+
+
+def test_adapter_registry_identity_and_validation(decomposed):
+    p2, _ = decomposed
+    reg = AdapterRegistry(p2)
+    assert len(reg) == 1 and reg.n_adapters == 1
+    # id 0 folds back to the base model bitwise (x * 1.0 == x)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(reg.folded(p2, 0))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # malformed registrations fail loudly
+    with pytest.raises(ValueError):
+        reg.register(tuple({} for _ in reg.get(0)))          # missing keys
+    with pytest.raises(ValueError):
+        reg.register(reg.get(0) + reg.get(0))                # wrong length
+    with pytest.raises(ValueError):
+        reg.register(tuple(
+            {k: v[..., :1] for k, v in e.items()} for e in reg.get(0)))
+    with pytest.raises(ValueError):
+        reg.update(0, reg.get(0))          # identity slot is reserved
+    # the registry refuses non-decomposed params outright
+    cfg, params, _ = _setup("musicgen-large")
+    with pytest.raises(ValueError):
+        AdapterRegistry(params)
+
+
+def test_adapter_registry_bank_and_versions(decomposed):
+    p2, _ = decomposed
+    reg = AdapterRegistry(p2)
+    two = tuple({k: 2.0 * v for k, v in e.items()} for e in reg.get(0))
+    aid = reg.register(two)
+    assert aid == 1 and len(reg) == 2
+    assert reg.version(aid) == 0
+    g0 = reg.generation
+    assert reg.update(aid, two) == 1 and reg.generation == g0 + 1
+    bank = reg.bank()
+    assert len(bank) == len(reg.get(0))
+    seen = 0
+    for pos, entry in zip(bank, reg.get(0)):
+        if pos is None:
+            assert not entry
+            continue
+        for bk, sk in (("a_qk", "s_qk_diag"), ("a_vo", "s_vo_diag")):
+            if sk in entry:
+                seen += 1
+                nb, A, H, d = pos[bk].shape
+                assert A == len(reg)
+                assert (nb, H, d) == tuple(entry[sk].shape)
+                np.testing.assert_array_equal(
+                    np.asarray(pos[bk][:, 0]), 1.0)   # id 0 = identity
+                np.testing.assert_array_equal(
+                    np.asarray(pos[bk][:, 1]), 2.0)
+    assert seen > 0
+    # scales_from_finetuned of the base diagonals is the identity adapter
+    ident = reg.scales_from_finetuned(sv_extract(p2))
+    for e in ident:
+        for v in e.values():
+            np.testing.assert_array_equal(np.asarray(v), 1.0)

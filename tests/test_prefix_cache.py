@@ -104,6 +104,24 @@ def test_trie_salt_isolates_rank_plans():
     assert t_a.match(toks) == a.tables[0][:2]
 
 
+def test_trie_extra_key_isolates_tenants():
+    """Per-adapter trie partition (DESIGN.md §13): runs inserted under an
+    ``extra`` key never match other keys, and ``extra=()`` is the same
+    namespace as the legacy positional calls."""
+    a, t = _trie()
+    toks = np.arange(8, dtype=np.int32)
+    assert a.ensure(0, 8) and a.ensure(1, 8)
+    t.insert(toks, a.tables[0])                  # legacy call, no extra
+    t.insert(toks, a.tables[1], extra=(1,))
+    assert t.match(toks, extra=()) == a.tables[0][:2]    # () == legacy
+    assert t.match(toks) == a.tables[0][:2]
+    assert t.match(toks, extra=(1,)) == a.tables[1][:2]
+    assert t.match(toks, extra=(2,)) == []               # unknown tenant
+    # hash chains are stable per (salt, extra) and disjoint across keys
+    assert t.chain_hashes(toks, 2) == t.chain_hashes(toks, 2, extra=())
+    assert t.chain_hashes(toks, 2) != t.chain_hashes(toks, 2, extra=(1,))
+
+
 def test_trie_evict_lru_leaf_first_and_skips_mapped():
     a, t = _trie(n_pages=8)
     old = np.arange(8, dtype=np.int32)
