@@ -24,6 +24,14 @@ The threshold (default 0.25 = 25%) can also come from the
 ``BENCH_REGRESSION_THRESHOLD`` environment variable, so CI can loosen
 the gate on noisy shared runners without a code change.  Exit codes:
 0 ok, 1 regression(s), 2 missing/operational error.
+
+``--current-dir`` defaults to the REPO ROOT, where ``benchmarks.run``
+writes (and the repo commits) the ``BENCH_*.json`` perf trajectory.
+Because key drift fails in both directions, a bare ``python -m
+benchmarks.compare`` also serves as the trajectory-sync check: the
+committed root files must carry exactly the gated keys the baselines
+do, so a stale or hand-edited root file fails CI the same way a
+renamed scenario does.
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ from pathlib import Path
 from typing import Dict, Iterator, Tuple
 
 BASELINE_DIR = Path(__file__).parent / "baselines"
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 # metric-name suffix -> direction ("higher" is better / "lower" is
 # better); every (path, value) whose last key matches is gated.
@@ -114,8 +123,10 @@ def compare_file(baseline_path: Path, current_path: Path,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
-    ap.add_argument("--current-dir", type=Path, default=Path("."),
-                    help="where the fresh BENCH_*.json files live")
+    ap.add_argument("--current-dir", type=Path, default=REPO_ROOT,
+                    help="where the fresh BENCH_*.json files live "
+                         "(default: the repo root, where benchmarks.run "
+                         "writes the committed perf trajectory)")
     ap.add_argument("--threshold", type=float, default=float(
         os.environ.get("BENCH_REGRESSION_THRESHOLD", "0.25")),
         help="max tolerated fractional regression (default 0.25)")

@@ -10,10 +10,12 @@ remaining modules still run, and the exit code is non-zero).
 
 Perf modules (``*_bench``) additionally get a machine-readable dump
 ``BENCH_<stem>.json`` (e.g. BENCH_serve.json, BENCH_kernel.json) written
-next to the stdout report — rows, checks and the module's ``metrics``
-dict (tokens/sec, p50/p95 ITL, TTFT, page-pool utilization, ...) — so
-the perf trajectory is tracked across PRs (CI uploads these as workflow
-artifacts) instead of evaporating with the build log.
+to the REPO ROOT — rows, checks and the module's ``metrics`` dict
+(tokens/sec, p50/p95 ITL, TTFT, page-pool utilization, ...).  The root
+files are COMMITTED (and also uploaded as CI workflow artifacts), so
+the perf trajectory is tracked in-repo across PRs instead of
+evaporating with the build log; ``compare.py`` verifies they stay
+key-synchronized with ``benchmarks/baselines/``.
 """
 from __future__ import annotations
 
@@ -22,6 +24,14 @@ import os
 import sys
 import time
 import traceback
+from pathlib import Path
+
+# Anchor BENCH_*.json at the repo root regardless of the invoking CWD:
+# "written wherever the runner happened to cd" is how the committed
+# perf trajectory ended up empty.  BENCH_OUTPUT_DIR redirects the
+# output for runs that must NOT touch the committed trajectory files
+# (subprocess tests, scenario-filtered smokes).
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 # serve_bench's tp cells need >= 2 devices, and XLA only honors the
 # host-device-count flag before jax first initializes.  Set it HERE,
@@ -43,7 +53,8 @@ MODULES = ("table1_pruning", "table2_peft", "fig2_spectrum",
 
 
 def _write_bench_json(name: str, out: dict, elapsed_s: float) -> str:
-    path = f"BENCH_{name[:-len('_bench')]}.json"
+    out_dir = Path(os.environ.get("BENCH_OUTPUT_DIR") or REPO_ROOT)
+    path = out_dir / f"BENCH_{name[:-len('_bench')]}.json"
     payload = {
         "module": name,
         "elapsed_s": round(elapsed_s, 2),
@@ -54,7 +65,10 @@ def _write_bench_json(name: str, out: dict, elapsed_s: float) -> str:
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
-    return path
+    try:
+        return str(path.relative_to(Path.cwd()))
+    except ValueError:
+        return str(path)
 
 
 def main(argv=None) -> int:

@@ -2,7 +2,7 @@
 dense AND paged KV caches, self-speculative decoding, and copy-on-write
 prefix caching.
 
-Eight scenarios connect the paper's rank pruning and fine-tuning story
+Nine scenarios connect the paper's rank pruning and fine-tuning story
 to the serving path:
 
 1. **Mixed trace** — a Poisson arrival trace of mixed-length prompts is
@@ -110,6 +110,24 @@ to the serving path:
    hash-identical to an adapter-free build.  Setting
    ``SERVE_BENCH_SCENARIO=adapter`` runs ONLY this scenario.
 
+9. **Spectrum-planned rank budgets** (DESIGN.md §14) — a spectrally
+   heterogeneous model (layer 1's attention damped 4x) is pruned two
+   ways at MATCHED total kept rank: the uniform 0.5 ratio and a
+   ``core.prune.plan_rank_budget`` water-filled plan.  The planned
+   allocation must keep at least the uniform plan's singular-value
+   energy (greedy over equal-width blocks guarantees it) and must be
+   genuinely non-uniform.  The scenario then walks the budget down to
+   the smallest total whose planned energy still covers uniform's and
+   gates the issue's OR: strictly smaller per-layer KV pool bytes at
+   equal quality, or strictly higher admitted concurrency at fixed
+   pool bytes (page budgets scaled analytically by kept rank, the
+   scenario-2 accounting).  Both engines run the rank-clamped Pallas
+   decode kernels (``kernel_impl="interpret"``), match their own
+   greedy references, hold the two-shape compile contract, and the
+   non-uniform plan serves token-identically at tp=2 vs tp=1 through
+   ``rank_balanced_partition`` re-planning.  Setting
+   ``SERVE_BENCH_SCENARIO=budget`` runs ONLY this scenario.
+
 What must hold on CPU (timings vary, orderings don't):
   * both engines compile exactly TWO step shapes each over the whole
     mixed-length trace (the two-shape contract survives paging), plus
@@ -165,10 +183,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import AdapterRegistry, clover_decompose, clover_prune
+from repro.core import (AdapterRegistry, RankBudget, apply_rank_budget,
+                        budget_kept_energy, clover_decompose, clover_prune,
+                        plan_rank_budget)
 from repro.models import init_lm_params
 from repro.serve import (DONE, Engine, EngineConfig, FaultPlan, Request,
-                         greedy_reference)
+                         greedy_reference, rank_pool_bytes)
 
 PRUNE_RATIOS = (0.0, 0.5)      # fraction of every head's rank removed
 N_REQUESTS = 8
@@ -755,6 +775,179 @@ def _scenario_adapters(params0, cfg0, rows, checks, metrics):
     metrics["adapter"] = adapter_m
 
 
+def _uniform_budget(extras, cfg, qk_keep: int, vo_keep: int) -> RankBudget:
+    """The uniform-ratio plan expressed as a ``RankBudget`` (same table
+    shapes as the planner's output), so scenario 9 can compare kept
+    energy and pool bytes plan-vs-plan with one accounting."""
+    uq, uv, total = [], [], 0
+    for ex in extras:
+        spectra = (ex or {}).get("spectra", {})
+        if "vo" not in spectra:
+            uq.append(())
+            uv.append(())
+            continue
+        nb, kv = np.shape(spectra["vo"])[:2]
+        uq.append(tuple(tuple(qk_keep for _ in range(kv))
+                        for _ in range(nb)))
+        uv.append(tuple(tuple(vo_keep for _ in range(kv))
+                        for _ in range(nb)))
+        total += nb * kv * (qk_keep + vo_keep)
+    return RankBudget(head_dim=cfg.head_dim_,
+                      rank_multiple=cfg.clover.rank_multiple,
+                      total_rank=total, budget=total,
+                      qk_ranks=tuple(uq), vo_ranks=tuple(uv))
+
+
+def _scenario_budget(params0, cfg0, rows, checks, metrics):
+    """Scenario 9 (DESIGN.md §14): spectrum-planned non-uniform rank
+    budgets vs the uniform ratio at MATCHED total kept rank.
+
+    The model is made spectrally heterogeneous (layer 1's attention
+    weights damped 4x — the within-stack spread real checkpoints show,
+    which random init lacks), decomposed once, then served two ways:
+    the uniform 0.5-ratio baseline and a ``plan_rank_budget`` plan at
+    the same total kept rank.  Greedy water-filling over the energy
+    tables guarantees planned kept energy >= uniform at matched total;
+    the scenario then finds the SMALLEST budget whose planned energy
+    still matches uniform's (the equal-quality point) and gates the
+    issue's OR: strictly smaller per-layer pool bytes at equal quality,
+    or strictly higher admitted concurrency at fixed pool bytes.  Both
+    engines' streams must match their own isolated greedy references
+    (chunked prefill exactness is per-model; kept ENERGY is the
+    cross-model quality proxy), the budget engine must hold the
+    two-shape compile contract, and tp=2 under the non-uniform plan
+    must stay token-identical to tp=1.  The ranked Pallas kernels run
+    throughout (kernel_impl="interpret").
+    """
+    damp = jnp.asarray([1.0, 0.25])
+    blocks = [dict(bj) for bj in params0["blocks"]]
+    attn = dict(blocks[0]["attn"])
+    for name in ("wq", "wv"):
+        attn[name] = attn[name] * damp[:, None, None, None]
+    blocks[0] = {**blocks[0], "attn": attn}
+    p_het = {**params0, "blocks": blocks}
+
+    dp, dcfg, extras = clover_decompose(p_het, cfg0, peft=False)
+    params_u, cfg_u = clover_prune(dp, dcfg, qk_ratio=0.5, vo_ratio=0.5)
+    uniform = _uniform_budget(extras, dcfg, cfg_u.qk_dim, cfg_u.vo_dim)
+    e_uniform = budget_kept_energy(extras, uniform)
+
+    planned = plan_rank_budget(extras, dcfg,
+                               total_rank=uniform.total_rank)
+    e_planned = budget_kept_energy(extras, planned)
+    # guaranteed by greedy optimality over equal-width blocks; and the
+    # plan must actually DIFFER (flat spectra would reduce to uniform,
+    # gating nothing)
+    checks["budget_planned_energy_ge_uniform"] = (
+        e_planned >= e_uniform - 1e-9)
+    checks["budget_plan_nonuniform"] = (
+        planned.qk_ranks != uniform.qk_ranks
+        or planned.vo_ranks != uniform.vo_ranks)
+
+    # equal-quality point: walk the budget down one rank_multiple at a
+    # time while planned kept energy still covers the uniform plan's
+    m = dcfg.clover.rank_multiple
+    star = planned
+    t = uniform.total_rank
+    while t - m > 0:
+        cand = plan_rank_budget(extras, dcfg, total_rank=t - m)
+        if (budget_kept_energy(extras, cand) + 1e-9 < e_uniform
+                or cand.total_rank >= t):
+            break
+        star, t = cand, cand.total_rank
+    pb_uniform = rank_pool_bytes(uniform, page_tokens=PAGE_TOKENS,
+                                 n_pages=PREFIX_POOL_PAGES)
+    pb_star = rank_pool_bytes(star, page_tokens=PAGE_TOKENS,
+                              n_pages=PREFIX_POOL_PAGES)
+    smaller_pool = (star.total_rank < uniform.total_rank
+                    and pb_star["kept"] < pb_uniform["kept"])
+
+    params_b, cfg_b = apply_rank_budget(dp, dcfg, star)
+    rng = np.random.default_rng(3)
+    trace = _poisson_trace(rng, N_REQUESTS, cfg0.vocab_size)
+    uni_cfg = EngineConfig(slots=4, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                           paged=True, page_tokens=PAGE_TOKENS,
+                           kernel_impl="interpret")
+    bud_cfg = dataclasses.replace(uni_cfg, rank_budget=star)
+    eng_u, reqs_u, m_u = _serve_trace(params_u, cfg_u, trace, uni_cfg)
+    eng_b, reqs_b, m_b = _serve_trace(params_b, cfg_b, trace, bud_cfg)
+
+    # equal greedy-stream quality: each engine is exact vs its own
+    # isolated reference (energy is the cross-model quality proxy)
+    checks["budget_uniform_greedy_matches_reference"] = all(
+        r.generated == greedy_reference(params_u, cfg_u, r.prompt,
+                                        r.max_new_tokens)
+        for r in reqs_u[:3])
+    checks["budget_planned_greedy_matches_reference"] = all(
+        r.generated == greedy_reference(params_b, cfg_b, r.prompt,
+                                        r.max_new_tokens)
+        for r in reqs_b[:3])
+    checks["budget_two_compiled_shapes"] = (
+        eng_u.compiled_shapes() in (2, None)
+        and eng_b.compiled_shapes() in (2, None))
+
+    # fixed pool BYTES leg: kept bytes/token scale with total kept
+    # rank, so the equal-quality plan's byte budget holds
+    # total_uniform / total_star more tokens -> more pages -> more
+    # admitted sequences.  (Per-layer accounting: the stacked runtime
+    # pools allocate at the plan's global max width — DESIGN.md §14
+    # keeps both numbers honest.)
+    pressure = _poisson_trace(rng, PRESSURE_REQUESTS, cfg0.vocab_size,
+                              mean_gap_steps=0.3, lo=18, hi=31)
+    pages_u = PRESSURE_BUDGET_TOKENS // PAGE_TOKENS
+    pages_b = (PRESSURE_BUDGET_TOKENS * uniform.total_rank
+               // star.total_rank) // PAGE_TOKENS
+    eng_pu, reqs_pu, m_pu = _serve_trace(
+        params_u, cfg_u, pressure,
+        dataclasses.replace(uni_cfg, slots=PRESSURE_REQUESTS,
+                            n_pages=pages_u))
+    eng_pb, reqs_pb, m_pb = _serve_trace(
+        params_b, cfg_b, pressure,
+        dataclasses.replace(bud_cfg, slots=PRESSURE_REQUESTS,
+                            n_pages=pages_b))
+    higher_conc = m_pb["max_concurrent"] > m_pu["max_concurrent"]
+    # the tentpole gate — the issue's OR, both legs at matched quality
+    checks["budget_smaller_pool_or_higher_concurrency"] = (
+        smaller_pool or higher_conc)
+    checks["budget_star_pool_bytes_strictly_smaller"] = smaller_pool
+
+    # tp=2 under the non-uniform plan: token-identical to tp=1 (the
+    # partition re-plans from plan.head_loads()); RAISE if the mesh
+    # cannot form — a skipped cell would drop gated baseline keys
+    if jax.device_count() < 2 or jax.device_count() % 2:
+        raise RuntimeError(
+            f"budget_tp2: cannot form a 2-way mesh over "
+            f"{jax.device_count()} device(s); import benchmarks.run/"
+            "serve_bench before jax or set XLA_FLAGS=--xla_force_host_"
+            "platform_device_count=4")
+    eng_t, reqs_t, m_t = _serve_trace(params_b, cfg_b, trace,
+                                      dataclasses.replace(bud_cfg, tp=2))
+    checks["budget_tp2_matches_tp1"] = all(
+        t_.generated == b_.generated for t_, b_ in zip(reqs_t, reqs_b))
+
+    budget_m = {
+        "uniform": m_u, "planned": m_b, "tp2": m_t,
+        "pressure_uniform": m_pu, "pressure_planned": m_pb,
+        "uniform_total_rank": uniform.total_rank,
+        "star_total_rank": star.total_rank,
+        "planned_energy": round(e_planned, 3),
+        "uniform_energy": round(e_uniform, 3),
+        "star_energy": round(budget_kept_energy(extras, star), 3),
+        "pool_bytes_uniform_kept": pb_uniform["kept"],
+        "pool_bytes_star_kept": pb_star["kept"],
+        "pool_bytes_star_allocated": pb_star["allocated"],
+        "pressure_pages_uniform": pages_u,
+        "pressure_pages_planned": pages_b,
+    }
+    for key, val in budget_m.items():
+        if isinstance(val, dict):
+            for kname, v in val.items():
+                rows.append((f"budget_{key}", kname, v))
+        else:
+            rows.append(("budget", key, val))
+    metrics["budget"] = budget_m
+
+
 def _kv_tokens_per_unpruned_token(cfg0, cfg) -> float:
     """How many tokens of cfg's (pruned-rank) cache fit in the HBM of
     one unpruned-rank token — bytes/token scales with r_qk + r_vo."""
@@ -765,11 +958,12 @@ def run(verbose: bool = True):
     cfg0 = get_config("musicgen-large").reduced()
     params0 = init_lm_params(cfg0, jax.random.PRNGKey(0))
 
-    # SERVE_BENCH_SCENARIO=chaos|adapter runs ONLY that scenario (the
-    # CI chaos-smoke job; focused local iteration on scenario 8).
-    # Unknown values fail loudly — a typo in CI must not silently run
-    # the whole module and pass.
-    standalone = {"chaos": _scenario_chaos, "adapter": _scenario_adapters}
+    # SERVE_BENCH_SCENARIO=chaos|adapter|budget runs ONLY that scenario
+    # (the CI chaos/budget smoke jobs; focused local iteration on
+    # scenarios 8-9).  Unknown values fail loudly — a typo in CI must
+    # not silently run the whole module and pass.
+    standalone = {"chaos": _scenario_chaos, "adapter": _scenario_adapters,
+                  "budget": _scenario_budget}
     only = os.environ.get("SERVE_BENCH_SCENARIO", "").strip().lower()
     if only and only not in standalone:
         raise ValueError(
@@ -1095,6 +1289,9 @@ def run(verbose: bool = True):
 
     # -- multi-tenant SV adapters (DESIGN.md §13) ----------------------
     _scenario_adapters(params0, cfg0, rows, checks, metrics)
+
+    # -- spectrum-planned rank budgets (DESIGN.md §14) -----------------
+    _scenario_budget(params0, cfg0, rows, checks, metrics)
 
     if verbose:
         print("case,metric,value")

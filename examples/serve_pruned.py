@@ -33,6 +33,14 @@ ACTUALLY used, e.g. ``interpret+shard_map(model=2)`` when the Pallas
 hot path compiled per shard; ``--kernel-impl`` overrides the dispatch
 (``ref | xla | pallas | interpret``).
 
+With ``--rank-budget F`` the demo plans a NON-UNIFORM prune
+(DESIGN.md §14): ``plan_rank_budget`` water-fills ``F`` of the model's
+total rank capacity across layers/heads by singular-value energy,
+prints every layer's kept per-head ranks and the analytic pool bytes
+(``rank_pool_bytes``: kept vs max-width-allocated), then serves the
+plan — ragged ranks as zero-padding plus the decode kernels' per-head
+rank clamp — and verifies each stream against its greedy reference.
+
 With ``--adapters N`` the demo also serves a MULTI-TENANT batch
 (DESIGN.md §13): one base model plus ``N`` registered SV adapters —
 per-tenant multiplicative scalings of the CLOVER singular values that
@@ -69,10 +77,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import AdapterRegistry, clover_decompose, clover_prune
+from repro.core import (AdapterRegistry, apply_rank_budget,
+                        clover_decompose, clover_prune, plan_rank_budget)
 from repro.models import init_lm_params
 from repro.serve import (Engine, EngineConfig, FaultPlan, Request,
-                         greedy_reference)
+                         greedy_reference, rank_pool_bytes)
 
 
 def main():
@@ -101,6 +110,10 @@ def main():
                     help="number of per-tenant SV adapters for the "
                          "multi-tenant demo (0 = skip it; id 0 is "
                          "always the identity/base tenant)")
+    ap.add_argument("--rank-budget", type=float, default=0.5,
+                    help="fraction of TOTAL rank capacity for the "
+                         "spectrum-planned non-uniform serving demo "
+                         "(DESIGN.md §14; 0 = skip it)")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="inject a deterministic FaultPlan with this "
                          "seed into the overload demo (omit = "
@@ -114,7 +127,7 @@ def main():
     args = ap.parse_args()
     cfg = get_config("musicgen-large").reduced()
     params = init_lm_params(cfg, jax.random.PRNGKey(0))
-    dparams, dcfg, _ = clover_decompose(params, cfg, peft=False)
+    dparams, dcfg, extras = clover_decompose(params, cfg, peft=False)
     pparams, pcfg = clover_prune(dparams, dcfg, qk_ratio=0.5, vo_ratio=0.5)
     print(f"serving {pcfg.name}: head_dim {cfg.head_dim_} -> "
           f"qk_rank {pcfg.clover.qk_rank}, vo_rank {pcfg.clover.vo_rank}")
@@ -154,6 +167,45 @@ def main():
           f"({ep.compiled_shapes()} compiled step shapes, "
           f"{ep.sched.preemptions} preemptions, "
           f"peak page util {ep.peak_page_util:.0%})")
+
+    # spectrum-planned rank budget (DESIGN.md §14): water-fill ONE
+    # global rank budget across layers/heads by singular-value energy,
+    # then serve the non-uniform plan — per-head ragged ranks ride as
+    # zero-padding plus the decode kernels' per-head rank clamp, so
+    # every stream still matches its greedy reference at ONE compiled
+    # shape per plan
+    if args.rank_budget > 0:
+        plan = plan_rank_budget(extras, dcfg, budget=args.rank_budget)
+        bparams, bcfg = apply_rank_budget(dparams, dcfg, plan)
+        print(f"rank budget {args.rank_budget:.0%}: kept "
+              f"{plan.total_rank} of {plan.budget} requested ranks, "
+              f"widths qk={plan.qk_width} vo={plan.vo_width}")
+        for j in range(len(bcfg.pattern)):
+            if not plan.qk_ranks[j]:
+                continue
+            qk_j, vo_j = plan.layer_ranks(j)
+            for b in range(qk_j.shape[0]):
+                print(f"  layer {j}.{b}: qk {qk_j[b].tolist()} "
+                      f"vo {vo_j[b].tolist()}")
+        pb = rank_pool_bytes(plan, page_tokens=8, n_pages=8)
+        print(f"  pool bytes: kept {pb['kept']} / allocated "
+              f"{pb['allocated']} "
+              f"({pb['kept'] / pb['allocated']:.0%} of max-width pool)")
+        eb = Engine(bparams, bcfg,
+                    EngineConfig(slots=4, max_len=96, prefill_chunk=8,
+                                 paged=True, page_tokens=8,
+                                 kernel_impl="interpret",
+                                 rank_budget=plan))
+        reqs_b = [Request(uid=r.uid, prompt=r.prompt,
+                          max_new_tokens=r.max_new_tokens)
+                  for r in reqs[:4]]
+        eb.run(reqs_b)
+        match = all(
+            r.generated == greedy_reference(bparams, bcfg, r.prompt,
+                                            r.max_new_tokens)
+            for r in reqs_b)
+        print(f"  budget-planned replay: match={match} "
+              f"({eb.compiled_shapes()} compiled step shapes)")
 
     # replay once more with self-speculative decoding: the rank-sliced
     # draft of the SAME weights proposes spec_k tokens per decode step,

@@ -4,7 +4,8 @@ from repro.core.decompose import (  # noqa: F401
 from repro.core.prune import (  # noqa: F401
     clover_prune, vanilla_prune, plan_ranks, draft_ranks, threshold_ratios,
     snap_rank, HeadPartition, head_rank_loads, rank_balanced_partition,
-    permute_attention_heads, mask_head_ranks)
+    permute_attention_heads, mask_head_ranks, RankBudget, plan_rank_budget,
+    apply_rank_budget, budget_kept_energy)
 from repro.core.peft import (  # noqa: F401
     PeftConfig, partition, combine, count_params, init_adapters,
     materialize, pissa_residual, merge_adapters, CLOVER_TRAIN_KEYS,

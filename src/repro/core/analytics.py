@@ -19,6 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.decompose import svd_lowrank_product
 
@@ -64,6 +65,29 @@ def energy_topk(spectrum: jnp.ndarray, k: int) -> jnp.ndarray:
     """Fraction of squared mass in the top-k entries (already sorted)."""
     sq = jnp.square(spectrum)
     return jnp.sum(sq[..., :k], -1) / jnp.maximum(jnp.sum(sq, -1), 1e-30)
+
+
+def energy_blocks(spectrum, multiple: int) -> np.ndarray:
+    """Squared singular mass per ``multiple``-wide rank block.
+
+    ``spectrum`` (..., d), sorted descending -> (..., ceil(d/multiple))
+    float64 block sums (a short final block zero-pads).  This is the
+    worth table the ``core.prune.plan_rank_budget`` water-filling greedy
+    allocates over (DESIGN.md §14): block ``i`` of a head is the energy
+    gained by growing that head's kept rank from ``i*multiple`` to
+    ``(i+1)*multiple``, and the descending sort makes the per-head
+    block energies monotone — greedy allocation always extends
+    prefixes.  Host numpy, not jnp: the planner runs at plan time, not
+    in a traced step."""
+    sq = np.square(np.asarray(spectrum, np.float64))
+    d = sq.shape[-1]
+    multiple = max(1, int(multiple))
+    n = -(-d // multiple)
+    pad = n * multiple - d
+    if pad:
+        sq = np.concatenate(
+            [sq, np.zeros(sq.shape[:-1] + (pad,), sq.dtype)], axis=-1)
+    return sq.reshape(sq.shape[:-1] + (n, multiple)).sum(-1)
 
 
 # ---------------------------------------------------------------------------

@@ -40,9 +40,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import ref as _ref
 from repro.kernels.clover_attention import flash_attention as _flash
-from repro.kernels.decode_attention import flash_decode as _decode
+from repro.kernels.decode_attention import (
+    flash_decode as _decode, flash_decode_ranked as _decode_ranked)
 from repro.kernels.paged_decode_attention import (
-    paged_flash_decode as _paged_decode)
+    paged_flash_decode as _paged_decode,
+    paged_flash_decode_ranked as _paged_decode_ranked)
 from repro.kernels.wkv6 import wkv6 as _wkv6
 
 IMPLS = ("ref", "xla", "pallas", "interpret")
@@ -86,6 +88,36 @@ def _decode_body(q, k, v, lengths, *, scale, block_t, interpret):
     vp = _pad_to(v, 1, bt)
     return _decode(q, kp, vp, lengths, scale=scale, block_t=bt,
                    interpret=interpret)
+
+
+def _decode_ranked_body(q, k, v, lengths, qk_ranks, vo_ranks, *,
+                        scale, block_t, rank_block, interpret):
+    # Rank-dim zero-padding to block multiples is exact under the
+    # mask_head_ranks convention (zeroed dims contribute exactly 0).
+    T, dq, dv = k.shape[1], q.shape[-1], v.shape[-1]
+    bt = min(block_t, max(8, T))
+    rb = min(rank_block, max(8, max(dq, dv)))
+    if scale is None:
+        scale = float(1.0 / (dq ** 0.5))
+    out = _decode_ranked(
+        _pad_to(q, -1, rb), _pad_to(_pad_to(k, 1, bt), -1, rb),
+        _pad_to(_pad_to(v, 1, bt), -1, rb), lengths, qk_ranks, vo_ranks,
+        scale=scale, block_t=bt, rank_block=rb, interpret=interpret)
+    return out[..., :dv]
+
+
+def _paged_decode_ranked_body(q, k_pool, v_pool, page_table, lengths,
+                              qk_ranks, vo_ranks, *, scale, rank_block,
+                              interpret):
+    dq, dv = q.shape[-1], v_pool.shape[-1]
+    rb = min(rank_block, max(8, max(dq, dv)))
+    if scale is None:
+        scale = float(1.0 / (dq ** 0.5))
+    out = _paged_decode_ranked(
+        _pad_to(q, -1, rb), _pad_to(k_pool, -1, rb),
+        _pad_to(v_pool, -1, rb), page_table, lengths, qk_ranks, vo_ranks,
+        scale=scale, rank_block=rb, interpret=interpret)
+    return out[..., :dv]
 
 
 # ---------------------------------------------------------------------------
@@ -165,17 +197,43 @@ class KernelDispatch:
 
     def decode_attention(self, q, k, v, lengths, *,
                          scale: Optional[float] = None,
-                         block_t: int = 256) -> jnp.ndarray:
+                         block_t: int = 256,
+                         qk_ranks: Optional[jnp.ndarray] = None,
+                         vo_ranks: Optional[jnp.ndarray] = None,
+                         rank_block: int = 128) -> jnp.ndarray:
         """Flash-decoding vs a (possibly CLOVER-rank) KV cache.
 
         q (B,H,dq), k (B,T,KV,dq), v (B,T,KV,dv), lengths (B,)
-        -> (B,H,dv).
+        -> (B,H,dv).  With ``qk_ranks``/``vo_ranks`` ((KV,) int32,
+        both or neither) the per-head rank-clamped kernel runs instead
+        (non-uniform ``RankBudget`` plans, DESIGN.md §14); under a
+        mesh the rank vectors shard along KV heads with the caches.
         """
+        ranked = qk_ranks is not None or vo_ranks is not None
         if not self.kernel_path:
-            return _ref.decode_attention_ref(q, k, v, lengths, scale=scale)
+            return _ref.decode_attention_ref(q, k, v, lengths, scale=scale,
+                                             qk_ranks=qk_ranks,
+                                             vo_ranks=vo_ranks)
+        b, m = self._axes(batch=q.shape[0], kv_heads=k.shape[2])
+        if ranked:
+            dq, dv = q.shape[-1], v.shape[-1]
+            qk_ranks = (jnp.full((k.shape[2],), dq, jnp.int32)
+                        if qk_ranks is None else qk_ranks.astype(jnp.int32))
+            vo_ranks = (jnp.full((k.shape[2],), dv, jnp.int32)
+                        if vo_ranks is None else vo_ranks.astype(jnp.int32))
+            body = functools.partial(_decode_ranked_body, scale=scale,
+                                     block_t=block_t, rank_block=rank_block,
+                                     interpret=self.interpret)
+            if b is None and m is None:
+                return body(q, k, v, lengths, qk_ranks, vo_ranks)
+            fn = self._shard(body,
+                             in_specs=(P(b, m, None), P(b, None, m, None),
+                                       P(b, None, m, None), P(b), P(m),
+                                       P(m)),
+                             out_specs=P(b, m, None))
+            return fn(q, k, v, lengths, qk_ranks, vo_ranks)
         body = functools.partial(_decode_body, scale=scale, block_t=block_t,
                                  interpret=self.interpret)
-        b, m = self._axes(batch=q.shape[0], kv_heads=k.shape[2])
         if b is None and m is None:
             return body(q, k, v, lengths)
         fn = self._shard(body,
@@ -186,7 +244,10 @@ class KernelDispatch:
 
     def paged_decode_attention(self, q, k_pool, v_pool, page_table,
                                lengths, *,
-                               scale: Optional[float] = None) -> jnp.ndarray:
+                               scale: Optional[float] = None,
+                               qk_ranks: Optional[jnp.ndarray] = None,
+                               vo_ranks: Optional[jnp.ndarray] = None,
+                               rank_block: int = 128) -> jnp.ndarray:
         """Flash-decoding vs a PAGED (possibly CLOVER-rank) KV cache.
 
         q (B,H,dq), k_pool (N,page_tokens,KV,dq), v_pool (N,page_tokens,
@@ -199,15 +260,40 @@ class KernelDispatch:
         only; their page-row axis is REPLICATED, so the host-global
         page ids in ``page_table`` are valid row indices on every
         shard — the scalar-prefetched table crosses the shard_map
-        boundary untranslated.
+        boundary untranslated.  With ``qk_ranks``/``vo_ranks`` ((KV,)
+        int32) the per-head rank-clamped kernel runs instead
+        (non-uniform ``RankBudget`` plans, DESIGN.md §14).
         """
+        ranked = qk_ranks is not None or vo_ranks is not None
         if not self.kernel_path:
             return _ref.paged_decode_attention_ref(q, k_pool, v_pool,
                                                    page_table, lengths,
-                                                   scale=scale)
+                                                   scale=scale,
+                                                   qk_ranks=qk_ranks,
+                                                   vo_ranks=vo_ranks)
+        b, m = self._axes(batch=q.shape[0], kv_heads=k_pool.shape[2])
+        if ranked:
+            dq, dv = q.shape[-1], v_pool.shape[-1]
+            KV = k_pool.shape[2]
+            qk_ranks = (jnp.full((KV,), dq, jnp.int32)
+                        if qk_ranks is None else qk_ranks.astype(jnp.int32))
+            vo_ranks = (jnp.full((KV,), dv, jnp.int32)
+                        if vo_ranks is None else vo_ranks.astype(jnp.int32))
+            body = functools.partial(_paged_decode_ranked_body, scale=scale,
+                                     rank_block=rank_block,
+                                     interpret=self.interpret)
+            if b is None and m is None:
+                return body(q, k_pool, v_pool, page_table, lengths,
+                            qk_ranks, vo_ranks)
+            fn = self._shard(body,
+                             in_specs=(P(b, m, None), P(None, None, m, None),
+                                       P(None, None, m, None), P(b, None),
+                                       P(b), P(m), P(m)),
+                             out_specs=P(b, m, None))
+            return fn(q, k_pool, v_pool, page_table, lengths, qk_ranks,
+                      vo_ranks)
         body = functools.partial(_paged_decode, scale=scale,
                                  interpret=self.interpret)
-        b, m = self._axes(batch=q.shape[0], kv_heads=k_pool.shape[2])
         if b is None and m is None:
             return body(q, k_pool, v_pool, page_table, lengths)
         fn = self._shard(body,
@@ -362,29 +448,43 @@ def clover_attention(q, k, v, *, causal: bool = True,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scale", "block_t", "impl"))
+    jax.jit, static_argnames=("scale", "block_t", "rank_block", "impl"))
 def decode_attention(q, k, v, lengths, *, scale: Optional[float] = None,
-                     block_t: int = 256, impl: str = "ref") -> jnp.ndarray:
+                     block_t: int = 256, qk_ranks=None, vo_ranks=None,
+                     rank_block: int = 128,
+                     impl: str = "ref") -> jnp.ndarray:
     """Flash-decoding vs a (possibly CLOVER-rank) KV cache.
 
     q (B,H,dq), k (B,T,KV,dq), v (B,T,KV,dv), lengths (B,) -> (B,H,dv).
+    qk_ranks / vo_ranks: optional (KV,) int32 per-head kept ranks
+    (non-uniform ``RankBudget`` plans, DESIGN.md §14).
     """
     return resolve(impl).decode_attention(q, k, v, lengths, scale=scale,
-                                          block_t=block_t)
+                                          block_t=block_t,
+                                          qk_ranks=qk_ranks,
+                                          vo_ranks=vo_ranks,
+                                          rank_block=rank_block)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "impl"))
+@functools.partial(jax.jit, static_argnames=("scale", "rank_block", "impl"))
 def paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
                            scale: Optional[float] = None,
+                           qk_ranks=None, vo_ranks=None,
+                           rank_block: int = 128,
                            impl: str = "ref") -> jnp.ndarray:
     """Flash-decoding vs a PAGED (possibly CLOVER-rank) KV cache.
 
     q (B,H,dq), k_pool (N,page_tokens,KV,dq), v_pool (N,page_tokens,KV,dv),
     page_table (B,n_p) int32, lengths (B,) -> (B,H,dv).
+    qk_ranks / vo_ranks: optional (KV,) int32 per-head kept ranks
+    (non-uniform ``RankBudget`` plans, DESIGN.md §14).
     """
     return resolve(impl).paged_decode_attention(q, k_pool, v_pool,
                                                 page_table, lengths,
-                                                scale=scale)
+                                                scale=scale,
+                                                qk_ranks=qk_ranks,
+                                                vo_ranks=vo_ranks,
+                                                rank_block=rank_block)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

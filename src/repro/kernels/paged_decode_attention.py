@@ -91,6 +91,159 @@ def _paged_decode_kernel(len_ref, tab_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
+def _paged_decode_ranked_kernel(len_ref, tab_ref, rq_ref, rv_ref, q_ref,
+                                k_ref, v_ref, o_ref, m_scr, l_scr, p_scr,
+                                acc_scr, *, scale: float, page_tokens: int,
+                                n_p: int, rb: int, n_rq: int, n_rv: int):
+    """Paged flash-decoding with a per-head rank clamp (DESIGN.md §14).
+
+    Same phase schedule as the dense ``_decode_ranked_kernel``: the
+    innermost grid axis walks rank blocks — kept Q-K blocks accumulate
+    the logits tile in ``p_scr``, the ``ir == n_rq`` step runs the
+    online-softmax update, kept V-O blocks accumulate their context
+    slice — with the K/V index maps composing BOTH clamps: the page
+    axis through ``tab[b, min(ip, n_used-1)]`` and the rank axis
+    through the scalar-prefetched per-head kept ranks.
+    """
+    b = pl.program_id(0)
+    kv = pl.program_id(1)
+    ip = pl.program_id(2)
+    ir = pl.program_id(3)
+
+    @pl.when((ip == 0) & (ir == 0))
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ir == 0)
+    def _zero_logits():
+        p_scr[...] = jnp.zeros_like(p_scr)
+
+    length = len_ref[b]
+    to = ip * page_tokens
+    live = to < length
+
+    @pl.when(live & (ir < n_rq) & (ir * rb < rq_ref[kv]))
+    def _k_phase():
+        q = q_ref[0]                                       # (G, rb)
+        k = k_ref[0, :, 0, :]                              # (pt, rb)
+        p_scr[...] += jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(live & (ir == n_rq))
+    def _softmax():
+        logits = p_scr[...] * scale
+        tj = to + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(tj < length, logits, NEG_INF)
+        m_prev = m_scr[...]                                # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, 1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, 1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha[None]
+        m_scr[...] = m_new
+        p_scr[...] = p
+
+    @pl.when(live & (ir >= n_rq) & ((ir - n_rq) * rb < rv_ref[kv]))
+    def _v_phase():
+        v = v_ref[0, :, 0, :]                              # (pt, rb)
+        p = p_scr[...]                                     # (G, pt)
+        iv = ir - n_rq
+        upd = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[pl.ds(iv, 1)] = acc_scr[pl.ds(iv, 1)] + upd[None]
+
+    @pl.when((ip == n_p - 1) & (ir == n_rq + n_rv - 1))
+    def _fin():
+        denom = jnp.maximum(l_scr[...], 1e-30)             # (G, 1)
+        acc = acc_scr[...]                                 # (n_rv, G, rb)
+        out = acc.transpose(1, 0, 2).reshape(acc.shape[1], n_rv * rb)
+        o_ref[0] = (out / denom).astype(o_ref.dtype)
+
+
+def paged_flash_decode_ranked(q: jnp.ndarray, k_pool: jnp.ndarray,
+                              v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                              lengths: jnp.ndarray, qk_ranks: jnp.ndarray,
+                              vo_ranks: jnp.ndarray, *,
+                              scale: Optional[float] = None,
+                              rank_block: int = 128,
+                              interpret: bool = False) -> jnp.ndarray:
+    """``paged_flash_decode`` with a scalar-prefetched PER-HEAD rank
+    clamp for non-uniform ``RankBudget`` plans (DESIGN.md §14).
+
+    qk_ranks / vo_ranks: (KV,) int32 kept ranks per kv head (values
+    clamped to the pool widths).  dq/dv must be multiples of
+    ``rank_block`` (ops.py pads; the ``mask_head_ranks`` zero-pad
+    convention makes padding exact).  Rank blocks at or past a head's
+    kept rank revisit the resident block (no DMA) and ``pl.when``
+    skips their compute, so a pruned head's rank tail is free — the
+    rank analogue of the post-rollback length clamp below.
+    """
+    B, H, dq = q.shape
+    pt, KV = k_pool.shape[1], k_pool.shape[2]
+    dv = v_pool.shape[-1]
+    G = H // KV
+    rb = rank_block
+    n_p = page_table.shape[1]
+    assert dq % rb == 0 and dv % rb == 0, (dq, dv, rb)
+    if scale is None:
+        scale = float(1.0 / (dq ** 0.5))
+    n_rq, n_rv = dq // rb, dv // rb
+
+    kernel = functools.partial(
+        _paged_decode_ranked_kernel, scale=scale, page_tokens=pt,
+        n_p=n_p, rb=rb, n_rq=n_rq, n_rv=n_rv)
+
+    def _nblk(r):
+        return jnp.maximum((r + rb - 1) // rb, 1)
+
+    def _q_block(b, kv, ip, ir, lens, tab, rq, rv):
+        return (b, kv, jnp.minimum(ir, _nblk(rq[kv]) - 1))
+
+    def _k_block(b, kv, ip, ir, lens, tab, rq, rv):
+        n_used = jnp.maximum((lens[b] + pt - 1) // pt, 1)
+        return (tab[b, jnp.minimum(ip, n_used - 1)], 0, kv,
+                jnp.minimum(ir, _nblk(rq[kv]) - 1))
+
+    def _v_block(b, kv, ip, ir, lens, tab, rq, rv):
+        n_used = jnp.maximum((lens[b] + pt - 1) // pt, 1)
+        return (tab[b, jnp.minimum(ip, n_used - 1)], 0, kv,
+                jnp.clip(ir - n_rq, 0, _nblk(rv[kv]) - 1))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, KV, n_p, n_rq + n_rv),
+        in_specs=[
+            pl.BlockSpec((1, G, rb), _q_block),
+            pl.BlockSpec((1, pt, 1, rb), _k_block),
+            pl.BlockSpec((1, pt, 1, rb), _v_block),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, G, dv), lambda b, kv, ip, ir, lens, tab, rq, rv: (b, kv, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, pt), jnp.float32),
+            pltpu.VMEM((n_rv, G, rb), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, dv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32),
+      jnp.minimum(qk_ranks, dq).astype(jnp.int32),
+      jnp.minimum(vo_ranks, dv).astype(jnp.int32), q, k_pool, v_pool)
+
+
 def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
                        v_pool: jnp.ndarray, page_table: jnp.ndarray,
                        lengths: jnp.ndarray, *,

@@ -37,13 +37,36 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(B, S, H, v.shape[-1])
 
 
+def _rank_mask(x: jnp.ndarray, ranks: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Zero dims >= ranks[kv] of a (..., KV, d) array — the exact-
+    truncation oracle semantics of a non-uniform per-head rank plan
+    (DESIGN.md §14).  The rank-clamped kernels skip whole
+    ``rank_block``-wide blocks instead; both agree whenever every rank
+    is a block multiple OR the data already obeys the
+    ``mask_head_ranks`` zero-pad convention (zeroed dims contribute
+    exactly 0 either way)."""
+    if ranks is None:
+        return x
+    d = x.shape[-1]
+    keep = jnp.arange(d)[None, :] < jnp.minimum(ranks, d)[:, None]  # (KV, d)
+    return jnp.where(keep, x, jnp.zeros((), x.dtype))
+
+
 def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                          lengths: jnp.ndarray, *,
-                         scale: Optional[float] = None) -> jnp.ndarray:
+                         scale: Optional[float] = None,
+                         qk_ranks: Optional[jnp.ndarray] = None,
+                         vo_ranks: Optional[jnp.ndarray] = None,
+                         ) -> jnp.ndarray:
     """Single-token flash-decoding oracle.
 
     q: (B, H, dq);  k: (B, T, KV, dq);  v: (B, T, KV, dv);
     lengths: (B,) int32 — positions >= length are masked.
+    qk_ranks / vo_ranks: optional (KV,) int32 per-head kept ranks
+    (non-uniform ``RankBudget`` plans, DESIGN.md §14): K dims >=
+    qk_ranks[kv] and V dims >= vo_ranks[kv] are zeroed, which is
+    exactly rank truncation (a zeroed K dim kills its logit term; a
+    zeroed V dim zeros that output dim).
     -> (B, H, dv)
     """
     B, H, dq = q.shape
@@ -51,6 +74,8 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     G = H // KV
     if scale is None:
         scale = 1.0 / jnp.sqrt(dq).astype(jnp.float32)
+    k = _rank_mask(k, qk_ranks)
+    v = _rank_mask(v, vo_ranks)
     qg = q.reshape(B, KV, G, dq)
     logits = jnp.einsum("bkgq,btkq->bkgt", qg, k).astype(jnp.float32) * scale
     mask = jnp.arange(T)[None, :] < lengths[:, None]          # (B, T)
@@ -94,7 +119,10 @@ def paged_decode_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
                                v_pool: jnp.ndarray,
                                page_table: jnp.ndarray,
                                lengths: jnp.ndarray, *,
-                               scale: Optional[float] = None) -> jnp.ndarray:
+                               scale: Optional[float] = None,
+                               qk_ranks: Optional[jnp.ndarray] = None,
+                               vo_ranks: Optional[jnp.ndarray] = None,
+                               ) -> jnp.ndarray:
     """Paged flash-decoding oracle: gather each slot's pages into a
     dense per-slot cache through the page-table indirection, then defer
     to the dense oracle (lengths mask everything past each slot's valid
@@ -102,13 +130,15 @@ def paged_decode_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
 
     q: (B, H, dq);  k_pool: (N, page_tokens, KV, dq);
     v_pool: (N, page_tokens, KV, dv);  page_table: (B, n_p) int32;
-    lengths: (B,) int32.  -> (B, H, dv)
+    lengths: (B,) int32;  qk_ranks / vo_ranks: optional (KV,) int32
+    per-head kept ranks (see ``decode_attention_ref``).  -> (B, H, dv)
     """
     B, n_p = page_table.shape
     pt = k_pool.shape[1]
     k = k_pool[page_table].reshape(B, n_p * pt, *k_pool.shape[2:])
     v = v_pool[page_table].reshape(B, n_p * pt, *v_pool.shape[2:])
-    return decode_attention_ref(q, k, v, lengths, scale=scale)
+    return decode_attention_ref(q, k, v, lengths, scale=scale,
+                                qk_ranks=qk_ranks, vo_ranks=vo_ranks)
 
 
 def page_copy_ref(pool: jnp.ndarray, src: jnp.ndarray,

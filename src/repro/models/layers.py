@@ -309,6 +309,25 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
     dispatch = kernel_dispatch(attn_impl)
     use_pallas = dispatch is not None and cfg.attn_logit_softcap == 0
 
+    # Non-uniform RankBudget plans (DESIGN.md §14): apply_rank_budget
+    # leaves (n_blocks, KV) int32 kept-rank tables in the stacked attn
+    # params; the transformer's lax.scan delivers this layer's (KV,)
+    # rows here.  The weights are already zero-padded past each head's
+    # kept rank (mask_head_ranks), so the einsum paths need nothing —
+    # the vectors only feed the decode kernels' per-head rank clamp,
+    # which turns the semantic zeros into skipped DMA + compute.
+    rank_qk = params.get("rank_qk")
+    rank_vo = params.get("rank_vo")
+    rank_kw = {}
+    if use_pallas and (rank_qk is not None or rank_vo is not None):
+        rank_kw = {
+            "qk_ranks": (None if rank_qk is None
+                         else jnp.minimum(rank_qk, dq).astype(jnp.int32)),
+            "vo_ranks": (None if rank_vo is None
+                         else jnp.minimum(rank_vo, dv).astype(jnp.int32)),
+            "rank_block": max(8, cfg.clover.rank_multiple),
+        }
+
     new_cache = None
     if kv_cache is not None and page_table is not None:
         # Paged cache: scatter the window through the page table into
@@ -350,7 +369,8 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
             ctx = dispatch.paged_decode_attention(
                 q[:, 0], ck[..., :dq].astype(x.dtype),
                 cv[..., :dv].astype(x.dtype),
-                page_table, lengths, scale=scale)[:, None]  # (B,1,H,dv)
+                page_table, lengths, scale=scale,
+                **rank_kw)[:, None]                         # (B,1,H,dv)
             return _vo_out(ctx), new_cache
         # Chunked-prefill reads gather each slot's pages into a dense
         # (B, P*PT, KV, r) view and reuse the masked path below; writes
@@ -388,7 +408,7 @@ def attention(params: Params, cfg, x: jnp.ndarray, *,
             ctx = dispatch.decode_attention(
                 q[:, 0], ck[..., :dq].astype(x.dtype),
                 cv[..., :dv].astype(x.dtype), lengths,
-                scale=scale)[:, None]                          # (B,1,H,dv)
+                scale=scale, **rank_kw)[:, None]               # (B,1,H,dv)
             return _vo_out(ctx), new_cache
         k, v = ck[..., :dq].astype(x.dtype), cv[..., :dv].astype(x.dtype)
         if not per_slot and S > ATTN_CHUNK:

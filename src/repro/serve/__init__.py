@@ -25,7 +25,8 @@ from repro.serve.engine import Engine, greedy_reference  # noqa: F401
 from repro.serve.executor import (  # noqa: F401
     Executor, LocalExecutor, ShardedExecutor)
 from repro.serve.faults import FaultError, FaultPlan  # noqa: F401
-from repro.serve.memory import PageAllocator, PrefixCache  # noqa: F401
+from repro.serve.memory import (  # noqa: F401
+    PageAllocator, PrefixCache, rank_pool_bytes)
 from repro.serve.metrics import ServeMetrics  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     CANCELLED, DONE, QUEUED, RUNNING, SHED, TERMINAL, TIMED_OUT,

@@ -8,6 +8,9 @@ Lives in its own module so ``memory`` / ``scheduler`` / ``executor`` /
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.prune import RankBudget
 
 
 @dataclass(frozen=True)
@@ -91,6 +94,17 @@ class EngineConfig:
     # buffer is consumed).  Fault injection therefore requires
     # donate_state=False on donating platforms; CPU never donates.
     donate_state: bool = True
+    # -- non-uniform rank budgets (DESIGN.md §14) ---------------------
+    # A spectrum-planned ``core.prune.RankBudget`` describing the
+    # engine's non-uniform per-layer/per-head kept ranks.  The engine
+    # does NOT apply it (callers run ``apply_rank_budget`` on the
+    # weights first — the engine validates the plan's global max widths
+    # against cfg.qk_dim/vo_dim); holding it here (a) folds
+    # ``plan.salt()`` into the prefix-trie salt so caches never cross
+    # budgets, and (b) re-plans the tp head partition from
+    # ``plan.head_loads()`` so shards balance PLANNED rank work, not
+    # the uniform maximum.  None -> uniform ranks, prior behavior.
+    rank_budget: Optional[RankBudget] = None
 
     def __post_init__(self):
         if self.kernel_impl not in ("",) + self._IMPLS:

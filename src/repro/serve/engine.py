@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.peft import AdapterRegistry
+from repro.core.prune import rank_balanced_partition
 from repro.models import transformer as T
 from repro.serve.config import EngineConfig
 from repro.serve.executor import (Executor, LocalExecutor, ShardedExecutor,
@@ -109,6 +110,16 @@ class Engine:
         # impossible (impl, parallelism, arch) combos fail HERE, loudly,
         # before any executor state exists or anything compiles
         validate_kernel_parallelism(cfg, ecfg.tp)
+        if ecfg.rank_budget is not None:
+            plan = ecfg.rank_budget
+            if (plan.qk_width != cfg.qk_dim
+                    or plan.vo_width != cfg.vo_dim):
+                raise ValueError(
+                    f"EngineConfig.rank_budget widths ({plan.qk_width}, "
+                    f"{plan.vo_width}) do not match cfg ({cfg.qk_dim}, "
+                    f"{cfg.vo_dim}): run core.prune.apply_rank_budget on "
+                    "the weights first and serve its returned cfg — the "
+                    "engine validates plans, it does not apply them")
         self.cfg = cfg
         self.ecfg = ecfg
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -131,11 +142,21 @@ class Engine:
         self.adapters = adapters
         if executor is None:
             bank = adapters.bank() if adapters is not None else None
-            executor = (ShardedExecutor(params, cfg, ecfg,
-                                        adapter_bank=bank)
-                        if ecfg.tp > 1
-                        else LocalExecutor(params, cfg, ecfg,
-                                           adapter_bank=bank))
+            if ecfg.tp > 1:
+                # re-plan the head partition per rank budget: shards
+                # should balance PLANNED per-head rank work, not the
+                # uniform maximum (DESIGN.md §14)
+                part = None
+                if (ecfg.rank_budget is not None
+                        and cfg.n_kv_heads % ecfg.tp == 0):
+                    part = rank_balanced_partition(
+                        ecfg.rank_budget.head_loads(), ecfg.tp,
+                        group=cfg.q_per_kv)
+                executor = ShardedExecutor(params, cfg, ecfg, plan=part,
+                                           adapter_bank=bank)
+            else:
+                executor = LocalExecutor(params, cfg, ecfg,
+                                         adapter_bank=bank)
         elif adapters is not None:
             raise ValueError(
                 "pass adapters OR a pre-built executor, not both: the "
@@ -165,6 +186,11 @@ class Engine:
             salt = (cfg.name, cfg.qk_dim, cfg.vo_dim, cfg.clover.enabled,
                     cfg.clover.qk_rank, cfg.clover.vo_rank,
                     ecfg.page_tokens) + tuple(executor.plan_salt())
+            if ecfg.rank_budget is not None:
+                # non-uniform budgets zero different rank tails per
+                # head: pages written under one plan are garbage under
+                # another even at identical global widths
+                salt = salt + tuple(ecfg.rank_budget.salt())
             self.prefix = PrefixCache(self.alloc, salt=salt)
             if ecfg.host_pages > 0:
                 # hierarchical KV (DESIGN.md §12): trie eviction spills

@@ -479,3 +479,41 @@ class PrefixCache:
             self.evicted += 1
             freed += 1
         return freed
+
+
+def rank_pool_bytes(plan, *, page_tokens: int, n_pages: int,
+                    dtype_bytes: int = 4) -> Dict[str, Any]:
+    """Analytic per-layer KV page-pool accounting under a non-uniform
+    ``core.prune.RankBudget`` (DESIGN.md §14).
+
+    The PHYSICAL pools are sized by the plan's global max widths — the
+    transformer lax.scans a stacked state pytree, so every layer's pool
+    shares one shape ``(n_pages + 1, page_tokens, KV, max_rank)``.
+    This helper reports what those bytes BUY per layer: the bytes the
+    kept ranks actually use (``kept``), the uniform-max footprint the
+    stack allocates (``allocated``), and the layerwise breakdown — the
+    quantity serve_bench scenario 9 gates and the number a non-stacked
+    (per-layer-buffer) deployment would allocate outright.
+
+    plan: ``RankBudget``;  page_tokens / n_pages: pool geometry (the
+    spare garbage row is counted, matching the real pools);
+    dtype_bytes: cache element width (4 = f32 pools).
+    Returns {"per_layer": [((j, b), kept_bytes), ...] in stack order,
+    "kept": total kept bytes, "allocated": uniform-max total bytes}.
+    """
+    rows = (n_pages + 1) * page_tokens
+    per_layer = []
+    kept = 0
+    allocated = 0
+    dq, dv = plan.qk_width, plan.vo_width
+    for j, qk_tab in enumerate(plan.qk_ranks):
+        vo_tab = plan.vo_ranks[j]
+        for b, qk_heads in enumerate(qk_tab):
+            vo_heads = vo_tab[b]
+            if not qk_heads and not vo_heads:
+                continue                      # non-attention position
+            layer = rows * dtype_bytes * (sum(qk_heads) + sum(vo_heads))
+            per_layer.append(((j, b), layer))
+            kept += layer
+            allocated += rows * dtype_bytes * (dq + dv) * len(qk_heads)
+    return {"per_layer": per_layer, "kept": kept, "allocated": allocated}

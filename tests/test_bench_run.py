@@ -83,12 +83,15 @@ def test_serve_bench_raises_when_tp_mesh_impossible(tmp_path):
 def test_chained_modules_keep_tp_keys(tmp_path):
     """The real regression: kernel_bench then serve_bench in ONE driver
     process must still produce the tp2 baseline keys (scenario filter
-    keeps the runtime bounded; the adapter scenario has tp cells)."""
+    keeps the runtime bounded; the adapter scenario has tp cells).
+    BENCH_OUTPUT_DIR keeps this run off the committed repo-root
+    trajectory files."""
     res = subprocess.run(
         [sys.executable, "-m", "benchmarks.run",
          "--only", "kernel_bench", "--only", "serve_bench"],
-        env=_env(SERVE_BENCH_SCENARIO="adapter"), cwd=tmp_path,
-        capture_output=True, text=True, timeout=1200)
+        env=_env(SERVE_BENCH_SCENARIO="adapter",
+                 BENCH_OUTPUT_DIR=str(tmp_path)),
+        cwd=tmp_path, capture_output=True, text=True, timeout=1200)
     assert res.returncode == 0, (res.stdout[-2000:], res.stderr[-2000:])
     data = json.loads((tmp_path / "BENCH_serve.json").read_text())
     tp2 = {r[0] for r in data["rows"]
